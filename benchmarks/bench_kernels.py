@@ -1,0 +1,43 @@
+"""Kernel micro-benchmarks: fused Pallas graph-regularizer and RBF-affinity
+vs their jnp oracles (interpret mode on CPU — correctness-representative,
+not TPU timings), plus the jnp oracle timings that the trainer uses on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.graph_reg import graph_reg_pairwise_pallas
+from repro.kernels.pairwise import rbf_affinity_pallas
+
+from .common import timeit
+
+
+def run(quick: bool = True) -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for B, C in [(512, 39), (1024, 39)] + ([] if quick else [(2048, 39)]):
+        logp = jax.nn.log_softmax(
+            jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+        W = jnp.asarray(np.abs(rng.normal(size=(B, B)))
+                        * (rng.random((B, B)) < 0.05), jnp.float32)
+        f_ref = jax.jit(ref.graph_reg_pairwise_ref)
+        t_ref = timeit(lambda: f_ref(logp, W).block_until_ready())
+        rows.append(f"kernel/graph_reg_ref_B{B},{t_ref:.1f},jnp_oracle")
+        if quick:
+            t_pal = timeit(lambda: graph_reg_pairwise_pallas(
+                logp, W, interpret=True).block_until_ready(), repeats=2)
+            rows.append(
+                f"kernel/graph_reg_pallas_B{B},{t_pal:.1f},interpret_mode")
+    for N, D in [(1024, 351)]:
+        x = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+        f_ref = jax.jit(lambda a: ref.rbf_affinity_ref(a, a, 2.0))
+        t_ref = timeit(lambda: f_ref(x).block_until_ready())
+        rows.append(f"kernel/rbf_ref_N{N},{t_ref:.1f},jnp_oracle")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

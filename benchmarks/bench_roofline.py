@@ -1,0 +1,77 @@
+"""Roofline table from the dry-run sweep (deliverable g).
+
+Reads experiments/dryrun/*.json and prints, per (arch × shape × mesh ×
+strategy): the three roofline terms, the dominant bottleneck, and the
+useful-FLOPs ratio.  ``benchmarks.run`` embeds the single-pod fsdp_tp table.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["qwen1.5-0.5b", "xlstm-125m", "qwen2-1.5b", "phi4-mini-3.8b",
+              "musicgen-large", "yi-9b", "mixtral-8x7b",
+              "llama-3.2-vision-90b", "jamba-1.5-large-398b",
+              "kimi-k2-1t-a32b"]
+
+
+def load(out_dir: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for f in glob.glob(os.path.join(out_dir, "*.json")):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table(recs: list[dict], *, mesh: str = "single_pod_16x16",
+          strategy: str = "fsdp_tp") -> str:
+    rows = [r for r in recs if r.get("status") == "ok"
+            and r["mesh"] == mesh and r["strategy"] == strategy]
+    rows.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]),
+                             SHAPE_ORDER.index(r["shape"])))
+    out = [f"# mesh={mesh} strategy={strategy}",
+           f"{'arch':<22}{'shape':<13}{'compute_s':>11}{'memory_s':>11}"
+           f"{'collect_s':>11}  {'dominant':<13}{'useful':>7}{'HBM/chip':>10}"]
+    for r in rows:
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        mem = r.get("memory_analysis", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0))
+        out.append(
+            f"{r['arch']:<22}{r['shape']:<13}"
+            f"{t['compute_s']:>11.4f}{t['memory_s']:>11.4f}"
+            f"{t['collective_s']:>11.4f}  {t['dominant'][:-2]:<13}"
+            f"{(ratio if ratio else 0):>7.2f}{hbm/1e9:>9.1f}G")
+    return "\n".join(out)
+
+
+def csv_rows(recs: list[dict]) -> list[str]:
+    """``name,us_per_call,derived`` rows for benchmarks.run: us_per_call is
+    the dominant roofline term (the modeled step time)."""
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        t = r["roofline"]
+        dom = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        name = (f"roofline/{r['arch']}/{r['shape']}/"
+                f"{r['mesh'].split('_')[0]}/{r['strategy']}")
+        rows.append(f"{name},{dom * 1e6:.1f},dominant={t['dominant']}")
+    return rows
+
+
+def main() -> None:
+    recs = load()
+    print(table(recs))
+    print()
+    print(table(recs, mesh="multi_pod_2x16x16"))
+    print()
+    print(table(recs, strategy="dp"))
+
+
+if __name__ == "__main__":
+    main()

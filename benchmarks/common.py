@@ -1,0 +1,38 @@
+"""Shared benchmark fixtures: the synthetic TIMIT-like corpus + graph."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import numpy as np
+
+from repro.core import build_affinity_graph, plan_meta_batches
+from repro.data import drop_labels, make_corpus
+
+
+@functools.lru_cache(maxsize=2)
+def corpus_and_graph(n: int = 6000, n_classes: int = 20, batch: int = 512,
+                     seed: int = 0):
+    """Train/test split sharing one generative manifold (paper §3 protocol)."""
+    full = make_corpus(int(n * 1.25), n_classes=n_classes, input_dim=128,
+                       manifold_dim=10, seed=seed)
+    train = dataclasses.replace(
+        full, X=full.X[:n], y=full.y[:n], label_mask=full.label_mask[:n])
+    test = (full.X[n:], full.y[n:])
+    graph = build_affinity_graph(train.X, k=10)
+    plan = plan_meta_batches(graph, batch_size=batch, n_classes=n_classes,
+                             seed=seed)
+    return train, test, graph, plan
+
+
+def timeit(fn, *, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))

@@ -1,0 +1,68 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs the paper's full
+label-ratio grid and worker counts; default is the quick profile.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: quality,label,ablation,"
+                         "parallel,kernels,roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    sections = []
+    if only is None or "quality" in only:
+        from benchmarks import bench_batch_quality
+        sections.append(("batch_quality(fig1c,2a,2b)",
+                         lambda: bench_batch_quality.run(quick)))
+    if only is None or "label" in only:
+        from benchmarks import bench_label_ratio
+        sections.append(("label_ratio(fig3a)",
+                         lambda: bench_label_ratio.run(quick)))
+    if only is None or "ablation" in only:
+        from benchmarks import bench_batching_ablation
+        sections.append(("batching_ablation(§2)",
+                         lambda: bench_batching_ablation.run(quick)))
+    if only is None or "parallel" in only:
+        from benchmarks import bench_parallel
+        sections.append(("parallel(fig3b,3c)",
+                         lambda: bench_parallel.run(quick)))
+    if only is None or "kernels" in only:
+        from benchmarks import bench_kernels
+        sections.append(("kernels", lambda: bench_kernels.run(quick)))
+    if only is None or "roofline" in only:
+        from benchmarks import bench_roofline
+
+        def roofline_rows():
+            recs = bench_roofline.load()
+            return bench_roofline.csv_rows(
+                [r for r in recs if r["mesh"] == "single_pod_16x16"
+                 and r["strategy"] == "fsdp_tp"])
+        sections.append(("roofline(dry-run)", roofline_rows))
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name, fn in sections:
+        print(f"# --- {name} ---")
+        try:
+            for row in fn():
+                print(row)
+        except Exception:  # noqa: BLE001
+            ok = False
+            print(f"# SECTION FAILED: {name}", file=sys.stderr)
+            traceback.print_exc()
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: graph-regularized semi-supervised training, end to end.
+
+Builds the synthetic TIMIT-like corpus, the k-NN affinity graph, the
+partitioned meta-batches, and trains the paper's DNN with the Eq.-3
+objective at 2% labels — comparing against the fully-supervised baseline.
+
+    PYTHONPATH=src python examples/quickstart.py [--epochs 10]
+"""
+import argparse
+import dataclasses
+
+from repro.core import SSLHyper, build_affinity_graph, plan_meta_batches
+from repro.data import MetaBatchPipeline, drop_labels, make_corpus
+from repro.models.dnn import DNNConfig
+from repro.train import train_dnn_ssl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--label-ratio", type=float, default=0.02)
+    ap.add_argument("--gamma", type=float, default=1.0)
+    args = ap.parse_args()
+
+    print("1) synthesizing corpus + affinity graph (k=10, RBF weights)…")
+    full = make_corpus(int(args.n * 1.25), n_classes=16, input_dim=128,
+                       manifold_dim=10, seed=0)
+    corpus = dataclasses.replace(
+        full, X=full.X[: args.n], y=full.y[: args.n],
+        label_mask=full.label_mask[: args.n])
+    test = (full.X[args.n:], full.y[args.n:])
+    labeled = drop_labels(corpus, args.label_ratio, seed=1)
+    graph = build_affinity_graph(corpus.X, k=10)
+    print(f"   {graph.n_nodes} nodes, {graph.n_edges} edges, "
+          f"{int(labeled.label_mask.sum())} labeled "
+          f"({100 * labeled.label_ratio():.1f}%)")
+
+    print("2) partitioning graph into mini-blocks + synthesizing meta-batches…")
+    plan = plan_meta_batches(graph, batch_size=512, n_classes=16, seed=0)
+    print(f"   {plan.mini_block_labels.max() + 1} mini-blocks → "
+          f"{plan.n_meta} meta-batches")
+
+    cfg = DNNConfig(input_dim=128, hidden_dim=512, n_hidden=3, n_classes=16,
+                    dropout=0.0)
+    pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=1, seed=0)
+    print("3) training SSL (γ=%.2f) vs fully-supervised…" % args.gamma)
+    for name, hyper in [("ssl", SSLHyper(args.gamma, 1e-4, 1e-5)),
+                        ("supervised", SSLHyper(0.0, 0.0, 1e-5))]:
+        res = train_dnn_ssl(pipe.epoch, cfg=cfg, hyper=hyper,
+                            n_epochs=args.epochs, dropout=0.0, base_lr=1e-2,
+                            eval_data=test, seed=0)
+        accs = [h["eval/acc"] for h in res.history]
+        print(f"   {name:<11} acc by epoch: "
+              + " ".join(f"{a:.3f}" for a in accs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Batched serving demo: prefill a batch of prompts, then decode with the
+per-layer cache machinery (full KV / ring KV / SSM state) and sampling.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b --steps 24
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import transformer as tf
+from repro.serve.decode import serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()   # CPU-sized variant of the family
+    print(f"serving {cfg.name} ({cfg.param_count()/1e6:.1f}M params, "
+          f"pattern={cfg.block_pattern})")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+
+    t0 = time.time()
+    _, cache = tf.prefill(params, cfg, prompts,
+                          cache_len=args.prompt_len + args.steps)
+    print(f"prefill: batch={args.batch} len={args.prompt_len} "
+          f"in {time.time()-t0:.2f}s")
+
+    step = jax.jit(lambda c, t, p, k: serve_step(
+        params, cfg, c, t, p, k, temperature=args.temperature))
+    cur = prompts[:, -1:]
+    toks = []
+    t0 = time.time()
+    for s in range(args.steps):
+        key, sub = jax.random.split(key)
+        pos = jnp.full((args.batch,), args.prompt_len + s - 1, jnp.int32)
+        cur, cache = step(cache, cur, pos, sub)
+        toks.append(cur)
+    dt = time.time() - t0
+    out = jnp.concatenate(toks, axis=1)
+    print(f"decoded {args.steps} tokens/seq in {dt:.2f}s "
+          f"({args.batch*args.steps/dt:.1f} tok/s)")
+    for b in range(args.batch):
+        print(f"  seq{b}: {out[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Meta-batch synthesis and stochastic neighbour regularization (paper §2).
+
+Implements the heuristic of §2.1 verbatim:
+
+  1. Given N points, batch size B (memory constraint) and M classes,
+     partition the affinity graph into ``N*M/B`` mini-blocks of ~``B/M``
+     nodes each (balanced min edge-cut).
+  2. Each meta-batch = M mini-blocks drawn at random (without replacement
+     within an epoch) → size ~B, entropy ≈ global label entropy, and
+     ``E[C_meta] >= E[C_mini]`` with ``Var[C_meta] = Var[C_mini]/K``.
+
+and §2.2: the induced meta-batch graph ``G_M`` with edge weight
+``|C_ij|`` (# affinity edges between members of meta-batches i and j), from
+which a neighbour meta-batch is drawn with probability
+``p_ij = |C_ij| / sum_j |C_ij|`` (Eq. 6) each step; the loss is computed on
+the concatenated batch ``[M_r, M_s]`` (§2.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import scipy.sparse as sp
+
+from .affinity import AffinityGraph
+from .partition import PartitionResult, partition_graph
+
+__all__ = ["MetaBatchPlan", "build_mini_blocks", "synthesize_meta_batches",
+           "batch_graph", "NeighborSampler", "concat_batch_indices"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MetaBatchPlan:
+    """Static preprocessing output consumed by the training loop."""
+
+    mini_block_labels: np.ndarray          # mini-block id per node
+    meta_batches: list[np.ndarray]         # node indices per meta-batch
+    meta_of_block: np.ndarray              # meta-batch id per mini-block
+    batch_edges: sp.csr_matrix             # |C_ij| weights of G_M (Eq. 6)
+    batch_size: int
+    n_classes: int
+
+    @property
+    def n_meta(self) -> int:
+        return len(self.meta_batches)
+
+
+def build_mini_blocks(
+    graph: AffinityGraph,
+    batch_size: int,
+    n_classes: int,
+    *,
+    tol: float = 0.15,
+    seed: int = 0,
+) -> PartitionResult:
+    """Step 1: partition into N*M/B balanced mini-blocks of ~B/M nodes."""
+    n = graph.n_nodes
+    n_blocks = max(1, int(round(n * n_classes / batch_size)))
+    n_blocks = min(n_blocks, n)  # can't have more blocks than nodes
+    return partition_graph(graph.W, n_blocks, tol=tol, seed=seed)
+
+
+def synthesize_meta_batches(
+    mini_blocks: PartitionResult,
+    n_classes: int,
+    *,
+    rng: np.random.Generator,
+    shuffle_blocks: bool = True,
+) -> tuple[list[np.ndarray], np.ndarray]:
+    """Step 2: group M randomly-drawn mini-blocks into each meta-batch.
+
+    Mini-blocks are drawn *without replacement* so every node appears in
+    exactly one meta-batch per synthesis (an epoch covers the data once).
+    ``shuffle_blocks=False`` groups CONSECUTIVE mini-blocks instead — that
+    is the paper's 'pure graph-partitioned batch' baseline (§2: homogeneous,
+    low-entropy, biased gradients), kept for the ablation benchmark.
+    Returns (meta_batches, meta_of_block).
+    """
+    k = mini_blocks.n_parts
+    order = rng.permutation(k) if shuffle_blocks else np.arange(k)
+    groups = [order[s : s + n_classes] for s in range(0, k, n_classes)]
+    # Fold a trailing undersized group into the previous one (keeps ~B size).
+    if len(groups) > 1 and len(groups[-1]) < max(2, n_classes // 2):
+        groups[-2] = np.concatenate([groups[-2], groups[-1]])
+        groups.pop()
+    members_of_block = [np.where(mini_blocks.labels == b)[0] for b in range(k)]
+    meta_batches = [
+        np.concatenate([members_of_block[b] for b in g]) for g in groups
+    ]
+    meta_of_block = np.empty(k, dtype=np.int64)
+    for mi, g in enumerate(groups):
+        meta_of_block[g] = mi
+    return meta_batches, meta_of_block
+
+
+def batch_graph(
+    graph: AffinityGraph, meta_of_node: np.ndarray, n_meta: int
+) -> sp.csr_matrix:
+    """Induced meta-batch graph G_M with integer edge weights |C_ij| (§2.2)."""
+    coo = graph.W.tocoo()
+    r = meta_of_node[coo.row]
+    c = meta_of_node[coo.col]
+    keep = r != c
+    ones = np.ones(keep.sum())
+    E = sp.csr_matrix((ones, (r[keep], c[keep])), shape=(n_meta, n_meta))
+    E.sum_duplicates()
+    # Each unique node pair was counted twice (W symmetric) -> halve.
+    E.data = E.data / 2.0
+    return E.tocsr()
+
+
+def plan_meta_batches(
+    graph: AffinityGraph,
+    batch_size: int,
+    n_classes: int,
+    *,
+    seed: int = 0,
+    tol: float = 0.15,
+    shuffle_blocks: bool = True,
+) -> MetaBatchPlan:
+    """One-shot preprocessing: mini-blocks -> meta-batches -> batch graph."""
+    rng = np.random.default_rng(seed)
+    mini = build_mini_blocks(graph, batch_size, n_classes, tol=tol, seed=seed)
+    metas, meta_of_block = synthesize_meta_batches(
+        mini, n_classes, rng=rng, shuffle_blocks=shuffle_blocks)
+    meta_of_node = meta_of_block[mini.labels]
+    E = batch_graph(graph, meta_of_node, len(metas))
+    return MetaBatchPlan(
+        mini_block_labels=mini.labels,
+        meta_batches=metas,
+        meta_of_block=meta_of_block,
+        batch_edges=E,
+        batch_size=batch_size,
+        n_classes=n_classes,
+    )
+
+
+class NeighborSampler:
+    """Samples a neighbour meta-batch with p_ij = |C_ij| / sum_j |C_ij| (Eq. 6)."""
+
+    def __init__(self, batch_edges: sp.csr_matrix, *, seed: int = 0):
+        self.E = batch_edges.tocsr()
+        self.rng = np.random.default_rng(seed)
+
+    def probs(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        """Neighbour ids and their selection probabilities for meta-batch i."""
+        s, e = self.E.indptr[i], self.E.indptr[i + 1]
+        nbrs = self.E.indices[s:e]
+        w = self.E.data[s:e]
+        tot = w.sum()
+        if tot <= 0 or len(nbrs) == 0:
+            return np.array([], dtype=np.int64), np.array([])
+        return nbrs, w / tot
+
+    def sample(self, i: int) -> int | None:
+        nbrs, p = self.probs(i)
+        if len(nbrs) == 0:
+            return None
+        return int(self.rng.choice(nbrs, p=p))
+
+
+def concat_batch_indices(
+    plan: MetaBatchPlan, i: int, j: int | None
+) -> np.ndarray:
+    """Node indices of the concatenated batch M_c = [M_r, M_s] (§2.3)."""
+    if j is None:
+        return plan.meta_batches[i]
+    return np.concatenate([plan.meta_batches[i], plan.meta_batches[j]])

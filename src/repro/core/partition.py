@@ -1,0 +1,249 @@
+"""Balanced min-edge-cut graph partitioning (METIS replacement, paper §1.1).
+
+The paper uses METIS's multilevel k-way scheme [Karypis & Kumar 1998] to
+split the affinity graph into balanced blocks, which re-permutes the affinity
+matrix into a dense block-diagonal form (Fig. 1b).  METIS is not available in
+this container and the brief requires every substrate to be built, so this is
+a from-scratch multilevel partitioner with the same three phases:
+
+  1. **Coarsening** — heavy-edge matching collapses the graph level by level.
+  2. **Initial partitioning** — greedy region growing on the coarsest graph
+     (seeded BFS that grows each part toward a balanced target weight).
+  3. **Uncoarsening + refinement** — project labels back up, then
+     Fiduccia–Mattheyses-style boundary passes move nodes to reduce edge-cut
+     subject to a balance tolerance.
+
+Host-side preprocessing (numpy/scipy), executed once before training.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import scipy.sparse as sp
+
+__all__ = ["PartitionResult", "partition_graph", "edge_cut", "partition_permutation"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionResult:
+    labels: np.ndarray        # part id per node, shape (n,)
+    n_parts: int
+    cut: float                # total weight of cut edges
+    sizes: np.ndarray         # nodes per part
+
+
+def edge_cut(W: sp.csr_matrix, labels: np.ndarray) -> float:
+    """Total weight of edges crossing parts (each undirected edge once)."""
+    coo = W.tocoo()
+    mask = labels[coo.row] != labels[coo.col]
+    return float(coo.data[mask].sum()) / 2.0
+
+
+def _heavy_edge_matching(
+    W: sp.csr_matrix, node_w: np.ndarray, rng: np.random.Generator
+) -> np.ndarray:
+    """One level of heavy-edge matching. Returns coarse-node id per node."""
+    n = W.shape[0]
+    match = np.full(n, -1, dtype=np.int64)
+    order = rng.permutation(n)
+    indptr, indices, data = W.indptr, W.indices, W.data
+    for u in order:
+        if match[u] != -1:
+            continue
+        best, best_w = -1, -np.inf
+        for e in range(indptr[u], indptr[u + 1]):
+            v = indices[e]
+            if v != u and match[v] == -1 and data[e] > best_w:
+                best, best_w = v, data[e]
+        match[u] = u if best == -1 else best
+        if best != -1:
+            match[best] = u
+    # Assign coarse ids: one per matched pair / singleton.
+    coarse = np.full(n, -1, dtype=np.int64)
+    nxt = 0
+    for u in range(n):
+        if coarse[u] == -1:
+            coarse[u] = nxt
+            v = match[u]
+            if v != u and coarse[v] == -1:
+                coarse[v] = nxt
+            nxt += 1
+    return coarse
+
+
+def _contract(
+    W: sp.csr_matrix, node_w: np.ndarray, coarse: np.ndarray
+) -> tuple[sp.csr_matrix, np.ndarray]:
+    nc = int(coarse.max()) + 1
+    coo = W.tocoo()
+    r, c = coarse[coo.row], coarse[coo.col]
+    keep = r != c
+    Wc = sp.csr_matrix((coo.data[keep], (r[keep], c[keep])), shape=(nc, nc))
+    Wc.sum_duplicates()
+    nw = np.zeros(nc, dtype=node_w.dtype)
+    np.add.at(nw, coarse, node_w)
+    return Wc.tocsr(), nw
+
+
+def _region_grow(
+    W: sp.csr_matrix, node_w: np.ndarray, k: int, rng: np.random.Generator
+) -> np.ndarray:
+    """Greedy seeded growth into k parts targeting equal node weight."""
+    n = W.shape[0]
+    labels = np.full(n, -1, dtype=np.int64)
+    target = node_w.sum() / k
+    indptr, indices, data = W.indptr, W.indices, W.data
+    struct_deg = np.diff(indptr)
+    unassigned = set(range(n))
+    for part in range(k - 1):
+        if not unassigned:
+            break
+        # Seed: highest-degree unassigned node (well-connected core).
+        seed = max(unassigned, key=lambda u: struct_deg[u])
+        labels[seed] = part
+        unassigned.discard(seed)
+        size = node_w[seed]
+        # Frontier scores: connection weight to this part.
+        gain: dict[int, float] = {}
+        for e in range(indptr[seed], indptr[seed + 1]):
+            v = indices[e]
+            if labels[v] == -1:
+                gain[v] = gain.get(v, 0.0) + data[e]
+        while size < target and gain:
+            u = max(gain, key=gain.get)
+            del gain[u]
+            if labels[u] != -1:
+                continue
+            labels[u] = part
+            unassigned.discard(u)
+            size += node_w[u]
+            for e in range(indptr[u], indptr[u + 1]):
+                v = indices[e]
+                if labels[v] == -1:
+                    gain[v] = gain.get(v, 0.0) + data[e]
+    # Everything left goes to the last part; stragglers get folded in below.
+    for u in unassigned:
+        labels[u] = k - 1
+    return labels
+
+
+def _refine(
+    W: sp.csr_matrix,
+    node_w: np.ndarray,
+    labels: np.ndarray,
+    k: int,
+    tol: float,
+    passes: int = 4,
+) -> np.ndarray:
+    """FM-style boundary refinement: greedy gain moves under balance."""
+    n = W.shape[0]
+    indptr, indices, data = W.indptr, W.indices, W.data
+    part_w = np.zeros(k)
+    np.add.at(part_w, labels, node_w)
+    max_w = node_w.sum() / k * (1.0 + tol)
+    min_w = node_w.sum() / k * (1.0 - tol)
+    for _ in range(passes):
+        moved = 0
+        for u in range(n):
+            lu = labels[u]
+            if part_w[lu] - node_w[u] < min_w:
+                continue
+            # Connection weight to each adjacent part.
+            conn: dict[int, float] = {}
+            for e in range(indptr[u], indptr[u + 1]):
+                lv = labels[indices[e]]
+                conn[lv] = conn.get(lv, 0.0) + data[e]
+            internal = conn.get(lu, 0.0)
+            best_part, best_gain = lu, 0.0
+            for p, w in conn.items():
+                if p == lu or part_w[p] + node_w[u] > max_w:
+                    continue
+                gain = w - internal
+                if gain > best_gain:
+                    best_part, best_gain = p, gain
+            if best_part != lu:
+                part_w[lu] -= node_w[u]
+                part_w[best_part] += node_w[u]
+                labels[u] = best_part
+                moved += 1
+        if moved == 0:
+            break
+    return labels
+
+
+def _rebalance(labels: np.ndarray, node_w: np.ndarray, k: int, tol: float,
+               W: sp.csr_matrix) -> np.ndarray:
+    """Hard balance pass: move lowest-connectivity nodes out of oversized parts."""
+    part_w = np.zeros(k)
+    np.add.at(part_w, labels, node_w)
+    target = node_w.sum() / k
+    max_w = target * (1.0 + tol)
+    indptr, indices, data = W.indptr, W.indices, W.data
+    for p in np.argsort(-part_w):
+        while part_w[p] > max_w:
+            members = np.where(labels == p)[0]
+            # Pick member with least internal connectivity to evict.
+            best_u, best_int = -1, np.inf
+            for u in members:
+                internal = 0.0
+                for e in range(indptr[u], indptr[u + 1]):
+                    if labels[indices[e]] == p:
+                        internal += data[e]
+                if internal < best_int:
+                    best_u, best_int = u, internal
+            dest = int(np.argmin(part_w))
+            if dest == p:
+                break
+            part_w[p] -= node_w[best_u]
+            part_w[dest] += node_w[best_u]
+            labels[best_u] = dest
+    return labels
+
+
+def partition_graph(
+    W: sp.csr_matrix,
+    k: int,
+    *,
+    tol: float = 0.1,
+    coarsen_to: int = 60,
+    seed: int = 0,
+) -> PartitionResult:
+    """Multilevel balanced k-way min-cut partition of a sparse graph."""
+    if k <= 1:
+        labels = np.zeros(W.shape[0], dtype=np.int64)
+        return PartitionResult(labels, 1, 0.0, np.array([W.shape[0]]))
+    rng = np.random.default_rng(seed)
+    n0 = W.shape[0]
+    graphs = [(W.tocsr(), np.ones(n0))]
+    maps: list[np.ndarray] = []
+    # --- coarsening ---
+    while graphs[-1][0].shape[0] > max(coarsen_to * k, 2 * k):
+        Wc0, nw0 = graphs[-1]
+        coarse = _heavy_edge_matching(Wc0, nw0, rng)
+        if coarse.max() + 1 >= Wc0.shape[0]:  # matching stalled
+            break
+        Wc, nw = _contract(Wc0, nw0, coarse)
+        graphs.append((Wc, nw))
+        maps.append(coarse)
+    # --- initial partition on coarsest ---
+    Wc, nw = graphs[-1]
+    labels = _region_grow(Wc, nw, k, rng)
+    labels = _refine(Wc, nw, labels, k, tol)
+    # --- uncoarsen + refine ---
+    for level in range(len(maps) - 1, -1, -1):
+        labels = labels[maps[level]]
+        Wl, nwl = graphs[level]
+        labels = _refine(Wl, nwl, labels, k, tol)
+    Wf, nwf = graphs[0]
+    labels = _rebalance(labels, nwf, k, tol, Wf)
+    sizes = np.bincount(labels, minlength=k)
+    return PartitionResult(labels, k, edge_cut(W, labels), sizes)
+
+
+def partition_permutation(labels: np.ndarray) -> np.ndarray:
+    """Stable permutation grouping nodes by part (Fig. 1b re-permutation).
+
+    ``perm[new_index] = old_index``.
+    """
+    return np.argsort(labels, kind="stable")

@@ -1,0 +1,2 @@
+from .flash_attention import flash_attention_gqa_pallas
+from .ops import graph_reg_pairwise, rbf_affinity

@@ -1,0 +1,134 @@
+"""Pallas flash-attention forward kernel (TPU deployment path).
+
+The pure-jnp flash path (models/layers/attention.py) is the portable
+implementation with a custom VJP; this kernel is its MXU-tiled twin for the
+forward/serving hot-spot: one (q-block × kv-block) tile per grid step with
+the online-softmax state held in VMEM scratch across the innermost kv axis.
+
+  grid = (B·H, Tq/bq, Tk/bk)      (kv innermost → scratch accumulates)
+  q tile (bq, hd), k/v tiles (bk, hd) in VMEM; causal masking from block
+  indices via 2-D iota (positions are sequential by contract, as in the
+  triangular-tiling jnp path).
+
+Validated in interpret mode against ``reference_attention`` (tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      n_kv_blocks: int, causal: bool, bq: int, bk: int,
+                      q_offset: int):
+    j = pl.program_id(2)
+    i = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # (bq, hd)
+    k = k_ref[0]                                   # (bk, hd)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if causal:
+        qpos = q_offset + i * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_fwd_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                               causal: bool = True, bq: int = DEFAULT_BQ,
+                               bk: int = DEFAULT_BK,
+                               interpret: bool = True) -> jax.Array:
+    """q: (BH, Tq, hd); k, v: (BH, Tk, hd) — heads folded into the batch.
+
+    Sequential positions assumed (q row t has absolute position
+    Tk − Tq + t); use the GQA wrapper below for (B, T, H, hd) layouts.
+    """
+    BH, Tq, hd = q.shape
+    Tk = k.shape[1]
+    scale = hd ** -0.5
+    bq_, bk_ = min(bq, Tq), min(bk, Tk)
+    pq, pk2 = (-Tq) % bq_, (-Tk) % bk_
+    # Padded kv columns are only excluded by the causal mask (their absolute
+    # positions exceed every real q position); non-causal calls must be
+    # pre-padded by the caller.
+    assert causal or pk2 == 0, "non-causal requires Tk % bk == 0"
+    qp = jnp.pad(q * scale, ((0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk2), (0, 0)))
+    # Padded kv columns must never win the softmax: push their keys to 0 and
+    # mask via the causal iota (padded q rows are sliced off afterwards);
+    # for non-causal, mask by padding k with a large negative last feature…
+    # simplest robust choice: pad v with zeros and rely on explicit masking:
+    vp = jnp.pad(v, ((0, 0), (0, pk2), (0, 0)))
+    grid = (BH, (Tq + pq) // bq_, (Tk + pk2) // bk_)
+    out = pl.pallas_call(
+        functools.partial(_flash_fwd_kernel, n_kv_blocks=grid[2],
+                          causal=causal, bq=bq_, bk=bk_,
+                          q_offset=Tk - Tq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk_, hd), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk_, hd), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq + pq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, hd), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Tq]
+
+
+def flash_attention_gqa_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                               causal: bool = True, bq: int = DEFAULT_BQ,
+                               bk: int = DEFAULT_BK,
+                               interpret: bool = True) -> jax.Array:
+    """GQA wrapper. q: (B, T, H, hd); k, v: (B, Tk, KV, hd) -> (B, T, H, hd).
+
+    Note: valid for Tq == Tk (train/prefill) with sequential positions;
+    padded-kv correctness relies on causal masking, so require causal=True
+    when Tk % bk != 0."""
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Tk, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Tk, hd)
+    of = flash_attention_fwd_pallas(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                                    interpret=interpret)
+    return of.reshape(B, H, Tq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,98 @@
+"""Fused graph-regularizer kernel (the paper's compute hot-spot, §1.1).
+
+Computes the weighted pairwise cross-entropy contraction of Eq. 3/4:
+
+    cross(P, logP, W) = Σ_ij W_ij · Hc(p_i, p_j) = −Σ_ij W_ij (P · logPᵀ)_ij
+
+The paper's efficiency argument is exactly this: graph partitioning makes the
+per-batch affinity block W dense, so the regularizer becomes a matrix-matrix
+product instead of sparse gathers.  On TPU we tile it for the MXU:
+
+  grid = (B/bi, B/bj, C/bc);  for each (i, j) output tile, the class
+  dimension is accumulated over bc-sized chunks into a VMEM scratch tile
+  (bi × bj, f32), and on the last chunk the tile is contracted with the
+  W tile into a scalar accumulator.
+
+All tile dims default to 128/512 — MXU-aligned (128 lanes) with the class
+chunk kept wide to amortize the weight-stationary W tile.  VMEM working set:
+bi·bc + bj·bc + bi·bj + bi·bj(scratch) floats ≈ 0.9 MB at defaults.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BI = 128
+DEFAULT_BJ = 128
+DEFAULT_BC = 512
+
+
+def _graph_reg_kernel(p_ref, logp_ref, w_ref, out_ref, acc_ref, *,
+                      n_c_blocks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # S_tile += P_i(bi, bc) @ logP_j(bj, bc)^T   — MXU contraction.
+    acc_ref[...] += jax.lax.dot_general(
+        p_ref[...], logp_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0) & (ci == 0))
+    def _init_out():
+        out_ref[0, 0] = 0.0
+
+    @pl.when(ci == n_c_blocks - 1)
+    def _finish_tile():
+        # cross = −Σ W ⊙ S  (accumulated over all (i, j) tiles).
+        out_ref[0, 0] += -jnp.sum(w_ref[...] * acc_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj", "bc", "interpret"))
+def graph_reg_pairwise_pallas(
+    logp: jax.Array, W: jax.Array, *,
+    bi: int = DEFAULT_BI, bj: int = DEFAULT_BJ, bc: int = DEFAULT_BC,
+    interpret: bool = True,
+) -> jax.Array:
+    """Σ_ij W_ij Hc(p_i, p_j) with p = exp(logp).  logp: (B, C); W: (B, B)."""
+    B, C = logp.shape
+    bi, bj, bc = min(bi, B), min(bj, B), min(bc, C)
+    pad_i = (-B) % bi
+    pad_j = (-B) % bj
+    pad_c = (-C) % bc
+    # Padding: logp rows padded with 0 (p=exp(0)=1 would corrupt → pad p with
+    # 0 instead by padding logp with -inf surrogate handled via exp outside).
+    p = jnp.exp(logp)
+    if pad_i or pad_c:
+        p = jnp.pad(p, ((0, pad_i), (0, pad_c)))             # p rows -> 0
+        logp_p = jnp.pad(logp, ((0, pad_j), (0, pad_c)))     # logp·0 = 0
+    else:
+        logp_p = logp
+    Wp = jnp.pad(W, ((0, pad_i), (0, pad_j))) if (pad_i or pad_j) else W
+    Bi, Bj, Cc = p.shape[0], logp_p.shape[0], p.shape[1]
+    grid = (Bi // bi, Bj // bj, Cc // bc)
+    out = pl.pallas_call(
+        functools.partial(_graph_reg_kernel, n_c_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bc), lambda i, j, c: (i, c)),
+            pl.BlockSpec((bj, bc), lambda i, j, c: (j, c)),
+            pl.BlockSpec((bi, bj), lambda i, j, c: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, c: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        # VMEM scratch accumulator for the S tile.
+        scratch_shapes=[pltpu.VMEM((bi, bj), jnp.float32)],
+        interpret=interpret,
+    )(p.astype(jnp.float32), logp_p.astype(jnp.float32),
+      Wp.astype(jnp.float32))
+    return out[0, 0]

@@ -1,0 +1,76 @@
+"""Jit'd public wrappers around the Pallas kernels, with analytic VJPs.
+
+``graph_reg_pairwise`` is a drop-in ``pairwise_impl`` for
+``repro.core.ssl_loss.ssl_objective``: forward runs the fused Pallas kernel
+(TPU; ``interpret=True`` on CPU), backward uses the closed form
+
+    T(logp, W)          = −Σ_ij W_ij Σ_c exp(logp_ic)·logp_jc
+    ∂T/∂logp            = −(P ⊙ (W·logP)) − Wᵀ·P
+    ∂T/∂W               = −P·logPᵀ
+
+(two matmuls — no need to rematerialize kernel internals).
+
+Selection: ``use_pallas=None`` (default) picks Pallas on TPU backends and the
+jnp oracle elsewhere; the env var ``REPRO_FORCE_PALLAS=1`` forces the kernel
+(interpret mode) for validation runs.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .graph_reg import graph_reg_pairwise_pallas
+from .pairwise import rbf_affinity_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _want_pallas(use_pallas: bool | None) -> bool:
+    if use_pallas is not None:
+        return use_pallas
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    return _on_tpu()
+
+
+@jax.custom_vjp
+def _graph_reg_fwd_primal(logp, W):
+    return graph_reg_pairwise_pallas(logp, W, interpret=not _on_tpu())
+
+
+def _graph_reg_vjp_fwd(logp, W):
+    out = graph_reg_pairwise_pallas(logp, W, interpret=not _on_tpu())
+    return out, (logp, W)
+
+
+def _graph_reg_vjp_bwd(res, g):
+    logp, W = res
+    p = jnp.exp(logp)
+    dlogp = -(p * (W @ logp) + W.T @ p) * g
+    dW = -(p @ logp.T) * g
+    return dlogp, dW
+
+
+_graph_reg_fwd_primal.defvjp(_graph_reg_vjp_fwd, _graph_reg_vjp_bwd)
+
+
+def graph_reg_pairwise(logp: jax.Array, W: jax.Array, *,
+                       use_pallas: bool | None = None) -> jax.Array:
+    """Fused Σ_ij W_ij·Hc(p_i,p_j); drop-in ``pairwise_impl`` for the SSL loss."""
+    if _want_pallas(use_pallas):
+        return _graph_reg_fwd_primal(logp, W)
+    return ref.graph_reg_pairwise_ref(logp, W)
+
+
+def rbf_affinity(x: jax.Array, y: jax.Array, sigma, *,
+                 use_pallas: bool | None = None) -> jax.Array:
+    """Dense RBF affinity block (graph construction device path)."""
+    if _want_pallas(use_pallas):
+        return rbf_affinity_pallas(x, y, sigma, interpret=not _on_tpu())
+    return ref.rbf_affinity_ref(x, y, sigma)

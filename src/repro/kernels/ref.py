@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each function is the semantic ground truth its Pallas twin is tested
+against (tests/test_kernels.py sweeps shapes/dtypes with assert_allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def graph_reg_pairwise_ref(logp: jax.Array, W: jax.Array) -> jax.Array:
+    """Σ_ij W_ij Hc(p_i, p_j) = −Σ W ⊙ (P·logPᵀ);  logp: (B, C), W: (B, B)."""
+    p = jnp.exp(logp)
+    return -jnp.sum(W * (p @ logp.T))
+
+
+def rbf_affinity_ref(x: jax.Array, y: jax.Array, sigma) -> jax.Array:
+    """exp(−‖x_i − y_j‖ / 2σ²) dense block;  x: (N, D), y: (M, D)."""
+    xx = jnp.sum(x.astype(jnp.float32) ** 2, 1)[:, None]
+    yy = jnp.sum(y.astype(jnp.float32) ** 2, 1)[None, :]
+    d2 = jnp.maximum(xx - 2.0 * x.astype(jnp.float32) @ y.astype(jnp.float32).T + yy, 0.0)
+    return jnp.exp(-jnp.sqrt(d2) / (2.0 * jnp.float32(sigma) ** 2))

@@ -1,0 +1,170 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination and record memory / cost / collective analysis.
+
+The two os.environ lines below MUST run before any jax import (jax locks the
+device count on first init); 512 placeholder host devices back the production
+meshes (16×16 single pod, 2×16×16 multi-pod).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k --mesh single --strategy dp
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, config_for_shape, get_config
+from repro.launch import hlo_analysis
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            strategy: str, ssl: bool = True,
+            hlo_path: str | None = None) -> dict:
+    """Lower + compile one combination; return the roofline record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    shape = INPUT_SHAPES[shape_name]
+    cfg = config_for_shape(get_config(arch), shape)
+    spec = input_specs(arch, shape_name, mesh, strategy, ssl=ssl)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(spec["fn"], donate_argnums=spec.get("donate", ()))
+        lowered = jitted.lower(*spec["args"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    if hlo_path:
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+    # Trip-aware per-chip costs (the SPMD module is the per-device program;
+    # cost_analysis counts while bodies once — analyze_hlo fixes both).
+    costs = hlo_analysis.analyze_hlo(hlo)
+
+    terms = hlo_analysis.roofline_terms(
+        costs.flops, costs.traffic_bytes, costs.collective_bytes, chips=1,
+        peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW)
+
+    # Useful-FLOPs reference: 6·N_active·D for train, 2·N_active·B for decode.
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                   else 1)
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * n_active * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2.0 * n_active * tokens
+
+    mem_rec = {}
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_rec[attr] = int(v)
+
+    model_flops_per_chip = model_flops / chips
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        "strategy": strategy, "chips": int(chips),
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        # Per-chip, trip-aware (see hlo_analysis):
+        "flops_per_chip": costs.flops,
+        "traffic_bytes_per_chip": costs.traffic_bytes,
+        "collective_bytes_per_chip": costs.collective_bytes,
+        "collectives": {"bytes_by_op": costs.bytes_by_op,
+                        "count_by_op": costs.count_by_op},
+        # Raw XLA numbers (while bodies counted once) for reference:
+        "xla_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes_accessed":
+                                  float(cost.get("bytes accessed", 0.0))},
+        "roofline": terms,
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": ((model_flops_per_chip / costs.flops)
+                               if costs.flops else None),
+        "memory_analysis": mem_rec,
+        "params_total": cfg.param_count(),
+        "params_active": n_active,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--strategy", default="fsdp_tp",
+                    choices=["dp", "fsdp", "fsdp_tp"])
+    ap.add_argument("--no-ssl", action="store_true",
+                    help="lower the supervised-only step (paper baseline)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) for the chosen mesh(es)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    meshes = (["single", "multi"] if args.all
+              else [args.mesh])
+    archs = ARCH_IDS if args.arch is None else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape is None else [args.shape]
+    for m in meshes:
+        for a in archs:
+            for s in shapes:
+                combos.append((a, s, m))
+
+    for arch, shape_name, mesh_kind in combos:
+        tag = f"{arch}__{shape_name}__{mesh_kind}__{args.strategy}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {tag}")
+            continue
+        print(f"[run ] {tag}", flush=True)
+        try:
+            rec = run_one(arch, shape_name, multi_pod=(mesh_kind == "multi"),
+                          strategy=args.strategy, ssl=not args.no_ssl,
+                          hlo_path=os.path.join(args.out, tag + ".hlo.gz"))
+        except Exception as e:  # noqa: BLE001 — record the failure and go on
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                   "strategy": args.strategy, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" compile={rec['compile_s']}s dominant={r['dominant']}"
+                     f" compute={r['compute_s']:.4f}s mem={r['memory_s']:.4f}s"
+                     f" coll={r['collective_s']:.4f}s")
+        print(f"[{status}] {tag}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

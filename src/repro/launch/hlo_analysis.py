@@ -1,0 +1,228 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, so a scanned
+61-layer model under-reports FLOPs ~61×.  This module re-derives trip-aware
+costs from the optimized HLO text:
+
+  * parse every computation and build the call graph
+    (``body=/condition=/calls=/to_apply=`` edges);
+  * multiply each computation's execution count by its callers' counts and
+    the ``known_trip_count`` annotation of while ops;
+  * FLOPs:   2·prod(out_dims)·prod(contracting_dims) per ``dot`` (+conv),
+             trip-weighted;
+  * traffic: operand + output bytes of every materializing top-level op
+    (fusions, dots, copies, collectives, scatter/gather, DUS) — a model of
+    HBM traffic under XLA fusion (fusion internals are free);
+  * collectives: bytes moved = max(Σ operand, Σ output) per collective op,
+    trip-weighted, split by kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_COMP_DEF_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_OP_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_RE = re.compile(r"(body|condition|calls|to_apply)=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+_OPERAND_RE = re.compile(r"\(([^)]*)\)")
+_KIND_RE = re.compile(
+    r"^(?:\([^=]*\)|\S+)\s+"
+    r"([a-z][a-z0-9\-]*(?:-start|-done)?)\(")
+
+# Ops whose operands/outputs hit HBM (everything else assumed fused away).
+# Layout/elementwise ops (transpose/reshape/broadcast/convert/...) are
+# normally fused on TPU — counting them as HBM round-trips wildly overstates
+# traffic, so only ops that genuinely materialize buffers are included.
+_MATERIALIZING = {
+    "fusion", "dot", "convolution", "copy", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "sort",
+    "custom-call", "select-and-scatter", "reduce-window",
+} | set(COLLECTIVE_OPS)
+_FREE = {"bitcast", "parameter", "constant", "get-tuple-element", "tuple",
+         "after-all", "partition-id", "replica-id"}
+
+
+def _first_shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _parse_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float
+    traffic_bytes: float
+    collective_bytes: float
+    bytes_by_op: dict
+    count_by_op: dict
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze_hlo(hlo_text: str) -> HloCosts:  # noqa: C901 — one-pass parser
+    lines = hlo_text.splitlines()
+    # ---- pass 1: computations, ops, shapes, call edges -------------------
+    comps: dict[str, list[tuple[str, str, str]]] = {}  # name -> [(op_name, kind, rest)]
+    shape_of: dict[str, str] = {}
+    call_edges: list[tuple[str, str, str, int]] = []   # (src, dst, via, trip)
+    entry = None
+    current = None
+    for ln in lines:
+        if ln and not ln.startswith(" "):
+            m = _COMP_DEF_RE.match(ln)
+            if m and ln.rstrip().endswith("{"):
+                current = m.group(1)
+                comps[current] = []
+                if ln.startswith("ENTRY"):
+                    entry = current
+            continue
+        if current is None:
+            continue
+        m = _OP_DEF_RE.match(ln)
+        if not m:
+            continue
+        op_name, rest = m.group(1), m.group(2)
+        shape_of[op_name] = rest.split(" ", 1)[0] if rest else ""
+        km = _KIND_RE.match(rest)
+        kind = km.group(1) if km else "unknown"
+        comps[current].append((op_name, kind, rest))
+        trip = 1
+        tm = _TRIP_RE.search(rest)
+        if tm:
+            trip = int(tm.group(1))
+        for via, dst in _CALL_RE.findall(rest):
+            call_edges.append(
+                (current, dst, via, trip if via in ("body", "condition") else 1))
+
+    # ---- pass 2: execution multipliers via call-graph propagation --------
+    mult: dict[str, float] = defaultdict(float)
+    fusion_called: set[str] = set()
+    if entry:
+        mult[entry] = 1.0
+    edges_from: dict[str, list[tuple[str, str, int]]] = defaultdict(list)
+    for src, dst, via, trip in call_edges:
+        edges_from[src].append((dst, via, trip))
+        if via in ("calls", "to_apply"):
+            fusion_called.add(dst)
+    # topological-ish propagation (HLO call graphs are acyclic) — iterate to
+    # fixpoint (#comps is small).
+    for _ in range(64):
+        changed = False
+        new_mult = defaultdict(float)
+        if entry:
+            new_mult[entry] = 1.0
+        for src, outs in edges_from.items():
+            if mult[src] == 0:
+                continue
+            for dst, via, trip in outs:
+                new_mult[dst] += mult[src] * trip
+        if entry:
+            new_mult[entry] = 1.0
+        if dict(new_mult) != dict(mult):
+            mult = new_mult
+            changed = True
+        if not changed:
+            break
+
+    # ---- pass 3: costs ----------------------------------------------------
+    flops = 0.0
+    traffic = 0.0
+    coll_bytes = {k: 0.0 for k in COLLECTIVE_OPS}
+    coll_count = {k: 0 for k in COLLECTIVE_OPS}
+
+    def operand_bytes(rest: str) -> int:
+        m = _OPERAND_RE.search(rest[rest.index("("):] if "(" in rest else "")
+        if not m:
+            return 0
+        total = 0
+        for tok in m.group(1).split(","):
+            tok = tok.strip().lstrip("%")
+            if tok in shape_of:
+                total += _first_shape_bytes(shape_of[tok])
+        return total
+
+    for comp, ops in comps.items():
+        w = mult.get(comp, 0.0)
+        if w == 0.0:
+            continue
+        in_fusion = comp in fusion_called
+        for op_name, kind, rest in ops:
+            base = kind.replace("-start", "").replace("-done", "")
+            if base == "dot":
+                out_dims = _parse_dims(rest)
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+                lhs_name = None
+                om = _OPERAND_RE.search(rest[rest.index("("):])
+                if om:
+                    toks = [t.strip().lstrip("%")
+                            for t in om.group(1).split(",")]
+                    lhs_name = toks[0] if toks else None
+                contract = 1
+                if cm and lhs_name and lhs_name in shape_of:
+                    lhs_dims = _parse_dims(shape_of[lhs_name])
+                    for d in cm.group(1).split(","):
+                        if d and int(d) < len(lhs_dims):
+                            contract *= lhs_dims[int(d)]
+                n_out = 1
+                for d in out_dims:
+                    n_out *= d
+                flops += w * 2.0 * n_out * contract
+            if base in COLLECTIVE_OPS and not kind.endswith("-done"):
+                b = max(_first_shape_bytes(rest.split(" metadata")[0]
+                                           .split("), ")[0]),
+                        operand_bytes(rest))
+                coll_bytes[base] += w * b
+                coll_count[base] += 1
+            if not in_fusion and base in _MATERIALIZING:
+                traffic += w * (_first_shape_bytes(shape_of[op_name])
+                                + operand_bytes(rest))
+    return HloCosts(
+        flops=flops, traffic_bytes=traffic,
+        collective_bytes=sum(coll_bytes.values()),
+        bytes_by_op=coll_bytes, count_by_op=coll_count)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float, *, chips: int,
+                   peak_flops: float, hbm_bw: float,
+                   ici_bw: float) -> dict:
+    """The three §Roofline terms, in seconds (whole-step, all chips).
+
+    flops/bytes are whole-program (all-chips) totals; dividing by
+    chips×per-chip-rate gives the balanced per-step time of each resource.
+    """
+    compute_s = flops / (chips * peak_flops)
+    memory_s = bytes_accessed / (chips * hbm_bw)
+    collective_s = collective_bytes / (chips * ici_bw)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    return terms

@@ -1,0 +1,153 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's inputs.
+
+``input_specs(arch, shape, mesh, strategy)`` returns (fn, args) where ``fn``
+is the step to lower (train_step or serve_step) and ``args`` are
+sharding-annotated ShapeDtypeStructs: weak-type-correct, shardable, and never
+allocated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, InputShape, config_for_shape, get_config
+from repro.core.ssl_loss import SSLHyper
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.optim import adagrad
+from repro.serve.decode import serve_step
+from repro.sharding import specs as sh
+from repro.train.train_step import lm_train_step
+
+SSL_GROUPS = 16          # G concatenated meta-batches per global train batch
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sharding)
+
+
+def _replicated(mesh, tree):
+    r = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=r), tree)
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape, mesh, strategy: str,
+                 *, ssl: bool = True) -> dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((B, T), jnp.int32),
+        "targets": _sds((B, T), jnp.int32),
+        "loss_mask": _sds((B, T), jnp.float32),
+    }
+    if ssl:
+        G = min(SSL_GROUPS, B)
+        b = B // G
+        batch.update(
+            W=_sds((G, b, b), jnp.float32),
+            seq_labels=_sds((G, b), jnp.int32),
+            seq_label_mask=_sds((G, b), jnp.float32),
+        )
+    if cfg.modality_tokens:
+        batch["modality_embeds"] = _sds(
+            (B, cfg.modality_tokens, cfg.modality_dim), jnp.bfloat16)
+    bshard = sh.train_batch_shardings(batch, mesh)
+    batch = sh.with_shardings(batch, bshard)
+
+    params = tf.abstract_params(cfg)
+    pshard = sh.param_shardings(params, mesh, strategy)
+    params = sh.with_shardings(params, pshard)
+
+    opt = adagrad()
+    opt_state = jax.eval_shape(opt.init, params)
+    oshard = sh.param_shardings(opt_state, mesh, strategy)
+    opt_state = sh.with_shardings(opt_state, oshard)
+
+    hyper = SSLHyper(gamma=1e-3, kappa=1e-4, weight_decay=0.0) if ssl else None
+    ba = sh.batch_axes(mesh)
+    act = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(ba if len(ba) > 1 else ba[0],
+                                         None, None))
+
+    def step(params, opt_state, batch):
+        return lm_train_step(params, opt_state, batch, cfg=cfg, hyper=hyper,
+                             opt=opt, lr=jnp.float32(1e-3),
+                             act_sharding=act)
+
+    return {"fn": step, "args": (params, opt_state, batch),
+            "donate": (0, 1)}
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape, mesh,
+                   strategy: str) -> dict[str, Any]:
+    """Inference-prefill: full-sequence forward that fills the decode cache."""
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.modality_tokens:
+        batch["modality_embeds"] = _sds(
+            (B, cfg.modality_tokens, cfg.modality_dim), jnp.bfloat16)
+    bshard = sh.train_batch_shardings(batch, mesh)
+    batch = sh.with_shardings(batch, bshard)
+    params = tf.abstract_params(cfg)
+    params = sh.with_shardings(params,
+                               sh.param_shardings(params, mesh, strategy))
+    ba = sh.batch_axes(mesh)
+    act = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(ba if len(ba) > 1 else ba[0],
+                                         None, None))
+
+    def step(params, batch):
+        return tf.prefill(params, cfg, batch["tokens"],
+                          modality_embeds=batch.get("modality_embeds"),
+                          act_sharding=act)
+
+    return {"fn": step, "args": (params, batch), "donate": ()}
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape, mesh,
+                  strategy: str) -> dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: tf.init_cache(cfg, B, S))
+    cshard = sh.cache_shardings(cache, mesh, B, strategy)
+    cache = sh.with_shardings(cache, cshard)
+
+    params = tf.abstract_params(cfg)
+    pshard = sh.param_shardings(params, mesh, strategy)
+    params = sh.with_shardings(params, pshard)
+
+    ba = sh.batch_axes(mesh)
+    bn = 1
+    for a in ba:
+        bn *= mesh.shape[a]
+    tok_spec = (jax.sharding.PartitionSpec(ba if len(ba) > 1 else ba[0])
+                if B % bn == 0 and B >= bn else jax.sharding.PartitionSpec())
+    tok_sh = jax.sharding.NamedSharding(mesh, tok_spec)
+    tokens = _sds((B, 1), jnp.int32, tok_sh)
+    pos = _sds((B,), jnp.int32, tok_sh)
+    key = _replicated(mesh, jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+
+    bdim = (ba if len(ba) > 1 else ba[0]) if (B % bn == 0 and B >= bn) else None
+    act = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(bdim, None, None))
+
+    def step(params, cache, tokens, pos, key):
+        return serve_step(params, cfg, cache, tokens, pos, key,
+                          temperature=0.0, act_sharding=act)
+
+    return {"fn": step, "args": (params, cache, tokens, pos, key),
+            "donate": (1,)}
+
+
+def input_specs(arch: str, shape_name: str, mesh, strategy: str = "fsdp_tp",
+                *, ssl: bool = True) -> dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = config_for_shape(get_config(arch), shape)
+    if shape.kind == "train":
+        return train_inputs(cfg, shape, mesh, strategy, ssl=ssl)
+    if shape.kind == "prefill":
+        return prefill_inputs(cfg, shape, mesh, strategy)
+    return decode_inputs(cfg, shape, mesh, strategy)

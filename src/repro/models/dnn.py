@@ -1,0 +1,55 @@
+"""The paper's own model: 4 hidden layers × 2000 ReLU units, softmax output.
+
+TIMIT frame classifier (§3): 351-d cepstral input, 39 phone classes,
+dropout 0.2 between hidden layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers.common import variance_scaling
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DNNConfig:
+    input_dim: int = 351
+    hidden_dim: int = 2000
+    n_hidden: int = 4
+    n_classes: int = 39
+    dropout: float = 0.2
+
+
+def init_dnn(cfg: DNNConfig, key) -> dict:
+    dims = [cfg.input_dim] + [cfg.hidden_dim] * cfg.n_hidden + [cfg.n_classes]
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        "layers": [
+            {
+                "w": variance_scaling(ks[i], (dims[i], dims[i + 1]), dims[i],
+                                      scale=2.0),   # He init for ReLU
+                "b": jnp.zeros((dims[i + 1],), jnp.float32),
+            }
+            for i in range(len(dims) - 1)
+        ]
+    }
+
+
+def dnn_forward(params: dict, x: Array, *, dropout_rng=None,
+                dropout: float = 0.0) -> Array:
+    """x: (B, input_dim) -> logits (B, n_classes)."""
+    h = x
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        h = h @ layer["w"] + layer["b"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+            if dropout_rng is not None and dropout > 0.0:
+                dropout_rng, sub = jax.random.split(dropout_rng)
+                keep = jax.random.bernoulli(sub, 1.0 - dropout, h.shape)
+                h = jnp.where(keep, h / (1.0 - dropout), 0.0)
+    return h

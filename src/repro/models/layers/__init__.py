@@ -1,0 +1,1 @@
+from . import attention, common, mamba, mlp, moe, xlstm  # noqa: F401

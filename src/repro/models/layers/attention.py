@@ -1,0 +1,464 @@
+"""GQA attention: chunked (flash-style) training/prefill path + cached decode.
+
+The training/prefill path never materializes the full (Tq, Tk) score matrix:
+it tiles queries and scans KV blocks with an online-softmax accumulator —
+this is what makes ``prefill_32k`` lowerable without a quadratic temp, and it
+supports causal + sliding-window masking (the sub-quadratic variant used for
+``long_500k`` on attention architectures).
+
+Decode attends one query against a KV cache: a full cache for ATTN layers, a
+ring buffer of ``window`` entries for ATTN_SWA layers (bounded memory at 500k
+contexts), or precomputed cross-attention KV for XATTN layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, variance_scaling
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ params
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int, hd: int,
+                   *, qkv_bias: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": variance_scaling(ks[0], (d_model, n_heads, hd), d_model, dtype),
+        "wk": variance_scaling(ks[1], (d_model, n_kv_heads, hd), d_model, dtype),
+        "wv": variance_scaling(ks[2], (d_model, n_kv_heads, hd), d_model, dtype),
+        "wo": variance_scaling(ks[3], (n_heads, hd, d_model), n_heads * hd, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, hd), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads, hd), dtype)
+    return p
+
+
+def qkv_proj(p, x: Array):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def out_proj(p, o: Array) -> Array:
+    return jnp.einsum("bthk,hkd->btd", o, p["wo"])
+
+
+# ------------------------------------------------- chunked flash attention
+def _mask_tile(q_pos, kv_pos, kv_valid, *, causal: bool, window: int | None):
+    """(Tq_blk, Tk_blk) boolean mask for one tile from absolute positions."""
+    m = kv_valid[None, :]
+    diff = q_pos[:, None] - kv_pos[None, :]
+    if causal:
+        m = m & (diff >= 0)
+    if window is not None:
+        m = m & (diff < window)
+    return m
+
+
+def _flash_tile_shapes(q, k, q_block, kv_block):
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    qb, kb = min(q_block, Tq), min(kv_block, Tk)
+    return B, Tq, H, hd, Tk, KV, H // KV, qb, kb, (-Tq) % qb, (-Tk) % kb
+
+
+def _tri_tile_list(nq, nk, qb, kb, Tq, Tk, *, causal, window,
+                   sequential) -> list[tuple[int, int]]:
+    """Static (q_block, kv_block) tile list, row-major.
+
+    With ``sequential`` positions (q = arange(Tq)+Tk−Tq, kv = arange(Tk)),
+    fully-masked tiles are skipped: future tiles under causal masking and
+    out-of-window tiles under sliding-window — this HALVES causal-attention
+    FLOPs (triangular tiling) and makes SWA prefill O(T·w) (§Perf qwen2
+    iteration 2).  Without it the full grid is emitted (identical math —
+    masks still applied per tile)."""
+    off = Tk - Tq  # absolute position of q row 0
+    tiles = []
+    for i in range(nq):
+        q_lo, q_hi = off + i * qb, off + (i + 1) * qb - 1
+        for j in range(nk):
+            k_lo, k_hi = j * kb, (j + 1) * kb - 1
+            if sequential:
+                if causal and k_lo > q_hi:
+                    continue                       # entirely in the future
+                if window is not None and k_hi < q_lo - window + 1:
+                    continue                       # entirely out of window
+            tiles.append((i, j))
+    return tiles
+
+
+def _flash_fwd_tiles(q, k, v, q_positions, kv_positions, kv_valid,
+                     causal, window, q_block, kv_block, sequential=False):
+    """Tiled online-softmax forward. Returns (out (B,Tq,H,hd), lse (B,Tq,H))."""
+    B, Tq, H, hd, Tk, KV, G, qb, kb, pq, pk = _flash_tile_shapes(
+        q, k, q_block, kv_block)
+    scale = hd ** -0.5
+    q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    qp = jnp.pad(q_positions, (0, pq))
+    k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    kp = jnp.pad(kv_positions, (0, pk))
+    kval = jnp.pad(kv_valid, (0, pk))
+    nq, nk = (Tq + pq) // qb, (Tk + pk) // kb
+
+    qt = (q.reshape(B, nq, qb, KV, G, hd) * scale).swapaxes(0, 1)
+    qpt = qp.reshape(nq, qb)
+    kt = k.reshape(B, nk, kb, KV, hd).swapaxes(0, 1)
+    vt = v.reshape(B, nk, kb, KV, hd).swapaxes(0, 1)
+    kpt = kp.reshape(nk, kb)
+    kvt = kval.reshape(nk, kb)
+
+    tiles = _tri_tile_list(nq, nk, qb, kb, Tq + pq, Tk + pk, causal=causal,
+                           window=window, sequential=sequential)
+    ti = jnp.asarray([t[0] for t in tiles], jnp.int32)
+    tj = jnp.asarray([t[1] for t in tiles], jnp.int32)
+    first = jnp.asarray(
+        [a == 0 or tiles[a - 1][0] != tiles[a][0] for a in range(len(tiles))])
+    last = jnp.asarray(
+        [a == len(tiles) - 1 or tiles[a + 1][0] != tiles[a][0]
+         for a in range(len(tiles))])
+
+    def step(carry, inp):
+        acc, m, l, out_buf, lse_buf = carry
+        i, j, is_first, is_last = inp
+        qi = jax.lax.dynamic_index_in_dim(qt, i, 0, keepdims=False)
+        qposi = jax.lax.dynamic_index_in_dim(qpt, i, 0, keepdims=False)
+        ki = jax.lax.dynamic_index_in_dim(kt, j, 0, keepdims=False)
+        vi = jax.lax.dynamic_index_in_dim(vt, j, 0, keepdims=False)
+        kposi = jax.lax.dynamic_index_in_dim(kpt, j, 0, keepdims=False)
+        kvali = jax.lax.dynamic_index_in_dim(kvt, j, 0, keepdims=False)
+        # Reset the online-softmax state at the start of each q row.
+        acc = jnp.where(is_first, 0.0, acc)
+        m = jnp.where(is_first, NEG_INF, m)
+        l = jnp.where(is_first, 0.0, l)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qi, ki,
+                       preferred_element_type=jnp.float32)
+        mask = _mask_tile(qposi, kposi, kvali, causal=causal, window=window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgs,bskd->bqkgd", p, vi.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        # Emit the finished row.
+        out_row = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse_row = jnp.where(l > 0, m_new + jnp.log(jnp.maximum(l, 1e-30)),
+                            0.0)
+        out_buf = jnp.where(
+            is_last,
+            jax.lax.dynamic_update_index_in_dim(
+                out_buf, out_row[None].astype(out_buf.dtype), i, 0),
+            out_buf)
+        lse_buf = jnp.where(
+            is_last,
+            jax.lax.dynamic_update_index_in_dim(lse_buf, lse_row[None], i, 0),
+            lse_buf)
+        return (acc, m_new, l, out_buf, lse_buf), None
+
+    acc0 = jnp.zeros((B, qb, KV, G, hd), jnp.float32)
+    m0 = jnp.full((B, qb, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, qb, KV, G), jnp.float32)
+    out0 = jnp.zeros((nq, B, qb, KV, G, hd), v.dtype)
+    lse0 = jnp.zeros((nq, B, qb, KV, G), jnp.float32)
+    (_, _, _, outs, lses), _ = jax.lax.scan(
+        step, (acc0, m0, l0, out0, lse0), (ti, tj, first, last))
+    out = outs.swapaxes(0, 1).reshape(B, Tq + pq, H, hd)[:, :Tq]
+    lse = lses.swapaxes(0, 1).reshape(B, Tq + pq, H)[:, :Tq]
+    return out, lse
+
+
+def _flash_bwd_tiles(res, do, causal, window, q_block, kv_block,
+                     sequential=False):
+    """Flash backward: recompute p tiles from (q,k,lse); O(T) residual memory.
+
+    Flat scan over the same (triangular) tile list as the forward,
+    accumulating dq / dk / dv buffers with dynamic-index updates."""
+    q, k, v, q_positions, kv_positions, kv_valid, out, lse = res
+    B, Tq, H, hd, Tk, KV, G, qb, kb, pq, pk = _flash_tile_shapes(
+        q, k, q_block, kv_block)
+    scale = hd ** -0.5
+    qpad = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    do_p = jnp.pad(do, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    out_p = jnp.pad(out, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    lse_p = jnp.pad(lse, ((0, 0), (0, pq), (0, 0)))
+    qp = jnp.pad(q_positions, (0, pq))
+    kpad = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vpad = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    kp = jnp.pad(kv_positions, (0, pk))
+    kval = jnp.pad(kv_valid, (0, pk))
+    nq, nk = (Tq + pq) // qb, (Tk + pk) // kb
+
+    qt = qpad.reshape(B, nq, qb, KV, G, hd).swapaxes(0, 1)
+    dot_ = do_p.reshape(B, nq, qb, KV, G, hd).swapaxes(0, 1)
+    outt = out_p.reshape(B, nq, qb, KV, G, hd).swapaxes(0, 1)
+    lset = lse_p.reshape(B, nq, qb, KV, G).swapaxes(0, 1)
+    qpt = qp.reshape(nq, qb)
+    kt = kpad.reshape(B, nk, kb, KV, hd).swapaxes(0, 1)
+    vt = vpad.reshape(B, nk, kb, KV, hd).swapaxes(0, 1)
+    kpt = kp.reshape(nk, kb)
+    kvt = kval.reshape(nk, kb)
+
+    tiles = _tri_tile_list(nq, nk, qb, kb, Tq + pq, Tk + pk, causal=causal,
+                           window=window, sequential=sequential)
+    ti = jnp.asarray([t[0] for t in tiles], jnp.int32)
+    tj = jnp.asarray([t[1] for t in tiles], jnp.int32)
+
+    def step(carry, inp):
+        dq_buf, dk_buf, dv_buf = carry
+        i, j = inp
+        idx = partial(jax.lax.dynamic_index_in_dim, keepdims=False)
+        qi, doi, oi, lsei, qposi = (idx(qt, i, 0), idx(dot_, i, 0),
+                                    idx(outt, i, 0), idx(lset, i, 0),
+                                    idx(qpt, i, 0))
+        ki, vi, kposi, kvali = (idx(kt, j, 0), idx(vt, j, 0), idx(kpt, j, 0),
+                                idx(kvt, j, 0))
+        Di = jnp.sum(doi.astype(jnp.float32) * oi.astype(jnp.float32), -1)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qi, ki,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _mask_tile(qposi, kposi, kvali, causal=causal, window=window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lsei[..., None])                   # (B,qb,KV,G,s)
+        dv_t = jnp.einsum("bqkgs,bqkgd->bskd", p, doi.astype(jnp.float32))
+        dp = jnp.einsum("bqkgd,bskd->bqkgs", doi.astype(jnp.float32),
+                        vi.astype(jnp.float32))
+        ds = p * (dp - Di[..., None])
+        dq_t = scale * jnp.einsum("bqkgs,bskd->bqkgd", ds,
+                                  ki.astype(jnp.float32))
+        dk_t = scale * jnp.einsum("bqkgs,bqkgd->bskd", ds,
+                                  qi.astype(jnp.float32))
+        upd = jax.lax.dynamic_update_index_in_dim
+        dq_buf = upd(dq_buf, idx(dq_buf, i, 0) + dq_t, i, 0)
+        dk_buf = upd(dk_buf, idx(dk_buf, j, 0) + dk_t, j, 0)
+        dv_buf = upd(dv_buf, idx(dv_buf, j, 0) + dv_t, j, 0)
+        return (dq_buf, dk_buf, dv_buf), None
+
+    dq0 = jnp.zeros((nq, B, qb, KV, G, hd), jnp.float32)
+    dk0 = jnp.zeros((nk, B, kb, KV, hd), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+    (dqs, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0), (ti, tj))
+    dq = dqs.swapaxes(0, 1).reshape(B, Tq + pq, H, hd)[:, :Tq]
+    dk = dk.swapaxes(0, 1).reshape(B, Tk + pk, KV, hd)[:, :Tk]
+    dv = dv.swapaxes(0, 1).reshape(B, Tk + pk, KV, hd)[:, :Tk]
+    z = lambda a: jnp.zeros(a.shape, jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            z(q_positions), z(kv_positions), z(kv_valid))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
+def _flash_attention(q, k, v, q_positions, kv_positions, kv_valid,
+                     causal, window, q_block, kv_block, sequential):
+    out, _ = _flash_fwd_tiles(q, k, v, q_positions, kv_positions, kv_valid,
+                              causal, window, q_block, kv_block, sequential)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, q_positions, kv_positions, kv_valid,
+                   causal, window, q_block, kv_block, sequential):
+    out, lse = _flash_fwd_tiles(q, k, v, q_positions, kv_positions, kv_valid,
+                                causal, window, q_block, kv_block, sequential)
+    return out, (q, k, v, q_positions, kv_positions, kv_valid, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, q_block, kv_block, sequential, res, do):
+    return _flash_bwd_tiles(res, do, causal, window, q_block, kv_block,
+                            sequential)
+
+
+_flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def chunked_attention(
+    q: Array, k: Array, v: Array,
+    q_positions: Array, kv_positions: Array, kv_valid: Array,
+    *, causal: bool, window: int | None,
+    q_block: int = 512, kv_block: int = 1024,
+    sequential_positions: bool = False,
+) -> Array:
+    """Flash attention (online softmax over KV tiles, recomputing backward).
+
+    q: (B, Tq, H, hd); k, v: (B, Tk, KV, hd); positions are (T,) absolute.
+    H must be a multiple of KV (GQA).  Returns (B, Tq, H, hd).  Residual
+    memory is O(T·H·hd) (out + lse), not O(T²): the backward pass recomputes
+    probability tiles — the flash-attention trade that makes prefill_32k and
+    train_4k fit.
+
+    ``sequential_positions=True`` (callers with arange positions) enables
+    static triangular/window tile skipping — half the FLOPs for causal,
+    O(T·w) for sliding-window prefill.
+    """
+    return _flash_attention(q, k, v, q_positions, kv_positions, kv_valid,
+                            causal, window, q_block, kv_block,
+                            sequential_positions)
+
+
+def reference_attention(q, k, v, q_positions, kv_positions, kv_valid,
+                        *, causal, window):
+    """O(T²)-memory oracle used by tests to validate the flash path."""
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Tq, KV, G, hd) * (hd ** -0.5)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k,
+                   preferred_element_type=jnp.float32)
+    mask = _mask_tile(q_positions, kv_positions, kv_valid,
+                      causal=causal, window=window)
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[None, :, None, None, None], p, 0.0)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, Tq, H, hd)
+
+
+# ------------------------------------------------------------------ decode
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     kv_positions: Array, kv_valid: Array,
+                     q_position: Array, *, window: int | None) -> Array:
+    """Single-step attention. q: (B, 1, H, hd); caches: (B, S, KV, hd).
+
+    ``kv_positions``/``kv_valid`` are (B, S) — ring buffers pass their
+    absolute slot positions so windowing works after wrap-around.
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd) * (hd ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    mask = kv_valid & (kv_positions <= q_position[:, None])
+    if window is not None:
+        mask = mask & (q_position[:, None] - kv_positions < window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, hd)
+
+
+# ------------------------------------------------------------------ caches
+@dataclasses.dataclass
+class KVCache:
+    """Full or ring-buffer KV cache (ring when ``window`` is set)."""
+    k: Array            # (B, S, KV, hd)
+    v: Array
+    positions: Array    # (B, S) absolute position stored in each slot
+    valid: Array        # (B, S) bool
+
+    @staticmethod
+    def init(batch: int, size: int, n_kv: int, hd: int, dtype) -> "KVCache":
+        return KVCache(
+            k=jnp.zeros((batch, size, n_kv, hd), dtype),
+            v=jnp.zeros((batch, size, n_kv, hd), dtype),
+            positions=jnp.zeros((batch, size), jnp.int32),
+            valid=jnp.zeros((batch, size), bool),
+        )
+
+    def update(self, k_new: Array, v_new: Array, pos: Array) -> "KVCache":
+        """Insert one token (k_new: (B, 1, KV, hd)) at slot pos % S."""
+        S = self.k.shape[1]
+        slot = (pos % S).astype(jnp.int32)                      # (B,)
+        b = jnp.arange(self.k.shape[0])
+        return KVCache(
+            k=self.k.at[b, slot].set(k_new[:, 0]),
+            v=self.v.at[b, slot].set(v_new[:, 0]),
+            positions=self.positions.at[b, slot].set(pos.astype(jnp.int32)),
+            valid=self.valid.at[b, slot].set(True),
+        )
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v", "positions", "valid"], meta_fields=[])
+
+
+def attention_block(p, x: Array, positions: Array, *, theta: float,
+                    causal: bool = True, window: int | None = None,
+                    return_kv: bool = False):
+    """Full-sequence self-attention (train / prefill).
+
+    ``return_kv=True`` also returns a KVCache seeded with this sequence —
+    full length for ATTN, ring-compacted to ``window`` slots for ATTN_SWA
+    (slot of position p is p % window, matching ``KVCache.update``).
+    """
+    B, T = x.shape[:2]
+    q, k, v = qkv_proj(p, x)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    pos1d = positions[0]
+    valid = jnp.ones_like(pos1d, bool)
+    o = chunked_attention(q, k, v, pos1d, pos1d, valid,
+                          causal=causal, window=window,
+                          sequential_positions=True)
+    out = out_proj(p, o)
+    if not return_kv:
+        return out
+    posB = jnp.broadcast_to(pos1d[None, :], (B, T)).astype(jnp.int32)
+    if window is None:
+        cache = KVCache(k=k, v=v, positions=posB,
+                        valid=jnp.ones((B, T), bool))
+    elif T <= window:
+        # Ring cache must be exactly `window` slots; slot p%window == p here.
+        pad = window - T
+        cache = KVCache(
+            k=jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            v=jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            positions=jnp.pad(posB, ((0, 0), (0, pad))),
+            valid=jnp.pad(jnp.ones((B, T), bool), ((0, 0), (0, pad))),
+        )
+    else:
+        # Keep the last `window` tokens, placed at slot (position % window):
+        # slot s holds source index T - window + (s - T) % window.
+        W = window
+        s = jnp.arange(W)
+        src = T - W + (s - T) % W
+        cache = KVCache(k=k[:, src], v=v[:, src], positions=posB[:, src],
+                        valid=jnp.ones((B, W), bool))
+    return out, cache
+
+
+def attention_decode(p, x: Array, pos: Array, cache: KVCache, *, theta: float,
+                     window: int | None = None) -> tuple[Array, KVCache]:
+    """One-token decode. x: (B, 1, d); pos: (B,) current absolute position."""
+    q, k, v = qkv_proj(p, x)
+    q = apply_rope(q, pos[:, None], theta)
+    k = apply_rope(k, pos[:, None], theta)
+    cache = cache.update(k, v, pos)
+    o = decode_attention(q, cache.k, cache.v, cache.positions, cache.valid,
+                         pos, window=window)
+    return out_proj(p, o), cache
+
+
+# ------------------------------------------------------------ cross-attn
+def init_cross_attention(key, d_model, n_heads, n_kv_heads, hd, *, dtype):
+    p = init_attention(key, d_model, n_heads, n_kv_heads, hd,
+                       qkv_bias=False, dtype=dtype)
+    p["gate"] = jnp.zeros((), jnp.float32)   # tanh-gated residual (Flamingo-style)
+    return p
+
+
+def cross_attention_block(p, x: Array, mem_k: Array, mem_v: Array) -> Array:
+    """Cross-attention to precomputed memory KV (B, M, KV, hd)."""
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    M = mem_k.shape[1]
+    pos = jnp.arange(M)
+    o = chunked_attention(q, mem_k, mem_v,
+                          jnp.zeros((x.shape[1],), jnp.int32), pos,
+                          jnp.ones((M,), bool), causal=False, window=None)
+    return (jnp.tanh(p["gate"]) * out_proj(p, o).astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def cross_kv(p, mem: Array):
+    """Project modality memory once: (B, M, d) -> KV tensors."""
+    k = jnp.einsum("bmd,dhk->bmhk", mem, p["wk"])
+    v = jnp.einsum("bmd,dhk->bmhk", mem, p["wv"])
+    return k, v

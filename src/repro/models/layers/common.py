@@ -1,0 +1,70 @@
+"""Shared layer primitives: norms, embeddings, RoPE, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def variance_scaling(key, shape, fan_in, dtype=jnp.float32, scale=1.0):
+    std = (scale / max(fan_in, 1)) ** 0.5
+    return jax.random.normal(key, shape, dtype) * std
+
+
+# ---------------------------------------------------------------- norms
+def init_norm(d: int, kind: str = "rmsnorm"):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x: Array, kind: str = "rmsnorm", eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (nrm * p["scale"]).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    nrm = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (nrm * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def group_norm_heads(x: Array, eps: float = 1e-6) -> Array:
+    """Per-head group norm (xLSTM block output norm). x: (..., H, hd)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embed
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p, tokens: Array) -> Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: (B, T, H, hd); positions: (B, T) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, T, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation_fn(name: str):
+    return {"gelu": jax.nn.gelu, "relu": jax.nn.relu, "silu": jax.nn.silu,
+            "swish": jax.nn.silu}[name]

@@ -1,0 +1,133 @@
+"""Mamba (S6) selective-state-space mixer with sequential scan + decode step.
+
+TPU adaptation note (DESIGN.md §2): the original CUDA kernel fuses the
+selective scan in SRAM; materializing the (B, T, d_inner, d_state) scan
+inputs — as a naive associative-scan port would — is infeasible at Jamba
+scale.  We keep the recurrence as a ``lax.scan`` over time with an
+O(B·d_inner·d_state) carry (the TPU-idiomatic equivalent: sequential in T,
+fully parallel over d_inner on the VPU), and an O(1) single-step update for
+decode — which is what makes ``long_500k`` native for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import variance_scaling
+from .scan_utils import chunked_scan
+
+Array = jax.Array
+
+
+def init_mamba(key, d_model: int, *, expand: int, d_state: int, d_conv: int,
+               dtype=jnp.float32):
+    di = expand * d_model
+    dtr = max(d_model // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": variance_scaling(ks[0], (d_model, 2 * di), d_model, dtype),
+        "conv_w": variance_scaling(ks[1], (d_conv, di), d_conv, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": variance_scaling(ks[2], (di, dtr + 2 * d_state), di, dtype),
+        "dt_proj_w": variance_scaling(ks[3], (dtr, di), dtr, dtype),
+        "dt_proj_b": jnp.log(jnp.expm1(  # softplus^-1 of dt in [1e-3, 1e-1]
+            jnp.exp(jax.random.uniform(ks[4], (di,),
+                    minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))).astype(dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": variance_scaling(ks[5], (di, d_model), di, dtype),
+    }
+
+
+@dataclasses.dataclass
+class MambaState:
+    conv: Array   # (B, d_conv-1, di) rolling conv inputs
+    ssm: Array    # (B, di, d_state)
+
+    @staticmethod
+    def init(batch: int, di: int, d_state: int, d_conv: int, dtype) -> "MambaState":
+        return MambaState(
+            conv=jnp.zeros((batch, d_conv - 1, di), dtype),
+            ssm=jnp.zeros((batch, di, d_state), jnp.float32),
+        )
+
+
+jax.tree_util.register_dataclass(
+    MambaState, data_fields=["conv", "ssm"], meta_fields=[])
+
+
+def _ssm_params(p, xc: Array):
+    """xc: (..., di) post-conv activations -> (dt, B, C) selective params."""
+    d_state = p["A_log"].shape[1]
+    dtr = p["dt_proj_w"].shape[0]
+    dbc = jnp.einsum("...i,ij->...j", xc, p["x_proj"])
+    dt, Bm, Cm = jnp.split(dbc, [dtr, dtr + d_state], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("...r,ri->...i", dt, p["dt_proj_w"])
+                         + p["dt_proj_b"])                       # (..., di)
+    return dt, Bm, Cm
+
+
+def _ssm_step(p, h: Array, xc: Array, dt: Array, Bm: Array, Cm: Array):
+    """One recurrence step. h: (B, di, S); xc/dt: (B, di); Bm/Cm: (B, S)."""
+    A = -jnp.exp(p["A_log"])                                     # (di, S)
+    dA = jnp.exp(dt[..., None] * A)                              # (B, di, S)
+    dB = dt[..., None] * Bm[:, None, :]                          # (B, di, S)
+    h = dA * h + dB * xc[..., None].astype(jnp.float32)
+    y = jnp.einsum("bis,bs->bi", h, Cm) + p["D"] * xc
+    return h, y.astype(xc.dtype)
+
+
+def mamba_forward(p, x: Array, *, return_state: bool = False):
+    """Full-sequence mixer. x: (B, T, d_model) -> (B, T, d_model).
+
+    ``return_state=True`` additionally returns the final MambaState so a
+    prefill pass can hand off to incremental decode."""
+    B, T, _ = x.shape
+    di = p["conv_b"].shape[0]
+    d_conv = p["conv_w"].shape[0]
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                            # (B, T, di)
+    # Depthwise causal conv along T.
+    xpad = jnp.pad(xi, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    windows = jnp.stack([xpad[:, i : i + T] for i in range(d_conv)], axis=0)
+    xc = jax.nn.silu(jnp.einsum("kbti,ki->bti", windows, p["conv_w"])
+                     + p["conv_b"])
+    dt, Bm, Cm = _ssm_params(p, xc)                              # (B, T, ·)
+
+    def step(h, inp):
+        xc_t, dt_t, B_t, C_t = inp
+        h, y = _ssm_step(p, h, xc_t, dt_t, B_t, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, di, p["A_log"].shape[1]), jnp.float32)
+    h_last, ys = chunked_scan(
+        step, h0,
+        (xc.swapaxes(0, 1), dt.swapaxes(0, 1),
+         Bm.swapaxes(0, 1), Cm.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1)                                        # (B, T, di)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bti,id->btd", y, p["out_proj"])
+    if not return_state:
+        return out
+    # Conv tail: last (d_conv-1) pre-conv inputs for incremental decode.
+    tail = xi[:, -(d_conv - 1):, :] if T >= d_conv - 1 else jnp.pad(
+        xi, ((0, 0), (d_conv - 1 - T, 0), (0, 0)))
+    return out, MambaState(conv=tail, ssm=h_last)
+
+
+def mamba_decode(p, x: Array, state: MambaState) -> tuple[Array, MambaState]:
+    """One-token step. x: (B, 1, d_model)."""
+    d_conv = p["conv_w"].shape[0]
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xi, z = jnp.split(xz[:, 0], 2, axis=-1)                      # (B, di)
+    conv_in = jnp.concatenate([state.conv, xi[:, None, :]], axis=1)  # (B, k, di)
+    xc = jax.nn.silu(jnp.einsum("bki,ki->bi", conv_in, p["conv_w"])
+                     + p["conv_b"])
+    dt, Bm, Cm = _ssm_params(p, xc)
+    h, y = _ssm_step(p, state.ssm, xc, dt, Bm, Cm)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None, :]
+    return out, MambaState(conv=conv_in[:, 1:], ssm=h)

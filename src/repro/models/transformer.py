@@ -1,0 +1,433 @@
+"""Composable decoder stack covering all assigned architecture families.
+
+The stack is organized as ``n_superblocks`` repetitions of
+``cfg.block_pattern`` (e.g. Jamba's ``(mamba×3, attn, mamba×4)`` with MoE on
+alternate positions).  Parameters of all super-blocks are *stacked* on a
+leading axis and the forward pass is a single ``lax.scan`` over super-blocks
+— the lowered HLO contains one super-block body regardless of depth (100-layer
+models compile in seconds) and maps directly onto pipeline-friendly sharding.
+
+Three entry points:
+  * ``forward``      — full-sequence training/prefill; returns per-token
+                       logits + sequence-pooled logits (the SSL head).
+  * ``init_cache``   — per-layer decode state (full KV / ring KV / SSM / xLSTM).
+  * ``decode_step``  — one-token autoregressive step through all layers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ATTN, ATTN_SWA, MAMBA, MLSTM, SLSTM, XATTN, ModelConfig
+from .layers import attention as attn_lib
+from .layers import mamba as mamba_lib
+from .layers import moe as moe_lib
+from .layers import xlstm as xlstm_lib
+from .layers.attention import KVCache
+from .layers.common import apply_norm, embed, init_embedding, init_norm, variance_scaling
+from .layers.mamba import MambaState
+from .layers.mlp import apply_mlp, init_mlp
+from .layers.xlstm import MLSTMState, SLSTMState
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ===================================================================== init
+def _init_layer(key, cfg: ModelConfig, kind: str, pattern_pos: int,
+                *, force_dense_ffn: bool = False) -> dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": init_norm(cfg.d_model, cfg.norm)}
+    if kind in (ATTN, ATTN_SWA):
+        p["attn"] = attn_lib.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            qkv_bias=cfg.qkv_bias, dtype=dt)
+    elif kind == XATTN:
+        p["attn"] = attn_lib.init_cross_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype=dt)
+    elif kind == MAMBA:
+        p["mamba"] = mamba_lib.init_mamba(
+            ks[0], cfg.d_model, expand=cfg.mamba_expand,
+            d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv, dtype=dt)
+    elif kind == SLSTM:
+        p["block"] = xlstm_lib.init_slstm(ks[0], cfg.d_model, cfg.n_heads, dt)
+        return p
+    elif kind == MLSTM:
+        p["block"] = xlstm_lib.init_mlstm(ks[0], cfg.d_model, cfg.n_heads, dt)
+        return p
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0:
+        p["norm2"] = init_norm(cfg.d_model, cfg.norm)
+        if cfg.moe_layer(pattern_pos) and not force_dense_ffn:
+            p["moe"] = moe_lib.init_moe(
+                ks[1], cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts,
+                cfg.activation, dt)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, cfg.n_superblocks + 4)
+    params: dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": init_norm(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = variance_scaling(
+            keys[1], (cfg.d_model, cfg.vocab_size), cfg.d_model, dt)
+    if cfg.modality_dim:
+        params["modality_proj"] = variance_scaling(
+            keys[2], (cfg.modality_dim, cfg.d_model), cfg.modality_dim, dt)
+
+    def init_superblock(k):
+        kk = jax.random.split(k, len(cfg.block_pattern))
+        return [
+            _init_layer(kk[i], cfg, kind, i)
+            for i, kind in enumerate(cfg.block_pattern)
+        ]
+
+    n_scan = cfg.n_superblocks - (1 if cfg.first_layer_dense else 0)
+    if cfg.first_layer_dense:
+        params["first_block"] = [
+            _init_layer(keys[3], cfg, cfg.block_pattern[0], 0,
+                        force_dense_ffn=True)
+        ]
+    sb = [init_superblock(keys[4 + i]) for i in range(n_scan)]
+    params["superblocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *sb)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, *, param_dtype: str | None = None) -> dict:
+    """ShapeDtypeStruct param tree (no allocation) — used by the dry-run."""
+    dt = param_dtype or cfg.dtype
+
+    def go():
+        return init_params(cfg, jax.random.PRNGKey(0))
+
+    shapes = jax.eval_shape(go)
+    if param_dtype is None:
+        return shapes
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(dt)), shapes)
+
+
+# =================================================================== forward
+def _apply_mixer(p, cfg: ModelConfig, kind: str, x: Array, positions: Array,
+                 mem: Array | None) -> Array:
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == ATTN:
+        return attn_lib.attention_block(p["attn"], h, positions,
+                                        theta=cfg.rope_theta)
+    if kind == ATTN_SWA:
+        return attn_lib.attention_block(p["attn"], h, positions,
+                                        theta=cfg.rope_theta,
+                                        window=cfg.sliding_window)
+    if kind == XATTN:
+        mk, mv = attn_lib.cross_kv(p["attn"], mem)
+        return attn_lib.cross_attention_block(p["attn"], h, mk, mv)
+    if kind == MAMBA:
+        return mamba_lib.mamba_forward(p["mamba"], h)
+    if kind == SLSTM:
+        return xlstm_lib.slstm_forward(p["block"], h)
+    if kind == MLSTM:
+        return xlstm_lib.mlstm_forward(p["block"], h)
+    raise ValueError(kind)
+
+
+def _apply_ffn(p, cfg: ModelConfig, x: Array) -> tuple[Array, Array]:
+    """Post-mixer FFN (dense or MoE). Returns (out, moe_aux)."""
+    if "norm2" not in p:
+        return jnp.zeros_like(x), jnp.float32(0)
+    h = apply_norm(p["norm2"], x, cfg.norm)
+    if "moe" in p:
+        y, aux = moe_lib.apply_moe(p["moe"], h, top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   activation=cfg.activation,
+                                   dispatch_groups=cfg.moe_dispatch_groups)
+        return y, aux
+    return apply_mlp(p["mlp"], h, cfg.activation), jnp.float32(0)
+
+
+def _superblock_fwd(block_params: list, cfg: ModelConfig, x: Array,
+                    positions: Array, mem: Array | None) -> tuple[Array, Array]:
+    aux = jnp.float32(0)
+    for i, kind in enumerate(cfg.block_pattern[: len(block_params)]):
+        p = block_params[i]
+        x = x + _apply_mixer(p, cfg, kind, x, positions, mem)
+        y, a = _apply_ffn(p, cfg, x)
+        x = x + y
+        aux = aux + a
+    return x, aux
+
+
+def _constrain(x, sharding):
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def output_head(params: dict, cfg: ModelConfig) -> Array:
+    """(d_model, vocab) output projection (tied or separate)."""
+    return (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["lm_head"])
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Array, *,
+            modality_embeds: Array | None = None,
+            positions: Array | None = None,
+            remat: bool = True,
+            act_sharding=None,
+            with_logits: bool = True) -> dict:
+    """Full-sequence forward.
+
+    Returns {'logits': (B,T,V), 'pooled_logits': (B,V), 'moe_aux': scalar}.
+    ``pooled_logits`` is the SSL head: the model's output distribution for
+    the mean-pooled sequence representation (paper's p_θ(x_i) analogue).
+    """
+    B, T = tokens.shape
+    x = _constrain(embed(params["embed"], tokens), act_sharding)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    mem = None
+    if modality_embeds is not None:
+        mem = jnp.einsum("bmd,de->bme", modality_embeds,
+                         params["modality_proj"]).astype(x.dtype)
+
+    aux_total = jnp.float32(0)
+    if cfg.first_layer_dense:
+        x, aux0 = _superblock_fwd(params["first_block"], cfg, x, positions, mem)
+        aux_total = aux_total + aux0
+
+    def body(carry, sb_params):
+        x, aux = carry
+        x = _constrain(x, act_sharding)      # keep batch on the data axes
+        x, a = _superblock_fwd(sb_params, cfg, x, positions, mem)
+        return (_constrain(x, act_sharding), aux + a), None
+
+    if not remat or cfg.remat_policy == "none":
+        body_fn = body
+    elif cfg.remat_policy == "dots":
+        # Save matmul outputs, recompute elementwise — trades HBM for the
+        # 2× forward recompute of full remat (§Perf iteration).
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        body_fn = jax.checkpoint(body)
+    (x, aux_total), _ = jax.lax.scan(body_fn, (x, aux_total),
+                                     params["superblocks"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = output_head(params, cfg)
+    logits = jnp.einsum("btd,dv->btv", x, head) if with_logits else None
+    pooled = jnp.mean(x, axis=1)
+    pooled_logits = jnp.einsum("bd,dv->bv", pooled, head)
+    return {"logits": logits, "hidden": x, "pooled_logits": pooled_logits,
+            "moe_aux": aux_total}
+
+
+# =================================================================== prefill
+def _apply_mixer_with_state(p, cfg: ModelConfig, kind: str, x: Array,
+                            positions: Array, mem: Array | None):
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == ATTN:
+        return attn_lib.attention_block(p["attn"], h, positions,
+                                        theta=cfg.rope_theta, return_kv=True)
+    if kind == ATTN_SWA:
+        return attn_lib.attention_block(p["attn"], h, positions,
+                                        theta=cfg.rope_theta,
+                                        window=cfg.sliding_window,
+                                        return_kv=True)
+    if kind == XATTN:
+        mk, mv = attn_lib.cross_kv(p["attn"], mem)
+        y = attn_lib.cross_attention_block(p["attn"], h, mk, mv)
+        B, M = mk.shape[0], mk.shape[1]
+        cache = KVCache(k=mk, v=mv,
+                        positions=jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32)[None], (B, M)),
+                        valid=jnp.ones((B, M), bool))
+        return y, cache
+    if kind == MAMBA:
+        return mamba_lib.mamba_forward(p["mamba"], h, return_state=True)
+    if kind == SLSTM:
+        return xlstm_lib.slstm_forward(p["block"], h, return_state=True)
+    if kind == MLSTM:
+        return xlstm_lib.mlstm_forward(p["block"], h, return_state=True)
+    raise ValueError(kind)
+
+
+def _pad_kv_cache(c: KVCache, cache_len: int) -> KVCache:
+    T = c.k.shape[1]
+    if T >= cache_len:
+        return c
+    pad = cache_len - T
+    return KVCache(
+        k=jnp.pad(c.k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        v=jnp.pad(c.v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        positions=jnp.pad(c.positions, ((0, 0), (0, pad))),
+        valid=jnp.pad(c.valid, ((0, 0), (0, pad))),
+    )
+
+
+def _superblock_prefill(block_params: list, cfg: ModelConfig, x: Array,
+                        positions: Array, mem: Array | None,
+                        cache_len: int | None):
+    caches = []
+    for i, kind in enumerate(cfg.block_pattern[: len(block_params)]):
+        p = block_params[i]
+        y, c = _apply_mixer_with_state(p, cfg, kind, x, positions, mem)
+        if kind == ATTN and cache_len is not None:
+            c = _pad_kv_cache(c, cache_len)
+        x = x + y
+        f, _ = _apply_ffn(p, cfg, x)
+        x = x + f
+        caches.append(c)
+    return x, caches
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: Array, *,
+            modality_embeds: Array | None = None,
+            cache_len: int | None = None,
+            act_sharding=None) -> tuple[dict, Any]:
+    """Prefill pass: full-sequence forward that also fills the decode cache.
+
+    Returns ({'logits': (B,T,V)}, cache) where cache matches ``init_cache``'s
+    structure (slot layout identical to incremental ``decode_step`` updates).
+    """
+    B, T = tokens.shape
+    x = _constrain(embed(params["embed"], tokens), act_sharding)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    mem = None
+    if modality_embeds is not None:
+        mem = jnp.einsum("bmd,de->bme", modality_embeds,
+                         params["modality_proj"]).astype(x.dtype)
+    cache: dict[str, Any] = {}
+    if cfg.first_layer_dense:
+        x, first_caches = _superblock_prefill(params["first_block"], cfg, x,
+                                              positions, mem, cache_len)
+        cache["first"] = first_caches
+
+    def body(x, sb_params):
+        x = _constrain(x, act_sharding)
+        x, caches = _superblock_prefill(sb_params, cfg, x, positions, mem,
+                                        cache_len)
+        return _constrain(x, act_sharding), caches
+
+    x, layer_caches = jax.lax.scan(body, x, params["superblocks"])
+    cache["layers"] = layer_caches
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("btd,dv->btv", x, head)
+    return {"logits": logits}, cache
+
+
+# ==================================================================== decode
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int, dt):
+    if kind == ATTN:
+        return KVCache.init(batch, cache_len, cfg.n_kv_heads, cfg.hd, dt)
+    if kind == ATTN_SWA:
+        w = min(cfg.sliding_window or cache_len, cache_len)
+        return KVCache.init(batch, w, cfg.n_kv_heads, cfg.hd, dt)
+    if kind == XATTN:
+        # Cross KV is static per request; stored at its modality length.
+        m = max(cfg.modality_tokens, 1)
+        return KVCache.init(batch, m, cfg.n_kv_heads, cfg.hd, dt)
+    if kind == MAMBA:
+        di = cfg.mamba_expand * cfg.d_model
+        return MambaState.init(batch, di, cfg.mamba_d_state,
+                               cfg.mamba_d_conv, dt)
+    if kind == SLSTM:
+        return SLSTMState.init(batch, cfg.n_heads, cfg.d_model // cfg.n_heads)
+    if kind == MLSTM:
+        di = 2 * cfg.d_model
+        return MLSTMState.init(batch, cfg.n_heads, di // cfg.n_heads, di)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Decode cache pytree: per pattern position, stacked over super-blocks."""
+    dt = _dtype(cfg)
+    n_scan = cfg.n_superblocks - (1 if cfg.first_layer_dense else 0)
+
+    def stacked(kind):
+        one = _layer_cache(cfg, kind, batch, cache_len, dt)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_scan,) + a.shape), one)
+
+    cache = {"layers": [stacked(k) for k in cfg.block_pattern]}
+    if cfg.first_layer_dense:
+        cache["first"] = [
+            _layer_cache(cfg, cfg.block_pattern[0], batch, cache_len, dt)
+        ]
+    return cache
+
+
+def _decode_layer(p, cfg: ModelConfig, kind: str, x: Array, pos: Array,
+                  cache):
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind in (ATTN, ATTN_SWA):
+        w = cfg.sliding_window if kind == ATTN_SWA else None
+        y, cache = attn_lib.attention_decode(p["attn"], h, pos, cache,
+                                             theta=cfg.rope_theta, window=w)
+    elif kind == XATTN:
+        y = attn_lib.decode_attention(
+            jnp.einsum("btd,dhk->bthk", h, p["attn"]["wq"]),
+            cache.k, cache.v, cache.positions,
+            cache.valid, jnp.full((x.shape[0],), jnp.iinfo(jnp.int32).max - 1,
+                                  jnp.int32),
+            window=None)
+        y = (jnp.tanh(p["attn"]["gate"])
+             * attn_lib.out_proj(p["attn"], y).astype(jnp.float32)
+             ).astype(x.dtype)
+    elif kind == MAMBA:
+        y, cache = mamba_lib.mamba_decode(p["mamba"], h, cache)
+    elif kind == SLSTM:
+        y, cache = xlstm_lib.slstm_decode(p["block"], h, cache)
+        return x + y, cache
+    elif kind == MLSTM:
+        y, cache = xlstm_lib.mlstm_decode(p["block"], h, cache)
+        return x + y, cache
+    else:
+        raise ValueError(kind)
+    x = x + y
+    f, _ = _apply_ffn(p, cfg, x)
+    return x + f, cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache, tokens: Array,
+                pos: Array, *, act_sharding=None) -> tuple[Array, Any]:
+    """One autoregressive step. tokens: (B, 1); pos: (B,). Returns (logits, cache)."""
+    x = _constrain(embed(params["embed"], tokens), act_sharding)
+    cache = dict(cache)
+    if cfg.first_layer_dense:
+        x, first_cache = _decode_layer(
+            params["first_block"][0], cfg, cfg.block_pattern[0], x, pos,
+            cache["first"][0])
+        cache["first"] = [first_cache]
+
+    def body(x, scanned):
+        sb_params, layer_caches = scanned
+        x = _constrain(x, act_sharding)
+        new_caches = []
+        for i, kind in enumerate(cfg.block_pattern):
+            x, c = _decode_layer(sb_params[i], cfg, kind, x, pos,
+                                 layer_caches[i])
+            new_caches.append(c)
+        return _constrain(x, act_sharding), new_caches
+
+    x, new_layer_caches = jax.lax.scan(
+        body, x, (params["superblocks"], cache["layers"]))
+    cache["layers"] = new_layer_caches
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("btd,dv->btv", x, head)
+    return logits, cache

@@ -1,0 +1,5 @@
+from .optimizers import Optimizer, adagrad, adam, sgd
+from .schedule import parallel_lr_schedule, constant_lr
+
+__all__ = ["Optimizer", "adagrad", "adam", "sgd",
+           "parallel_lr_schedule", "constant_lr"]

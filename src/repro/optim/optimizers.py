@@ -1,0 +1,94 @@
+"""Optimizers. AdaGrad is the paper's choice (§3, [Duchi et al. 2011]).
+
+Plain functional API (no optax in this container):
+``opt.init(params) -> state``, ``opt.update(grads, state, params, lr)``.
+States are pytrees mirroring the params, so they shard with the params
+under whatever sharding rule the launcher picks (DP replicates them,
+FSDP/ZeRO-1 shards them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (new_params, new_state)
+
+
+def adagrad(eps: float = 1e-8) -> Optimizer:
+    """AdaGrad: G += g²; p -= lr·g/(√G+eps)."""
+
+    def init(params):
+        return {"accum": jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        accum = jax.tree.map(
+            lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+            state["accum"], grads)
+        new_params = jax.tree.map(
+            lambda p, g, a: (p.astype(jnp.float32)
+                             - lr * g.astype(jnp.float32)
+                             / (jnp.sqrt(a) + eps)).astype(p.dtype),
+            params, grads, accum)
+        return new_params, {"accum": accum}
+
+    return Optimizer("adagrad", init, update)
+
+
+def sgd(momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_params, state
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state["mu"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, mu)
+        return new_params, {"mu": mu}
+
+    return Optimizer("sgd", init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        mh = 1.0 - b1 ** t.astype(jnp.float32)
+        vh = 1.0 - b2 ** t.astype(jnp.float32)
+        new_params = jax.tree.map(
+            lambda p, m_, v_: (p.astype(jnp.float32)
+                               - lr * (m_ / mh) / (jnp.sqrt(v_ / vh) + eps)
+                               ).astype(p.dtype),
+            params, m, v)
+        return new_params, {"m": m, "v": v, "t": t}
+
+    return Optimizer("adam", init, update)

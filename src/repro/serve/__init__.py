@@ -1,0 +1,1 @@
+from .decode import generate, sample_tokens, serve_step

@@ -1,0 +1,65 @@
+"""Serving loop: batched autoregressive decode with per-layer caches.
+
+``serve_step`` is the unit the decode-shape dry-runs lower: ONE new token for
+every sequence in the batch against a KV cache of ``seq_len`` (full cache,
+ring buffer for sliding-window layers, O(1) state for SSM/xLSTM layers).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def sample_tokens(logits: Array, key, *, temperature: float = 0.0,
+                  top_k: int = 0) -> Array:
+    """logits: (B, 1, V) -> (B, 1) token ids."""
+    lg = logits[:, -1].astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+    lg = lg / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(lg, top_k)[0][:, -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return jax.random.categorical(key, lg)[:, None].astype(jnp.int32)
+
+
+def serve_step(params: dict, cfg: ModelConfig, cache: Any, tokens: Array,
+               pos: Array, key, *, temperature: float = 0.0,
+               act_sharding=None) -> tuple[Array, Any]:
+    """One decode step: (B,1) token in -> (B,1) token out + updated cache."""
+    logits, cache = tf.decode_step(params, cfg, cache, tokens, pos,
+                                   act_sharding=act_sharding)
+    next_tok = sample_tokens(logits, key, temperature=temperature)
+    return next_tok, cache
+
+
+def generate(params: dict, cfg: ModelConfig, prompt: Array, *, steps: int,
+             cache_len: int, temperature: float = 0.0, seed: int = 0) -> Array:
+    """Greedy/sampled generation: prefill via repeated decode (simple path)."""
+    B, Tp = prompt.shape
+    cache = tf.init_cache(cfg, B, cache_len)
+    key = jax.random.PRNGKey(seed)
+
+    step = jax.jit(lambda c, t, p, k: serve_step(
+        params, cfg, c, t, p, k, temperature=temperature))
+
+    toks = prompt
+    # Feed the prompt token by token (teacher-forced prefill).
+    for t in range(Tp - 1):
+        _, cache = step(cache, toks[:, t : t + 1],
+                        jnp.full((B,), t, jnp.int32), key)
+    cur = toks[:, -1:]
+    outs = [toks]
+    for t in range(steps):
+        key, sub = jax.random.split(key)
+        cur, cache = step(cache, cur, jnp.full((B,), Tp - 1 + t, jnp.int32),
+                          sub)
+        outs.append(cur)
+    return jnp.concatenate(outs, axis=1)

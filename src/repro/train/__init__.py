@@ -1,0 +1,3 @@
+from .checkpoint import load_checkpoint, save_checkpoint
+from .train_step import dnn_ssl_step, lm_supervised_step, lm_train_step
+from .trainer import TrainResult, evaluate_dnn, train_dnn_ssl

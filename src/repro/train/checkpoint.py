@@ -1,0 +1,43 @@
+"""Flat-npz checkpointing for arbitrary param/optimizer pytrees.
+
+Path-keyed, so checkpoints are stable across process restarts and can be
+saved from sharded arrays (``jax.device_get`` gathers before writing).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint"]
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for p, leaf in leaves_with_path:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
+                        for q in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,23 @@
+import numpy as np
+import pytest
+
+# NB: no XLA_FLAGS here on purpose — tests and benches must see ONE device;
+# only launch/dryrun.py forces the 512-device placeholder platform.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_graph_setup():
+    """Shared synthetic corpus + affinity graph + meta-batch plan."""
+    from repro.core import build_affinity_graph, plan_meta_batches
+    from repro.data import make_corpus
+
+    corpus = make_corpus(1200, n_classes=8, input_dim=48, manifold_dim=6,
+                         seed=0)
+    graph = build_affinity_graph(corpus.X, k=10)
+    plan = plan_meta_batches(graph, batch_size=192, n_classes=8, seed=0)
+    return corpus, graph, plan

@@ -1,0 +1,139 @@
+"""Flash attention vs O(T²) oracle: shape/dtype/mask sweeps + gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers.attention import (KVCache, chunked_attention,
+                                           decode_attention,
+                                           reference_attention)
+
+
+def _mk(rng, B, Tq, Tk, H, KV, hd, dtype=jnp.float32):
+    q = jnp.asarray(rng.normal(size=(B, Tq, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Tk, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Tk, KV, hd)), dtype)
+    qp = jnp.arange(Tk - Tq, Tk)
+    kp = jnp.arange(Tk)
+    kval = jnp.ones(Tk, bool)
+    return q, k, v, qp, kp, kval
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 9),
+                                           (False, None)])
+@pytest.mark.parametrize("shapes", [(1, 16, 16, 4, 4, 8),
+                                    (2, 33, 47, 8, 2, 16),
+                                    (3, 5, 64, 6, 3, 32)])
+def test_flash_matches_reference(rng, causal, window, shapes):
+    B, Tq, Tk, H, KV, hd = shapes
+    q, k, v, qp, kp, kval = _mk(rng, B, Tq, Tk, H, KV, hd)
+    a = chunked_attention(q, k, v, qp, kp, kval, causal=causal, window=window,
+                          q_block=8, kv_block=16)
+    b = reference_attention(q, k, v, qp, kp, kval, causal=causal,
+                            window=window)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_flash_gradients_match_reference(rng):
+    B, Tq, Tk, H, KV, hd = 2, 20, 20, 4, 2, 8
+    q, k, v, qp, kp, kval = _mk(rng, B, Tq, Tk, H, KV, hd)
+
+    def loss(fn, q, k, v):
+        o = fn(q, k, v, qp, kp, kval, causal=True, window=None)
+        return jnp.sum(o * o)
+
+    import functools
+    f_flash = functools.partial(chunked_attention, q_block=8, kv_block=8)
+    g1 = jax.grad(lambda *a: loss(f_flash, *a), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: loss(reference_attention, *a),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_flash_bf16_tolerance(rng):
+    B, Tq, Tk, H, KV, hd = 2, 32, 32, 4, 4, 16
+    q, k, v, qp, kp, kval = _mk(rng, B, Tq, Tk, H, KV, hd, jnp.bfloat16)
+    a = chunked_attention(q, k, v, qp, kp, kval, causal=True, window=None,
+                          q_block=16, kv_block=16)
+    b = reference_attention(q, k, v, qp, kp, kval, causal=True, window=None)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=3e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(Tq=st.integers(1, 40), Tk=st.integers(1, 60),
+       qb=st.integers(1, 16), kb=st.integers(1, 16),
+       causal=st.booleans(), seed=st.integers(0, 50))
+def test_flash_property_sweep(Tq, Tk, qb, kb, causal, seed):
+    if causal and Tq > Tk:
+        Tq = Tk
+    rng = np.random.default_rng(seed)
+    q, k, v, qp, kp, kval = _mk(rng, 1, Tq, Tk, 2, 2, 8)
+    a = chunked_attention(q, k, v, qp, kp, kval, causal=causal, window=None,
+                          q_block=qb, kv_block=kb)
+    b = reference_attention(q, k, v, qp, kp, kval, causal=causal, window=None)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+def test_decode_matches_full_attention_last_row(rng):
+    """Single-query decode over a cache == last row of full attention."""
+    B, T, H, KV, hd = 2, 17, 4, 2, 8
+    q, k, v, qp, kp, kval = _mk(rng, B, T, T, H, KV, hd)
+    full = reference_attention(q, k, v, kp, kp, kval, causal=True,
+                               window=None)
+    cache = KVCache(k=k, v=v,
+                    positions=jnp.tile(kp[None], (B, 1)),
+                    valid=jnp.ones((B, T), bool))
+    o = decode_attention(q[:, -1:], cache.k, cache.v, cache.positions,
+                         cache.valid, jnp.full((B,), T - 1), window=None)
+    np.testing.assert_allclose(np.asarray(o[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-5)
+
+
+def test_ring_cache_update_wraps(rng):
+    cache = KVCache.init(1, 4, 1, 2, jnp.float32)
+    for pos in range(6):
+        kv = jnp.full((1, 1, 1, 2), float(pos))
+        cache = cache.update(kv, kv, jnp.array([pos]))
+    # slots hold positions 4,5,2,3 (pos%4)
+    np.testing.assert_array_equal(np.asarray(cache.positions[0]),
+                                  [4, 5, 2, 3])
+    assert bool(cache.valid.all())
+
+
+@pytest.mark.parametrize("window", [None, 16])
+def test_triangular_tile_skipping_matches_reference(rng, window):
+    """sequential_positions=True must be numerically identical (it only
+    skips fully-masked tiles)."""
+    B, T, H, KV, hd = 2, 50, 4, 2, 8
+    q, k, v, qp, kp, kval = _mk(rng, B, T, T, H, KV, hd)
+    a = chunked_attention(q, k, v, qp, kp, kval, causal=True, window=window,
+                          q_block=8, kv_block=8, sequential_positions=True)
+    b = reference_attention(q, k, v, qp, kp, kval, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+    # gradients too
+    f = lambda q, k, v: jnp.sum(chunked_attention(
+        q, k, v, qp, kp, kval, causal=True, window=window, q_block=8,
+        kv_block=8, sequential_positions=True) ** 2)
+    g = lambda q, k, v: jnp.sum(reference_attention(
+        q, k, v, qp, kp, kval, causal=True, window=window) ** 2)
+    g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for x, y in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-4)
+
+
+def test_triangular_tile_count():
+    from repro.models.layers.attention import _tri_tile_list
+    # causal square: n(n+1)/2 tiles
+    assert len(_tri_tile_list(8, 8, 64, 64, 512, 512, causal=True,
+                              window=None, sequential=True)) == 36
+    # window of one block: ~2 tiles per row
+    t = _tri_tile_list(8, 8, 64, 64, 512, 512, causal=True, window=64,
+                       sequential=True)
+    assert len(t) <= 16
+    # non-sequential: full grid
+    assert len(_tri_tile_list(8, 8, 64, 64, 512, 512, causal=True,
+                              window=None, sequential=False)) == 64

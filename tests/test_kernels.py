@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.graph_reg import graph_reg_pairwise_pallas
+from repro.kernels.ops import graph_reg_pairwise
+from repro.kernels.pairwise import rbf_affinity_pallas
+
+
+@pytest.mark.parametrize("B,C", [(16, 32), (64, 100), (128, 512),
+                                 (130, 700), (33, 1000), (256, 256)])
+def test_graph_reg_kernel_matches_oracle(rng, B, C):
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    W = np.abs(rng.normal(size=(B, B))) * (rng.random((B, B)) < 0.2)
+    W = jnp.asarray(W, jnp.float32)
+    got = graph_reg_pairwise_pallas(logp, W, interpret=True)
+    want = ref.graph_reg_pairwise_ref(logp, W)
+    np.testing.assert_allclose(float(got), float(want), rtol=3e-5)
+
+
+@pytest.mark.parametrize("bi,bj,bc", [(32, 32, 64), (128, 64, 128),
+                                      (16, 128, 32)])
+def test_graph_reg_kernel_block_shape_invariance(rng, bi, bj, bc):
+    B, C = 96, 200
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    W = jnp.asarray(np.abs(rng.normal(size=(B, B))), jnp.float32)
+    got = graph_reg_pairwise_pallas(logp, W, bi=bi, bj=bj, bc=bc,
+                                    interpret=True)
+    want = ref.graph_reg_pairwise_ref(logp, W)
+    np.testing.assert_allclose(float(got), float(want), rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_graph_reg_dtypes(rng, dtype):
+    B, C = 64, 128
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32)).astype(dtype)
+    W = jnp.asarray(np.abs(rng.normal(size=(B, B))), dtype)
+    got = graph_reg_pairwise_pallas(logp, W, interpret=True)
+    want = ref.graph_reg_pairwise_ref(logp.astype(jnp.float32),
+                                      W.astype(jnp.float32))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(float(got), float(want), rtol=tol)
+
+
+def test_graph_reg_custom_vjp_matches_autodiff(rng):
+    B, C = 48, 90
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    W = jnp.asarray(np.abs(rng.normal(size=(B, B))), jnp.float32)
+    g1 = jax.grad(lambda lp: graph_reg_pairwise(lp, W, use_pallas=True))(logp)
+    g2 = jax.grad(lambda lp: ref.graph_reg_pairwise_ref(lp, W))(logp)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4,
+                               atol=1e-6)
+    gw1 = jax.grad(lambda w: graph_reg_pairwise(logp, w, use_pallas=True))(W)
+    gw2 = jax.grad(lambda w: ref.graph_reg_pairwise_ref(logp, w))(W)
+    np.testing.assert_allclose(np.asarray(gw1), np.asarray(gw2), rtol=1e-4,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("N,M,D", [(32, 32, 16), (64, 64, 351), (130, 70, 64),
+                                   (33, 257, 100), (128, 128, 256)])
+def test_rbf_affinity_kernel_matches_oracle(rng, N, M, D):
+    x = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
+    got = rbf_affinity_pallas(x, y, 2.0, interpret=True)
+    want = ref.rbf_affinity_ref(x, y, 2.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_rbf_matches_host_graph_construction(rng):
+    """Device kernel agrees with the host-side numpy path used for the graph."""
+    from repro.core.affinity import pairwise_sq_dists
+    x = rng.normal(size=(60, 30)).astype(np.float32)
+    sigma = 1.7
+    d = np.sqrt(pairwise_sq_dists(x, x))
+    want = np.exp(-d / (2 * sigma * sigma))
+    got = rbf_affinity_pallas(jnp.asarray(x), jnp.asarray(x), sigma,
+                              interpret=True)
+    # host path is float64, kernel is float32; sqrt near zero amplifies noise
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(2, 64), C=st.integers(2, 128), seed=st.integers(0, 20))
+def test_graph_reg_property_sweep(B, C, seed):
+    rng = np.random.default_rng(seed)
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    W = jnp.asarray(np.abs(rng.normal(size=(B, B))), jnp.float32)
+    got = graph_reg_pairwise_pallas(logp, W, bi=16, bj=16, bc=32,
+                                    interpret=True)
+    want = ref.graph_reg_pairwise_ref(logp, W)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,T,H,KV,hd,bq,bk",
+                         [(2, 64, 4, 2, 32, 16, 16),
+                          (1, 100, 4, 4, 16, 32, 32),
+                          (2, 48, 8, 2, 64, 16, 8)])
+def test_pallas_flash_fwd_matches_reference(rng, B, T, H, KV, hd, bq, bk):
+    """MXU-tiled flash forward == O(T²) oracle (interpret mode)."""
+    from repro.kernels.flash_attention import flash_attention_gqa_pallas
+    from repro.models.layers.attention import reference_attention
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    got = flash_attention_gqa_pallas(q, k, v, causal=True, bq=bq, bk=bk,
+                                     interpret=True)
+    pos = jnp.arange(T)
+    want = reference_attention(q, k, v, pos, pos, jnp.ones(T, bool),
+                               causal=True, window=None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)

@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests (reduced variants, §ARCHITECTURES) and
+train/prefill/decode consistency across all families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, config_for_shape, get_config
+from repro.core.ssl_loss import SSLHyper
+from repro.models import transformer as tf
+from repro.models.config import ATTN, ATTN_SWA
+from repro.optim import adagrad
+from repro.train.train_step import lm_train_step
+
+
+def _inputs(cfg, B=2, T=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.modality_tokens:
+        kw["modality_embeds"] = jax.random.normal(
+            key, (B, cfg.modality_tokens, cfg.modality_dim), jnp.float32)
+    return toks, kw
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced variant: one forward + one SSL train step, shapes + no NaNs."""
+    cfg = get_config(arch).reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 2, 16
+    toks, kw = _inputs(cfg, B, T)
+    out = tf.forward(params, cfg, toks, remat=False, **kw)
+    assert out["logits"].shape == (B, T, cfg.vocab_size)
+    assert out["pooled_logits"].shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(out["logits"]).any())
+
+    opt = adagrad()
+    opt_state = opt.init(params)
+    batch = {
+        "tokens": toks, "targets": jnp.roll(toks, -1, 1),
+        "loss_mask": jnp.ones((B, T), jnp.float32),
+        "W": jnp.ones((1, B, B), jnp.float32)
+             - jnp.eye(B)[None],
+        "seq_labels": jnp.zeros((1, B), jnp.int32),
+        "seq_label_mask": jnp.ones((1, B), jnp.float32),
+    }
+    batch.update(kw)
+    hyper = SSLHyper(gamma=1e-2, kappa=1e-3, weight_decay=0.0)
+    new_params, _, metrics = jax.jit(
+        lambda p, s, b: lm_train_step(p, s, b, cfg=cfg, hyper=hyper, opt=opt,
+                                      lr=jnp.float32(1e-3)))(
+        params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss/total"]))
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.is_moe:  # capacity dispatch differs between batch sizes; disable drops
+        cfg = dataclasses.replace(cfg, capacity_factor=float(2 * cfg.n_experts))
+    params = tf.init_params(cfg, jax.random.PRNGKey(1))
+    B, T = 2, 12
+    toks, kw = _inputs(cfg, B, T, seed=2)
+    out = tf.forward(params, cfg, toks, remat=False, **kw)
+    _, cache = tf.prefill(params, cfg, toks[:, :-1], cache_len=T + 4, **kw)
+    logits, _ = tf.decode_step(params, cfg, cache, toks[:, -1:],
+                               jnp.full((B,), T - 1, jnp.int32))
+    a = np.asarray(out["logits"][:, -1], np.float32)
+    b = np.asarray(logits[:, 0], np.float32)
+    tol = 3e-2 if cfg.dtype == "bfloat16" else 2e-3
+    assert np.abs(a - b).max() / (np.abs(a).std() + 1e-9) < tol, arch
+
+
+def test_prefill_logits_equal_forward_logits():
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(3))
+    toks, _ = _inputs(cfg, 2, 16, seed=3)
+    out = tf.forward(params, cfg, toks, remat=False)
+    pre, _ = tf.prefill(params, cfg, toks)
+    np.testing.assert_allclose(np.asarray(pre["logits"]),
+                               np.asarray(out["logits"]), atol=1e-4)
+
+
+def test_long_context_config_switches_to_sliding_window():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        cfg_long = config_for_shape(cfg, INPUT_SHAPES["long_500k"])
+        assert ATTN not in cfg_long.block_pattern, arch
+        if any(k == ATTN_SWA for k in cfg_long.block_pattern):
+            assert cfg_long.sliding_window is not None
+
+
+def test_param_counts_match_spec_sizes():
+    expect = {
+        "qwen2-1.5b": 1.5e9, "kimi-k2-1t-a32b": 1.0e12,
+        "qwen1.5-0.5b": 0.5e9, "xlstm-125m": 125e6,
+        "musicgen-large": 2.4e9, "yi-9b": 9e9,
+        "llama-3.2-vision-90b": 90e9, "jamba-1.5-large-398b": 398e9,
+        "mixtral-8x7b": 47e9, "phi4-mini-3.8b": 3.8e9,
+    }
+    for arch, target in expect.items():
+        n = get_config(arch).param_count()
+        assert 0.6 * target < n < 1.45 * target, (arch, n, target)
+
+
+def test_remat_forward_matches_no_remat():
+    cfg = get_config("yi-9b").reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(4))
+    toks, _ = _inputs(cfg, 2, 16, seed=4)
+    a = tf.forward(params, cfg, toks, remat=False)["logits"]
+    b = tf.forward(params, cfg, toks, remat=True)["logits"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_abstract_params_match_real_params():
+    cfg = get_config("mixtral-8x7b").reduced()
+    real = tf.init_params(cfg, jax.random.PRNGKey(0))
+    abstract = tf.abstract_params(cfg)
+    ra = jax.tree.map(lambda a: (a.shape, str(a.dtype)), real)
+    ab = jax.tree.map(lambda a: (a.shape, str(a.dtype)), abstract)
+    assert ra == ab

@@ -1,0 +1,105 @@
+"""Eq. 2 / Eq. 3 objective: decomposition identity, masking, gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ssl_loss import (SSLHyper, entropy, graph_regularizer,
+                                 pairwise_cross_entropy_term, ssl_objective,
+                                 ssl_objective_kl_form)
+
+
+def _rand_batch(rng, B=24, C=7, label_frac=0.4):
+    logits = jnp.asarray(rng.normal(size=(B, C)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, C, B))
+    mask = jnp.asarray((rng.random(B) < label_frac).astype(np.float32))
+    W = np.abs(rng.normal(size=(B, B))) * (rng.random((B, B)) < 0.25)
+    W = (W + W.T) / 2
+    np.fill_diagonal(W, 0.0)
+    return logits, labels, mask, jnp.asarray(W, jnp.float32)
+
+
+def test_eq3_equals_eq2_up_to_constants(rng):
+    """Eq. 3 is Eq. 2 minus θ-constants ⇒ identical gradients."""
+    logits, labels, mask, W = _rand_batch(rng)
+    hyp = SSLHyper(gamma=0.05, kappa=0.01, weight_decay=0.0)
+    g3 = jax.grad(lambda lg: ssl_objective(lg, labels, mask, W, hyp,
+                                           reduction="sum")[0])(logits)
+    g2 = jax.grad(lambda lg: ssl_objective_kl_form(lg, labels, mask, W,
+                                                   hyp))(logits)
+    np.testing.assert_allclose(np.asarray(g3), np.asarray(g2), atol=1e-5)
+
+
+def test_graph_term_is_nonnegative_kl(rng):
+    """γΣ w_ij D(p_i‖p_j) ≥ 0; with κ=0 the regularizer is a weighted KL."""
+    logits, _, _, W = _rand_batch(rng)
+    logp = jax.nn.log_softmax(logits)
+    val = graph_regularizer(logp, W, gamma=1.0, kappa=0.0)
+    assert float(val) >= -1e-5
+
+
+def test_graph_term_zero_for_identical_predictions(rng):
+    B, C = 16, 5
+    logits = jnp.tile(jnp.asarray(rng.normal(size=(1, C)), jnp.float32),
+                      (B, 1))
+    W = jnp.asarray(np.abs(rng.normal(size=(B, B))), jnp.float32)
+    logp = jax.nn.log_softmax(logits)
+    val = graph_regularizer(logp, W, gamma=1.0, kappa=0.0)
+    np.testing.assert_allclose(float(val), 0.0, atol=1e-4)
+
+
+def test_unlabeled_points_ignored_by_supervised_term(rng):
+    logits, labels, _, W = _rand_batch(rng)
+    hyp = SSLHyper(gamma=0.0, kappa=0.0, weight_decay=0.0)
+    zero_mask = jnp.zeros(logits.shape[0])
+    loss, _ = ssl_objective(logits, labels, zero_mask, W, hyp,
+                            reduction="sum")
+    np.testing.assert_allclose(float(loss), 0.0, atol=1e-6)
+    # gradient w.r.t. unlabeled rows is zero when γ=κ=0
+    one_mask = jnp.zeros(logits.shape[0]).at[0].set(1.0)
+    g = jax.grad(lambda lg: ssl_objective(lg, labels, one_mask, W, hyp,
+                                          reduction="sum")[0])(logits)
+    np.testing.assert_allclose(np.asarray(g)[1:], 0.0, atol=1e-7)
+
+
+def test_entropy_regularizer_favors_uniform(rng):
+    """κ-term: gradient step on −κH should push toward uniform (higher H)."""
+    logits = jnp.asarray(rng.normal(size=(8, 6)) * 3, jnp.float32)
+    labels = jnp.zeros(8, jnp.int32)
+    mask = jnp.zeros(8)
+    W = jnp.zeros((8, 8))
+    hyp = SSLHyper(gamma=0.0, kappa=1.0, weight_decay=0.0)
+    loss_fn = lambda lg: ssl_objective(lg, labels, mask, W, hyp,
+                                       reduction="sum")[0]
+    g = jax.grad(loss_fn)(logits)
+    stepped = logits - 0.5 * g
+    h0 = entropy(jax.nn.log_softmax(logits)).mean()
+    h1 = entropy(jax.nn.log_softmax(stepped)).mean()
+    assert float(h1) > float(h0)
+
+
+def test_pairwise_term_matmul_identity(rng):
+    """−ΣW⊙(P·logPᵀ) equals the explicit double loop."""
+    logits, _, _, W = _rand_batch(rng, B=12, C=5)
+    logp = np.asarray(jax.nn.log_softmax(logits))
+    p = np.exp(logp)
+    ref = sum(W[i, j] * -(p[i] * logp[j]).sum()
+              for i in range(12) for j in range(12))
+    val = pairwise_cross_entropy_term(jnp.asarray(logp), W)
+    np.testing.assert_allclose(float(val), float(ref), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(B=st.integers(2, 32), C=st.integers(2, 20), seed=st.integers(0, 100))
+def test_gradient_finite_everywhere(B, C, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(B, C)) * 5, jnp.float32)
+    labels = jnp.asarray(rng.integers(0, C, B))
+    mask = jnp.asarray((rng.random(B) < 0.5).astype(np.float32))
+    W = jnp.asarray(np.abs(rng.normal(size=(B, B))), jnp.float32)
+    hyp = SSLHyper(gamma=0.1, kappa=0.01, weight_decay=1e-4)
+    loss, _ = ssl_objective(logits, labels, mask, W, hyp, params={"w": logits})
+    g = jax.grad(lambda lg: ssl_objective(lg, labels, mask, W, hyp)[0])(logits)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(g)).all()

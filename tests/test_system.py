@@ -1,0 +1,130 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claim (graph-SSL ≫ supervised at low label ratios) is verified
+quantitatively in ``benchmarks/bench_label_ratio.py``; here we check the
+training loop's mechanics quickly: losses fall, the graph term acts, the
+parallel decomposition is equivalent to sequential averaging.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SSLHyper, build_affinity_graph, plan_meta_batches
+from repro.data import MetaBatchPipeline, drop_labels, make_corpus
+from repro.models.dnn import DNNConfig, dnn_forward, init_dnn
+from repro.optim import adagrad
+from repro.train import train_dnn_ssl
+from repro.train.train_step import dnn_ssl_loss, dnn_ssl_step
+
+
+@pytest.fixture(scope="module")
+def ssl_setup():
+    full = make_corpus(1600, n_classes=8, input_dim=48, manifold_dim=6,
+                       seed=0)
+    corpus = dataclasses.replace(
+        full, X=full.X[:1200], y=full.y[:1200],
+        label_mask=full.label_mask[:1200])
+    labeled = drop_labels(corpus, 0.02, seed=1)
+    graph = build_affinity_graph(corpus.X, k=10)
+    plan = plan_meta_batches(graph, batch_size=192, n_classes=8, seed=0)
+    test = (full.X[1200:], full.y[1200:])
+    return labeled, graph, plan, test
+
+
+def test_training_reduces_loss_and_graph_term(ssl_setup):
+    labeled, graph, plan, test = ssl_setup
+    pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=1, seed=0)
+    cfg = DNNConfig(input_dim=48, hidden_dim=96, n_hidden=2, n_classes=8,
+                    dropout=0.0)
+    res = train_dnn_ssl(pipe.epoch, cfg=cfg,
+                        hyper=SSLHyper(0.3, 1e-4, 1e-5), n_epochs=6,
+                        dropout=0.0, base_lr=5e-3, eval_data=test, seed=0)
+    losses = [h["loss/total"] for h in res.history]
+    assert losses[-1] < losses[0]
+    accs = [h["eval/acc"] for h in res.history]
+    assert accs[-1] > accs[0]
+    assert accs[-1] > 0.4
+
+
+def test_ssl_training_improves_over_supervised(ssl_setup):
+    """The paper's core claim, small-scale: at 2% labels the graph
+    regularizer buys accuracy over the supervised-only baseline."""
+    labeled, graph, plan, test = ssl_setup
+    pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=1, seed=0)
+    cfg = DNNConfig(input_dim=48, hidden_dim=256, n_hidden=3, n_classes=8,
+                    dropout=0.0)
+    kw = dict(n_epochs=10, dropout=0.0, base_lr=1e-2, eval_data=test, seed=0)
+    ssl = train_dnn_ssl(pipe.epoch, cfg=cfg, hyper=SSLHyper(1.0, 1e-4, 1e-5),
+                        **kw)
+    sup = train_dnn_ssl(pipe.epoch, cfg=cfg, hyper=SSLHyper(0.0, 0.0, 1e-5),
+                        **kw)
+    acc_ssl = max(h["eval/acc"] for h in ssl.history)
+    acc_sup = max(h["eval/acc"] for h in sup.history)
+    assert acc_ssl > acc_sup + 0.03, (acc_ssl, acc_sup)
+
+
+def test_parallel_decomposition_equals_sequential_average(ssl_setup):
+    """§2.3: the k-worker loss is the mean of per-worker losses — a step on
+    k stacked batches equals averaging the k gradients (sync SGD)."""
+    labeled, graph, plan, test = ssl_setup
+    pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=2, seed=0)
+    batch = next(iter(pipe.epoch()))
+    jb = {k: jnp.asarray(v) for k, v in dataclasses.asdict(batch).items()}
+    cfg = DNNConfig(input_dim=48, hidden_dim=32, n_hidden=1, n_classes=8)
+    hyper = SSLHyper(0.1, 1e-4, 0.0)
+    params = init_dnn(cfg, jax.random.PRNGKey(0))
+
+    loss2, _ = dnn_ssl_loss(params, jb, cfg, hyper)
+    per = []
+    for w in range(2):
+        sub = {k: v[w : w + 1] for k, v in jb.items()}
+        li, _ = dnn_ssl_loss(params, sub, cfg, hyper)
+        per.append(float(li))
+    np.testing.assert_allclose(float(loss2), np.mean(per), rtol=1e-6)
+
+    g2 = jax.grad(lambda p: dnn_ssl_loss(p, jb, cfg, hyper)[0])(params)
+    g_avg = jax.tree.map(
+        lambda *gs: sum(gs) / 2,
+        *[jax.grad(lambda p: dnn_ssl_loss(
+            p, {k: v[w : w + 1] for k, v in jb.items()}, cfg, hyper)[0]
+        )(params) for w in range(2)])
+    for a, b in zip(jax.tree.leaves(g2), jax.tree.leaves(g_avg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_pallas_pairwise_impl_plugs_into_training(ssl_setup):
+    """The fused kernel is a drop-in pairwise_impl for the SSL objective."""
+    from repro.kernels import graph_reg_pairwise
+    labeled, graph, plan, test = ssl_setup
+    pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=1, seed=0)
+    batch = next(iter(pipe.epoch()))
+    jb = {k: jnp.asarray(v) for k, v in dataclasses.asdict(batch).items()}
+    cfg = DNNConfig(input_dim=48, hidden_dim=32, n_hidden=1, n_classes=8)
+    hyper = SSLHyper(0.1, 1e-4, 0.0)
+    params = init_dnn(cfg, jax.random.PRNGKey(0))
+    l_ref, _ = dnn_ssl_loss(params, jb, cfg, hyper)
+    import functools
+    impl = functools.partial(graph_reg_pairwise, use_pallas=True)
+    l_ker, _ = dnn_ssl_loss(params, jb, cfg, hyper, pairwise_impl=impl)
+    np.testing.assert_allclose(float(l_ker), float(l_ref), rtol=1e-4)
+
+
+def test_async_sgd_converges(ssl_setup):
+    """§4 future-work variant: async (stale-gradient) SSL training still
+    learns at small staleness."""
+    from repro.train.async_trainer import train_dnn_ssl_async
+    from repro.train.trainer import evaluate_dnn
+    labeled, graph, plan, test = ssl_setup
+    pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=1, seed=0)
+    cfg = DNNConfig(input_dim=48, hidden_dim=96, n_hidden=2, n_classes=8,
+                    dropout=0.0)
+    params, hist = train_dnn_ssl_async(
+        pipe.epoch, cfg=cfg, hyper=SSLHyper(0.3, 1e-4, 1e-5), n_epochs=5,
+        n_workers=4, max_staleness=2, base_lr=5e-3, seed=0,
+        eval_fn=lambda p: evaluate_dnn(p, *test))
+    accs = [h["eval/acc"] for h in hist]
+    assert accs[-1] > accs[0]
+    assert accs[-1] > 0.4
