@@ -5,14 +5,17 @@ The paper motivates meta-batches by two failure modes it compares against:
     (no within-batch edges, Fig 1a);
   * pure graph-partitioned batches — regularizer active but gradients
     biased (homogeneous, low-entropy batches → poor convergence, §2).
-Meta-batches must beat BOTH under the same SSL objective.
+Meta-batches must beat BOTH under the same SSL objective.  Each strategy is
+just a different ``BatchConfig.pipeline`` registry name on an otherwise
+identical ``ExperimentConfig``.
 """
 from __future__ import annotations
 
-from repro.core import SSLHyper, plan_meta_batches
-from repro.data import MetaBatchPipeline, drop_labels, random_batch_pipeline
-from repro.models.dnn import DNNConfig
-from repro.train import train_dnn_ssl
+import dataclasses
+
+from repro.api import (BatchConfig, Experiment, ExperimentConfig,
+                       ObjectiveConfig, TrainConfig)
+from repro.data import drop_labels
 
 from .common import corpus_and_graph
 
@@ -20,30 +23,28 @@ from .common import corpus_and_graph
 def run(quick: bool = True) -> list[str]:
     corpus, test, graph, plan_meta = corpus_and_graph()
     labeled = drop_labels(corpus, 0.05, seed=1)
-    plan_graph = plan_meta_batches(graph, batch_size=512,
-                                   n_classes=corpus.n_classes, seed=0,
-                                   shuffle_blocks=False)
     epochs = 8 if quick else 16
-    cfg = DNNConfig(input_dim=128, hidden_dim=512, n_hidden=3,
-                    n_classes=corpus.n_classes, dropout=0.0)
-    hyper = SSLHyper(1.0, 1e-4, 1e-5)
-
-    def rand_epoch():
-        it = random_batch_pipeline(labeled, graph, 512, seed=0)
-        return (next(it) for _ in range(len(plan_meta.meta_batches)))
-
-    pipes = {
-        "metabatch": MetaBatchPipeline(labeled, graph, plan_meta,
-                                       seed=0).epoch,
-        "graphbatch": MetaBatchPipeline(labeled, graph, plan_graph,
-                                        with_neighbor=False, seed=0).epoch,
-        "random": rand_epoch,
+    base = ExperimentConfig(
+        objective=ObjectiveConfig(gamma=1.0, kappa=1e-4, weight_decay=1e-5),
+        train=TrainConfig(n_epochs=epochs, base_lr=1e-2, dropout=0.0,
+                          hidden_dim=512, n_hidden=3))
+    variants = {
+        # The paper's method: reuse the shared shuffled plan.
+        "metabatch": (BatchConfig(pipeline="meta_batch", batch_size=512),
+                      plan_meta),
+        # Consecutive mini-blocks, no neighbour: plan rebuilt un-shuffled.
+        "graphbatch": (BatchConfig(pipeline="graph_batch", batch_size=512,
+                                   shuffle_blocks=False), None),
+        # Random batches; plan pins batch size + epoch length for parity.
+        "random": (BatchConfig(pipeline="random_batch", batch_size=512),
+                   plan_meta),
     }
     rows = []
-    for name, epoch_fn in pipes.items():
-        res = train_dnn_ssl(epoch_fn, cfg=cfg, hyper=hyper, n_epochs=epochs,
-                            dropout=0.0, base_lr=1e-2, eval_data=test, seed=0)
-        acc = max(h["eval/acc"] for h in res.history)
+    for name, (batch_cfg, plan) in variants.items():
+        cfg = dataclasses.replace(base, name=name, batch=batch_cfg)
+        res = Experiment(cfg, corpus=labeled, eval_data=test, graph=graph,
+                         plan=plan).run()
+        acc = res.best("eval/acc")
         secs = sum(h["seconds"] for h in res.history)
         rows.append(f"ablation/{name}@0.05,{secs*1e6/epochs:.0f},acc={acc:.4f}")
     return rows

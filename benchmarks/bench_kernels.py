@@ -1,6 +1,10 @@
 """Kernel micro-benchmarks: fused Pallas graph-regularizer and RBF-affinity
 vs their jnp oracles (interpret mode on CPU — correctness-representative,
 not TPU timings), plus the jnp oracle timings that the trainer uses on CPU.
+
+Implementations are looked up from the ``repro.api`` PAIRWISE registry —
+the same path the trainer takes when a config says ``pairwise="ref"`` or
+``"pallas"``.
 """
 from __future__ import annotations
 
@@ -8,9 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import PAIRWISE
 from repro.kernels import ref
-from repro.kernels.graph_reg import graph_reg_pairwise_pallas
-from repro.kernels.pairwise import rbf_affinity_pallas
 
 from .common import timeit
 
@@ -18,17 +21,19 @@ from .common import timeit
 def run(quick: bool = True) -> list[str]:
     rng = np.random.default_rng(0)
     rows = []
+    impl_ref = PAIRWISE.get("ref")
+    impl_pallas = PAIRWISE.get("pallas")
     for B, C in [(512, 39), (1024, 39)] + ([] if quick else [(2048, 39)]):
         logp = jax.nn.log_softmax(
             jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
         W = jnp.asarray(np.abs(rng.normal(size=(B, B)))
                         * (rng.random((B, B)) < 0.05), jnp.float32)
-        f_ref = jax.jit(ref.graph_reg_pairwise_ref)
+        f_ref = jax.jit(impl_ref)
         t_ref = timeit(lambda: f_ref(logp, W).block_until_ready())
         rows.append(f"kernel/graph_reg_ref_B{B},{t_ref:.1f},jnp_oracle")
         if quick:
-            t_pal = timeit(lambda: graph_reg_pairwise_pallas(
-                logp, W, interpret=True).block_until_ready(), repeats=2)
+            t_pal = timeit(
+                lambda: impl_pallas(logp, W).block_until_ready(), repeats=2)
             rows.append(
                 f"kernel/graph_reg_pallas_B{B},{t_pal:.1f},interpret_mode")
     for N, D in [(1024, 351)]:

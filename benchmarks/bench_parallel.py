@@ -7,15 +7,17 @@ container — the k workers are mathematically exact (vmapped k-batch steps,
 test_system.py proves equivalence to per-worker gradient averaging) but
 execute serially here; we report per-epoch accuracy plus the modeled
 speedup = k / (sync overhead 2×) from the paper's observed constant.
+
+Each worker count is the same ``ExperimentConfig`` with a different
+``TrainConfig.n_workers``.
 """
 from __future__ import annotations
 
-import numpy as np
+import dataclasses
 
-from repro.core import SSLHyper
-from repro.data import MetaBatchPipeline, drop_labels
-from repro.models.dnn import DNNConfig
-from repro.train import train_dnn_ssl
+from repro.api import (Experiment, ExperimentConfig, ObjectiveConfig,
+                       TrainConfig)
+from repro.data import drop_labels
 
 from .common import corpus_and_graph
 
@@ -25,16 +27,17 @@ def run(quick: bool = True) -> list[str]:
     labeled = drop_labels(corpus, 0.05, seed=1)   # the paper's 5% scenario
     workers = [1, 2, 4] if quick else [1, 2, 4, 8]
     epochs = 6 if quick else 15
-    cfg = DNNConfig(input_dim=128, hidden_dim=512, n_hidden=3,
-                    n_classes=corpus.n_classes, dropout=0.0)
+    base = ExperimentConfig(
+        objective=ObjectiveConfig(gamma=1.0, kappa=1e-4, weight_decay=1e-5),
+        train=TrainConfig(n_epochs=epochs, base_lr=1e-3, lr_reset_epochs=10,
+                          dropout=0.0, hidden_dim=512, n_hidden=3))
     rows = []
     for k in workers:
-        pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=k, seed=0)
-        res = train_dnn_ssl(pipe.epoch, cfg=cfg,
-                            hyper=SSLHyper(1.0, 1e-4, 1e-5),
-                            n_epochs=epochs, n_workers=k, base_lr=1e-3,
-                            lr_reset_epochs=10, dropout=0.0,
-                            eval_data=test, seed=0)
+        cfg = dataclasses.replace(
+            base, name=f"parallel-{k}w",
+            train=dataclasses.replace(base.train, n_workers=k))
+        res = Experiment(cfg, corpus=labeled, eval_data=test, graph=graph,
+                         plan=plan).run()
         acc = [h["eval/acc"] for h in res.history]
         secs = sum(h["seconds"] for h in res.history)
         rows.append(f"fig3b/workers={k},{secs*1e6/epochs:.0f},"

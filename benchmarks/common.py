@@ -1,29 +1,30 @@
-"""Shared benchmark fixtures: the synthetic TIMIT-like corpus + graph."""
+"""Shared benchmark fixtures, built through the ``repro.api`` layer."""
 from __future__ import annotations
 
-import dataclasses
 import functools
 import time
 
 import numpy as np
 
-from repro.core import build_affinity_graph, plan_meta_batches
-from repro.data import drop_labels, make_corpus
+from repro.api import BatchConfig, DataConfig, Experiment, ExperimentConfig
 
 
 @functools.lru_cache(maxsize=2)
 def corpus_and_graph(n: int = 6000, n_classes: int = 20, batch: int = 512,
                      seed: int = 0):
-    """Train/test split sharing one generative manifold (paper §3 protocol)."""
-    full = make_corpus(int(n * 1.25), n_classes=n_classes, input_dim=128,
-                       manifold_dim=10, seed=seed)
-    train = dataclasses.replace(
-        full, X=full.X[:n], y=full.y[:n], label_mask=full.label_mask[:n])
-    test = (full.X[n:], full.y[n:])
-    graph = build_affinity_graph(train.X, k=10)
-    plan = plan_meta_batches(graph, batch_size=batch, n_classes=n_classes,
-                             seed=seed)
-    return train, test, graph, plan
+    """Train/test split sharing one generative manifold (paper §3 protocol).
+
+    Returns ``(train_corpus, test, graph, plan)`` — the fully-labeled train
+    corpus (benchmarks drop labels per scenario), the held-out eval pair,
+    the affinity graph, and the shared meta-batch plan.
+    """
+    cfg = ExperimentConfig(
+        data=DataConfig(n=n, n_classes=n_classes, input_dim=128,
+                        manifold_dim=10, label_ratio=1.0,
+                        test_fraction=0.25, seed=seed),
+        batch=BatchConfig(batch_size=batch))
+    exp = Experiment(cfg).build()
+    return exp.corpus, exp.eval_data, exp.graph, exp.plan
 
 
 def timeit(fn, *, repeats: int = 5, warmup: int = 1) -> float:

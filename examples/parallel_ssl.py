@@ -1,8 +1,9 @@
 """Data-parallel SSL training across k workers (paper §2.3 / Fig 3b).
 
-The leading worker axis of each batch is sharded over a ``data`` mesh axis
-backed by k host devices — the same pjit pattern the production launcher
-uses on the 16×16 pod mesh — with the paper's lr = 0.001·k rule.
+Driven end to end by ``repro.api``: ``TrainConfig(execution="parallel")``
+makes the trainer shard each batch's leading worker axis over a ``("data",)``
+mesh — the same pjit pattern the production launcher uses on the 16x16 pod
+mesh — with the paper's lr = 0.001*k rule applied by the schedule.
 
     python examples/parallel_ssl.py --workers 4 --epochs 6
 """
@@ -20,63 +21,31 @@ os.environ["XLA_FLAGS"] = (
     f"--xla_force_host_platform_device_count={args.workers}")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import dataclasses  # noqa: E402
-
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.core import SSLHyper, build_affinity_graph, plan_meta_batches  # noqa: E402
-from repro.data import MetaBatchPipeline, drop_labels, make_corpus  # noqa: E402
-from repro.models.dnn import DNNConfig, init_dnn  # noqa: E402
-from repro.optim import adagrad, parallel_lr_schedule  # noqa: E402
-from repro.train import evaluate_dnn  # noqa: E402
-from repro.train.train_step import dnn_ssl_step  # noqa: E402
+from repro.api import (BatchConfig, DataConfig, Experiment,  # noqa: E402
+                       ExperimentConfig, ObjectiveConfig, TrainConfig)
 
 
 def main():
     k = args.workers
-    mesh = jax.make_mesh((k,), ("data",))
-    P = jax.sharding.PartitionSpec
-    rep = jax.sharding.NamedSharding(mesh, P())
-    shard0 = jax.sharding.NamedSharding(mesh, P("data"))
+    cfg = ExperimentConfig(
+        name=f"parallel-{k}w",
+        data=DataConfig(n=4000, n_classes=16, input_dim=128, manifold_dim=10,
+                        label_ratio=0.05),          # the paper's 5% scenario
+        batch=BatchConfig(batch_size=256),
+        objective=ObjectiveConfig(gamma=1.0, kappa=1e-4, weight_decay=1e-5),
+        train=TrainConfig(n_epochs=args.epochs, n_workers=k,
+                          execution="parallel", base_lr=1e-3,
+                          lr_reset_epochs=10, dropout=0.0,
+                          hidden_dim=512, n_hidden=3))
 
-    full = make_corpus(5000, n_classes=16, input_dim=128, manifold_dim=10,
-                       seed=0)
-    corpus = dataclasses.replace(full, X=full.X[:4000], y=full.y[:4000],
-                                 label_mask=full.label_mask[:4000])
-    test = (full.X[4000:], full.y[4000:])
-    labeled = drop_labels(corpus, 0.05, seed=1)     # the paper's 5% scenario
-    graph = build_affinity_graph(corpus.X, k=10)
-    plan = plan_meta_batches(graph, batch_size=256, n_classes=16, seed=0)
-    pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=k, seed=0)
-
-    cfg = DNNConfig(input_dim=128, hidden_dim=512, n_hidden=3, n_classes=16,
-                    dropout=0.0)
-    hyper = SSLHyper(1.0, 1e-4, 1e-5)
-    opt = adagrad()
-    params = jax.device_put(init_dnn(cfg, jax.random.PRNGKey(0)), rep)
-    opt_state = jax.device_put(opt.init(params), rep)
-    schedule = parallel_lr_schedule(1e-3, n_workers=k, reset_epochs=10)
-
-    @jax.jit
-    def step(params, opt_state, batch, lr):
-        return dnn_ssl_step(params, opt_state, batch, cfg=cfg, hyper=hyper,
-                            opt=opt, lr=lr)
-
-    print(f"mesh: {mesh} — worker axis sharded over {k} devices; "
-          f"lr rule: 0.001·{k} for 10 epochs, then 0.001")
-    with mesh:
-        for epoch in range(args.epochs):
-            lr = jnp.float32(schedule(epoch))
-            for batch in pipe.epoch():
-                jb = {key: jax.device_put(jnp.asarray(v), shard0)
-                      for key, v in dataclasses.asdict(batch).items()}
-                params, opt_state, metrics = step(params, opt_state, jb, lr)
-            acc = evaluate_dnn(jax.device_get(params), *test)
-            print(f"epoch {epoch}: lr={float(lr):.4f} "
-                  f"loss={float(metrics['loss/total']):.4f} "
-                  f"val_acc={acc:.4f}")
+    print(f"worker axis sharded over {k} logical devices; "
+          f"lr rule: 0.001*{k} for 10 epochs, then 0.001")
+    res = Experiment(cfg).run()
+    for row in res.history:
+        print(f"epoch {row['epoch']}: lr={row['lr']:.4f} "
+              f"loss={row['loss/total']:.4f} "
+              f"val_acc={row['eval/acc']:.4f}")
+    print(f"done in {res.seconds:.1f}s")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,19 @@
-"""Quickstart: graph-regularized semi-supervised training, end to end.
+"""Quickstart: graph-regularized semi-supervised training via ``repro.api``.
 
-Builds the synthetic TIMIT-like corpus, the k-NN affinity graph, the
-partitioned meta-batches, and trains the paper's DNN with the Eq.-3
-objective at 2% labels — comparing against the fully-supervised baseline.
+One ``ExperimentConfig`` describes the whole pipeline — synthetic corpus,
+k-NN affinity graph, balanced partition, meta-batch synthesis, and the
+Eq.-3 objective; ``Experiment.run()`` does the rest.  No hand-wiring of
+graph/plan/pipeline: components are selected by registry name in the config
+(``repro.api.registry`` lists them).
 
     PYTHONPATH=src python examples/quickstart.py [--epochs 10]
+    PYTHONPATH=src python examples/quickstart.py --pairwise pallas
 """
 import argparse
 import dataclasses
 
-from repro.core import SSLHyper, build_affinity_graph, plan_meta_batches
-from repro.data import MetaBatchPipeline, drop_labels, make_corpus
-from repro.models.dnn import DNNConfig
-from repro.train import train_dnn_ssl
+from repro.api import (BatchConfig, DataConfig, Experiment, ExperimentConfig,
+                       GraphConfig, ObjectiveConfig, TrainConfig)
 
 
 def main():
@@ -21,38 +22,43 @@ def main():
     ap.add_argument("--n", type=int, default=4000)
     ap.add_argument("--label-ratio", type=float, default=0.02)
     ap.add_argument("--gamma", type=float, default=1.0)
+    ap.add_argument("--pairwise", default="auto",
+                    choices=["auto", "ref", "pallas"],
+                    help="pairwise-kernel registry entry")
     args = ap.parse_args()
 
-    print("1) synthesizing corpus + affinity graph (k=10, RBF weights)…")
-    full = make_corpus(int(args.n * 1.25), n_classes=16, input_dim=128,
-                       manifold_dim=10, seed=0)
-    corpus = dataclasses.replace(
-        full, X=full.X[: args.n], y=full.y[: args.n],
-        label_mask=full.label_mask[: args.n])
-    test = (full.X[args.n:], full.y[args.n:])
-    labeled = drop_labels(corpus, args.label_ratio, seed=1)
-    graph = build_affinity_graph(corpus.X, k=10)
-    print(f"   {graph.n_nodes} nodes, {graph.n_edges} edges, "
-          f"{int(labeled.label_mask.sum())} labeled "
-          f"({100 * labeled.label_ratio():.1f}%)")
+    cfg = ExperimentConfig(
+        name="quickstart",
+        data=DataConfig(n=args.n, n_classes=16, input_dim=128,
+                        manifold_dim=10, label_ratio=args.label_ratio),
+        graph=GraphConfig(builder="knn_rbf", k=10),
+        batch=BatchConfig(pipeline="meta_batch", batch_size=512),
+        objective=ObjectiveConfig(gamma=args.gamma, kappa=1e-4,
+                                  weight_decay=1e-5, pairwise=args.pairwise),
+        train=TrainConfig(n_epochs=args.epochs, base_lr=1e-2, dropout=0.0,
+                          hidden_dim=512, n_hidden=3))
 
-    print("2) partitioning graph into mini-blocks + synthesizing meta-batches…")
-    plan = plan_meta_batches(graph, batch_size=512, n_classes=16, seed=0)
-    print(f"   {plan.mini_block_labels.max() + 1} mini-blocks → "
-          f"{plan.n_meta} meta-batches")
+    # The supervised baseline is the same experiment with γ = κ = 0.
+    supervised = dataclasses.replace(
+        cfg, name="supervised",
+        objective=dataclasses.replace(cfg.objective, gamma=0.0, kappa=0.0))
 
-    cfg = DNNConfig(input_dim=128, hidden_dim=512, n_hidden=3, n_classes=16,
-                    dropout=0.0)
-    pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=1, seed=0)
-    print("3) training SSL (γ=%.2f) vs fully-supervised…" % args.gamma)
-    for name, hyper in [("ssl", SSLHyper(args.gamma, 1e-4, 1e-5)),
-                        ("supervised", SSLHyper(0.0, 0.0, 1e-5))]:
-        res = train_dnn_ssl(pipe.epoch, cfg=cfg, hyper=hyper,
-                            n_epochs=args.epochs, dropout=0.0, base_lr=1e-2,
-                            eval_data=test, seed=0)
-        accs = [h["eval/acc"] for h in res.history]
-        print(f"   {name:<11} acc by epoch: "
-              + " ".join(f"{a:.3f}" for a in accs))
+    exp = Experiment(cfg).build()
+    print(f"corpus: {exp.corpus.n} points, "
+          f"{int(exp.corpus.label_mask.sum())} labeled "
+          f"({100 * exp.corpus.label_ratio():.1f}%)")
+    print(f"graph: {exp.graph.n_nodes} nodes, {exp.graph.n_edges} edges; "
+          f"{exp.plan.mini_block_labels.max() + 1} mini-blocks -> "
+          f"{exp.plan.n_meta} meta-batches")
+
+    print(f"training SSL (gamma={args.gamma:.2f}, "
+          f"pairwise={args.pairwise!r}) vs fully-supervised...")
+    for experiment in (exp, Experiment(supervised, corpus=exp.corpus,
+                                       eval_data=exp.eval_data,
+                                       graph=exp.graph, plan=exp.plan)):
+        res = experiment.run()
+        accs = " ".join(f"{h['eval/acc']:.3f}" for h in res.history)
+        print(f"   {res.config.name:<11} acc by epoch: {accs}")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,10 @@ objective on a synthetic topic-structured token corpus.
 
 The sequence-level affinity graph (bag-of-tokens k-NN, DESIGN.md §3) feeds
 the Eq.-3 regularizer on the pooled output distribution while the usual
-next-token CE trains the LM.  ``--scale`` picks the model size:
+next-token CE trains the LM.  Components come from the ``repro.api``
+registries: the graph builder and the pairwise Hc(p_i,p_j) kernel are both
+selected by name (``--pairwise auto`` uses the fused Pallas kernel on TPU).
+``--scale`` picks the model size:
 
   small (default, CPU-friendly ≈ 11M params) | mid ≈ 40M | large ≈ 110M
 
@@ -18,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SSLHyper, build_affinity_graph, plan_meta_batches
+from repro.api import AFFINITY
+from repro.core import SSLHyper, plan_meta_batches
 from repro.core.metabatch import NeighborSampler
 from repro.data import make_token_corpus, sequence_features
 from repro.models.config import ATTN, ModelConfig
@@ -43,6 +47,11 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--gamma", type=float, default=0.05)
+    ap.add_argument("--graph-builder", default="knn_rbf",
+                    help="AFFINITY registry entry")
+    ap.add_argument("--pairwise", default="auto",
+                    choices=["auto", "ref", "pallas"],
+                    help="PAIRWISE registry entry")
     args = ap.parse_args()
 
     cfg = ModelConfig(name=f"lm-{args.scale}", family="dense",
@@ -55,7 +64,7 @@ def main():
     toks, topics = make_token_corpus(n_seqs, args.seq_len + 1,
                                      cfg.vocab_size, n_topics=8, seed=0)
     feats = sequence_features(toks, cfg.vocab_size, dim=64, seed=0)
-    graph = build_affinity_graph(feats, k=10)
+    graph = AFFINITY.get(args.graph_builder)(feats, k=10)
     plan = plan_meta_batches(graph, batch_size=args.batch, n_classes=4,
                              seed=0)
     sampler = NeighborSampler(plan.batch_edges, seed=0)
@@ -73,7 +82,8 @@ def main():
     @jax.jit
     def step(params, opt_state, batch):
         return lm_train_step(params, opt_state, batch, cfg=cfg, hyper=hyper,
-                             opt=opt, lr=jnp.float32(3e-3))
+                             opt=opt, lr=jnp.float32(3e-3),
+                             pairwise=args.pairwise)
 
     t0 = time.time()
     i = 0

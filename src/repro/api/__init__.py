@@ -1,0 +1,28 @@
+"""Public experiment layer: config-driven, registry-backed entry point.
+
+Typical use::
+
+    from repro.api import Experiment, ExperimentConfig, ObjectiveConfig
+
+    cfg = ExperimentConfig(objective=ObjectiveConfig(gamma=1.0))
+    result = Experiment(cfg).run()
+    print(result.best("eval/acc"))
+
+Components (affinity builders, partitioners, batch pipelines, pairwise
+kernels, optimizers) are selected by name in the config and resolved through
+the registries in :mod:`repro.api.registry`; register new implementations
+there instead of forking the wiring.
+"""
+from .config import (BatchConfig, DataConfig, ExperimentConfig, GraphConfig,
+                     ObjectiveConfig, PartitionConfig, TrainConfig)
+from .experiment import Experiment, ExperimentResult
+from .registry import (AFFINITY, OPTIMIZER, PAIRWISE, PARTITIONER, PIPELINE,
+                       Registry, resolve_pairwise)
+
+__all__ = [
+    "ExperimentConfig", "DataConfig", "GraphConfig", "PartitionConfig",
+    "BatchConfig", "ObjectiveConfig", "TrainConfig",
+    "Experiment", "ExperimentResult",
+    "Registry", "AFFINITY", "PARTITIONER", "PIPELINE", "PAIRWISE",
+    "OPTIMIZER", "resolve_pairwise",
+]

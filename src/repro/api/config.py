@@ -1,0 +1,236 @@
+"""Frozen, validated, serializable experiment configs.
+
+One ``ExperimentConfig`` captures everything the paper's pipeline needs —
+corpus synthesis, affinity graph, balanced partition, meta-batch synthesis,
+the Eq.-3 objective, and the training loop — as plain data.  Components are
+referenced *by name* and resolved through ``repro.api.registry``, so a config
+is a complete, hashable, JSON-round-trippable description of an experiment:
+
+    cfg = ExperimentConfig(objective=ObjectiveConfig(gamma=1.0))
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+
+Every sub-config validates its fields in ``__post_init__`` (fail at
+construction, not three layers deep in the trainer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+__all__ = [
+    "DataConfig",
+    "GraphConfig",
+    "PartitionConfig",
+    "BatchConfig",
+    "ObjectiveConfig",
+    "TrainConfig",
+    "ExperimentConfig",
+]
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+def _from_dict(cls, d: dict[str, Any]):
+    """Reconstruct a (flat) dataclass from a dict, rejecting unknown keys."""
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - names
+    _require(not unknown,
+             f"{cls.__name__}: unknown keys {sorted(unknown)}; "
+             f"expected a subset of {sorted(names)}")
+    return cls(**d)
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    """Synthetic TIMIT-like corpus (``repro.data.make_corpus``) + label drop.
+
+    ``n`` training points plus ``round(n * test_fraction)`` held-out test
+    points are drawn from one generative manifold (the paper's §3 protocol);
+    ``label_ratio`` of the training labels stay visible (§3: 2%–100%).
+    """
+
+    n: int = 4000
+    n_classes: int = 16
+    input_dim: int = 128
+    manifold_dim: int = 10
+    structure: str = "filaments"
+    label_ratio: float = 0.02
+    test_fraction: float = 0.25
+    seed: int = 0
+
+    def __post_init__(self):
+        _require(self.n > 0, f"n must be positive, got {self.n}")
+        _require(self.n_classes > 1, "need at least 2 classes")
+        _require(self.input_dim > 0 and self.manifold_dim > 0,
+                 "dims must be positive")
+        _require(self.structure in ("filaments", "blobs"),
+                 f"unknown structure {self.structure!r}")
+        _require(0.0 < self.label_ratio <= 1.0,
+                 f"label_ratio must be in (0, 1], got {self.label_ratio}")
+        _require(0.0 <= self.test_fraction < 1.0,
+                 f"test_fraction must be in [0, 1), got {self.test_fraction}")
+
+
+@dataclass(frozen=True)
+class GraphConfig:
+    """k-NN affinity graph (paper §3): ``builder`` names an AFFINITY entry."""
+
+    builder: str = "knn_rbf"
+    k: int = 10
+    sigma: float | None = None    # None = self-tuning bandwidth
+
+    def __post_init__(self):
+        _require(self.k > 0, f"k must be positive, got {self.k}")
+        _require(self.sigma is None or self.sigma > 0,
+                 f"sigma must be positive or None, got {self.sigma}")
+
+
+@dataclass(frozen=True)
+class PartitionConfig:
+    """Balanced min-edge-cut partition (paper §1.1, Fig. 1b)."""
+
+    method: str = "multilevel"    # PARTITIONER registry entry
+    tol: float = 0.15             # balance tolerance
+    coarsen_to: int = 60          # nodes-per-part target to stop coarsening
+
+    def __post_init__(self):
+        _require(self.tol >= 0, f"tol must be >= 0, got {self.tol}")
+        _require(self.coarsen_to > 0,
+                 f"coarsen_to must be positive, got {self.coarsen_to}")
+
+
+@dataclass(frozen=True)
+class BatchConfig:
+    """Meta-batch synthesis (paper §2) and the training-batch pipeline.
+
+    ``pipeline`` names a PIPELINE registry entry: ``"meta_batch"`` (the
+    paper's method), ``"graph_batch"`` (pure partitioned batches — the §2
+    low-entropy baseline; pair with ``shuffle_blocks=False``), or
+    ``"random_batch"`` (the Fig.-1a regime).
+    """
+
+    pipeline: str = "meta_batch"
+    batch_size: int = 512
+    with_neighbor: bool = True    # concatenate the Eq.-6 sampled neighbour
+    shuffle_blocks: bool = True   # random mini-block grouping (§2.1 step 2)
+    pad_factor: float = 2.4
+
+    def __post_init__(self):
+        _require(self.batch_size > 0,
+                 f"batch_size must be positive, got {self.batch_size}")
+        _require(self.pad_factor >= 1.0,
+                 f"pad_factor must be >= 1, got {self.pad_factor}")
+        _require(not (self.pipeline == "graph_batch" and self.shuffle_blocks),
+                 "pipeline='graph_batch' is the consecutive-mini-block "
+                 "baseline; set shuffle_blocks=False (shuffled blocks would "
+                 "silently turn it into neighbour-less meta-batches)")
+
+
+@dataclass(frozen=True)
+class ObjectiveConfig:
+    """Eq.-2/3 hyper-parameters plus the pairwise-kernel selection.
+
+    ``pairwise`` names a PAIRWISE registry entry (``"auto"`` picks the fused
+    Pallas kernel on TPU and the jnp oracle elsewhere).  ``gamma=kappa=0``
+    recovers the fully-supervised baseline.
+    """
+
+    gamma: float = 1.0            # graph-regularizer weight γ
+    kappa: float = 1e-4           # entropy-regularizer weight κ
+    weight_decay: float = 1e-5    # ℓ2 weight λ
+    pairwise: str = "auto"
+
+    def __post_init__(self):
+        _require(self.gamma >= 0 and self.kappa >= 0
+                 and self.weight_decay >= 0,
+                 "gamma, kappa and weight_decay must all be >= 0, got "
+                 f"({self.gamma}, {self.kappa}, {self.weight_decay})")
+
+    def hyper(self):
+        """The ``repro.core.ssl_loss.SSLHyper`` this config describes."""
+        from repro.core.ssl_loss import SSLHyper
+        return SSLHyper(gamma=self.gamma, kappa=self.kappa,
+                        weight_decay=self.weight_decay)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Model size, optimizer and loop settings (paper §3 protocol).
+
+    ``execution="sequential"`` runs the vmapped k-worker step on the default
+    device; ``"parallel"`` additionally shards the leading worker axis over a
+    ``("data",)`` mesh of the available devices — the launcher's pjit
+    pattern, which *is* the paper's synchronous k-worker SGD.
+    """
+
+    n_epochs: int = 10
+    n_workers: int = 1
+    execution: str = "sequential"
+    base_lr: float = 1e-3
+    lr_reset_epochs: int = 10     # paper: lr = base·k for 10 epochs, then base
+    dropout: float = 0.2
+    optimizer: str = "adagrad"    # OPTIMIZER registry entry
+    hidden_dim: int = 512
+    n_hidden: int = 3
+    seed: int = 0
+
+    def __post_init__(self):
+        _require(self.n_epochs >= 0,
+                 f"n_epochs must be >= 0, got {self.n_epochs}")
+        _require(self.n_workers >= 1,
+                 f"n_workers must be >= 1, got {self.n_workers}")
+        _require(self.execution in ("sequential", "parallel"),
+                 f"execution must be 'sequential' or 'parallel', "
+                 f"got {self.execution!r}")
+        _require(self.base_lr > 0, f"base_lr must be > 0, got {self.base_lr}")
+        _require(self.lr_reset_epochs >= 1, "lr_reset_epochs must be >= 1")
+        _require(0.0 <= self.dropout < 1.0,
+                 f"dropout must be in [0, 1), got {self.dropout}")
+        _require(self.hidden_dim > 0 and self.n_hidden >= 1,
+                 "model dims must be positive")
+
+
+@dataclass(frozen=True)
+class ExperimentConfig:
+    """The single config object an ``Experiment`` runs from."""
+
+    name: str = "ssl"
+    data: DataConfig = field(default_factory=DataConfig)
+    graph: GraphConfig = field(default_factory=GraphConfig)
+    partition: PartitionConfig = field(default_factory=PartitionConfig)
+    batch: BatchConfig = field(default_factory=BatchConfig)
+    objective: ObjectiveConfig = field(default_factory=ObjectiveConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+
+    @classmethod
+    def _sections(cls) -> dict[str, type]:
+        """Section name → sub-config class, derived from the field list
+        (every section field is declared with ``default_factory=<class>``)."""
+        return {f.name: f.default_factory for f in dataclasses.fields(cls)
+                if f.default_factory is not dataclasses.MISSING}
+
+    def to_dict(self) -> dict[str, Any]:
+        """Plain nested-dict form (JSON/YAML-safe)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "ExperimentConfig":
+        """Inverse of :meth:`to_dict`; missing sections take defaults,
+        unknown sections or keys raise ``ValueError``."""
+        sections = cls._sections()
+        unknown = set(d) - set(sections) - {"name"}
+        _require(not unknown,
+                 f"ExperimentConfig: unknown sections {sorted(unknown)}")
+        kw: dict[str, Any] = {}
+        if "name" in d:
+            kw["name"] = d["name"]
+        for sec, sec_cls in sections.items():
+            if sec in d:
+                val = d[sec]
+                kw[sec] = (val if isinstance(val, sec_cls)
+                           else _from_dict(sec_cls, dict(val)))
+        return cls(**kw)

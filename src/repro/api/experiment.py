@@ -1,0 +1,168 @@
+"""The ``Experiment`` runner — one entry point for every paper scenario.
+
+``Experiment(config).run()`` drives the whole pipeline from an
+``ExperimentConfig``: corpus → affinity graph → balanced partition →
+meta-batch synthesis → Eq.-3 objective → sequential or k-worker
+data-parallel SGD — every stage resolved by name through the registries in
+``repro.api.registry``.  The hand-wired entry points in ``examples/`` and
+``benchmarks/`` are thin shells over this class.
+
+Pre-built artifacts (a labeled corpus, a shared affinity graph, a reusable
+meta-batch plan) can be injected through the constructor so sweeps — e.g.
+the Fig.-3a label-ratio grid — don't re-run graph construction per point::
+
+    exp = Experiment(cfg, corpus=labeled, eval_data=test,
+                     graph=graph, plan=plan)
+    result = exp.run()
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.api.config import ExperimentConfig
+from repro.api.registry import AFFINITY, OPTIMIZER, PARTITIONER, PIPELINE
+
+__all__ = ["Experiment", "ExperimentResult"]
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """Structured output of one :meth:`Experiment.run`."""
+
+    config: ExperimentConfig
+    history: list[dict]       # per-epoch metric rows from the trainer
+    final: dict               # last epoch's row ({} if no epoch produced one)
+    seconds: float            # wall-clock for the training loop
+    params: Any = None        # trained model parameters (pytree)
+
+    def best(self, key: str = "eval/acc") -> float:
+        """Best value of ``key`` across epochs (e.g. peak test accuracy)."""
+        vals = [h[key] for h in self.history if key in h]
+        if not vals:
+            raise KeyError(f"metric {key!r} not present in history")
+        return max(vals)
+
+
+def _data_mesh(n_workers: int):
+    """``("data",)`` mesh whose size is the largest divisor of ``n_workers``
+    realizable on the available devices (1 on a single-device host — the
+    sharded arrays then simply live on that device)."""
+    import jax
+
+    n_dev = len(jax.devices())
+    size = max(d for d in range(1, min(n_workers, n_dev) + 1)
+               if n_workers % d == 0)
+    return jax.make_mesh((size,), ("data",))
+
+
+class Experiment:
+    """Config-driven experiment: ``build()`` assembles, ``run()`` trains."""
+
+    def __init__(
+        self,
+        config: ExperimentConfig,
+        *,
+        corpus=None,
+        eval_data: tuple[np.ndarray, np.ndarray] | None = None,
+        graph=None,
+        plan=None,
+    ):
+        self.config = config
+        self.corpus = corpus          # SyntheticCorpus (labels already dropped)
+        self.eval_data = eval_data    # (X_test, y_test) or None
+        self.graph = graph            # AffinityGraph
+        self.plan = plan              # MetaBatchPlan
+        self.pipeline: Callable | None = None   # epoch-factory callable
+        self._built = False
+
+    # ------------------------------------------------------------------ build
+    def build(self) -> "Experiment":
+        """Assemble corpus, graph, plan and batch pipeline (idempotent)."""
+        if self._built:
+            return self
+        cfg = self.config
+        if self.corpus is None:
+            self.corpus, self.eval_data = self._make_data()
+        if self.graph is None:
+            builder = AFFINITY.get(cfg.graph.builder)
+            self.graph = builder(self.corpus.X, k=cfg.graph.k,
+                                 sigma=cfg.graph.sigma)
+        needs_plan = cfg.batch.pipeline != "random_batch"
+        if self.plan is None and needs_plan:
+            from repro.core.metabatch import plan_meta_batches
+            self.plan = plan_meta_batches(
+                self.graph, batch_size=cfg.batch.batch_size,
+                n_classes=self.corpus.n_classes, seed=cfg.data.seed,
+                tol=cfg.partition.tol,
+                shuffle_blocks=cfg.batch.shuffle_blocks,
+                partitioner=PARTITIONER.get(cfg.partition.method),
+                coarsen_to=cfg.partition.coarsen_to)
+        factory = PIPELINE.get(cfg.batch.pipeline)
+        self.pipeline = factory(
+            self.corpus, self.graph, self.plan,
+            batch_size=cfg.batch.batch_size,
+            n_workers=cfg.train.n_workers,
+            with_neighbor=cfg.batch.with_neighbor,
+            pad_factor=cfg.batch.pad_factor,
+            seed=cfg.data.seed)
+        self._built = True
+        return self
+
+    def _make_data(self):
+        """Synthesize the train corpus + held-out test split from the config."""
+        from repro.data import drop_labels, make_corpus
+
+        d = self.config.data
+        n_total = d.n + int(round(d.n * d.test_fraction))
+        full = make_corpus(n_total, n_classes=d.n_classes,
+                           input_dim=d.input_dim,
+                           manifold_dim=d.manifold_dim,
+                           structure=d.structure, seed=d.seed)
+        train = dataclasses.replace(
+            full, X=full.X[: d.n], y=full.y[: d.n],
+            label_mask=full.label_mask[: d.n])
+        eval_data = ((full.X[d.n:], full.y[d.n:])
+                     if n_total > d.n else None)
+        if d.label_ratio < 1.0:
+            train = drop_labels(train, d.label_ratio, seed=d.seed + 1)
+        return train, eval_data
+
+    # -------------------------------------------------------------------- run
+    def run(self) -> ExperimentResult:
+        """Train end to end and return the structured result."""
+        self.build()
+        from repro.models.dnn import DNNConfig
+        from repro.train.trainer import train_dnn_ssl
+
+        cfg = self.config
+        t = cfg.train
+        model_cfg = DNNConfig(
+            input_dim=self.corpus.X.shape[1], hidden_dim=t.hidden_dim,
+            n_hidden=t.n_hidden, n_classes=self.corpus.n_classes,
+            dropout=t.dropout)
+        mesh = (_data_mesh(t.n_workers)
+                if t.execution == "parallel" else None)
+        t0 = time.time()
+        res = train_dnn_ssl(
+            self.pipeline,
+            cfg=model_cfg,
+            hyper=cfg.objective.hyper(),
+            n_epochs=t.n_epochs,
+            n_workers=t.n_workers,
+            base_lr=t.base_lr,
+            lr_reset_epochs=t.lr_reset_epochs,
+            dropout=t.dropout,
+            eval_data=self.eval_data,
+            seed=t.seed,
+            opt=OPTIMIZER.get(t.optimizer)(),
+            pairwise=cfg.objective.pairwise,
+            mesh=mesh)
+        seconds = time.time() - t0
+        final = res.history[-1] if res.history else {}
+        return ExperimentResult(config=cfg, history=res.history,
+                                final=final, seconds=seconds,
+                                params=res.params)

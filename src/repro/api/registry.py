@@ -1,0 +1,141 @@
+"""String-keyed component registries for the experiment layer.
+
+Every pluggable stage of the paper's pipeline — affinity-graph construction,
+balanced partitioning, batch synthesis, the pairwise Hc(p_i,p_j) kernel, and
+the optimizer — is looked up by name here, in the style of the xFormers
+factory pattern: configs carry *names*, registries map names to callables,
+and new scenarios register a component instead of forking the wiring.
+
+Default entries are **lazy** ``"module:attr"`` import specs, resolved (and
+cached) on first :meth:`Registry.get`.  That keeps this module import-light
+and lets low-level packages (``repro.core``, ``repro.train``) resolve names
+through it without circular imports.
+
+Registering a new component::
+
+    from repro.api.registry import AFFINITY
+
+    @AFFINITY.register("cosine_knn")
+    def build_cosine_graph(X, *, k=10, **kw):
+        ...
+
+    # or, keeping the import lazy:
+    AFFINITY.register("cosine_knn", "mypkg.graphs:build_cosine_graph")
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Callable, Iterable
+
+__all__ = [
+    "Registry",
+    "AFFINITY",
+    "PARTITIONER",
+    "PIPELINE",
+    "PAIRWISE",
+    "OPTIMIZER",
+    "resolve_pairwise",
+]
+
+
+class Registry:
+    """A named string→component table with lazy ``"module:attr"`` entries."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, Any] = {}
+
+    # -- registration -----------------------------------------------------
+    def register(self, name: str, component: Any = None):
+        """Register ``component`` under ``name``.
+
+        Usable three ways: directly (``reg.register("x", fn)``), with a lazy
+        import spec (``reg.register("x", "pkg.mod:fn")``), or as a decorator
+        (``@reg.register("x")``).  Re-registering a name overwrites it (so
+        callers can shadow a default implementation).
+        """
+        if component is None:
+            def deco(fn):
+                self._entries[name] = fn
+                return fn
+            return deco
+        self._entries[name] = component
+        return component
+
+    # -- lookup -----------------------------------------------------------
+    def get(self, name: str) -> Any:
+        """Resolve ``name``; raises ``KeyError`` listing known names."""
+        if name not in self._entries:
+            raise KeyError(
+                f"unknown {self.kind} component {name!r}; "
+                f"registered: {self.names()}")
+        entry = self._entries[name]
+        if isinstance(entry, str):  # lazy "module:attr" spec
+            mod_name, _, attr = entry.partition(":")
+            entry = getattr(importlib.import_module(mod_name), attr)
+            self._entries[name] = entry
+        return entry
+
+    def names(self) -> list[str]:
+        return sorted(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __iter__(self) -> Iterable[str]:
+        return iter(self.names())
+
+    def __repr__(self) -> str:
+        return f"Registry({self.kind!r}, names={self.names()})"
+
+
+# --------------------------------------------------------------------------
+# Default registries.  Specs are lazy so importing repro.api stays cheap.
+# --------------------------------------------------------------------------
+
+#: ``(X, *, k, sigma, ...) -> AffinityGraph``
+AFFINITY = Registry("affinity")
+AFFINITY.register("knn_rbf", "repro.core.affinity:build_affinity_graph")
+
+#: ``(W, n_parts, *, tol, coarsen_to, seed) -> PartitionResult``
+PARTITIONER = Registry("partitioner")
+PARTITIONER.register("multilevel", "repro.core.partition:partition_graph")
+
+#: ``(corpus, graph, plan, *, n_workers, seed, ...) -> epoch_fn`` where
+#: ``epoch_fn()`` yields device-ready ``SSLBatch``es for one epoch.
+PIPELINE = Registry("pipeline")
+PIPELINE.register("meta_batch", "repro.data.pipeline:make_meta_batch_pipeline")
+PIPELINE.register("graph_batch",
+                  "repro.data.pipeline:make_graph_batch_pipeline")
+PIPELINE.register("random_batch",
+                  "repro.data.pipeline:make_random_batch_pipeline")
+
+#: ``(logp, W) -> scalar`` computing the Eq.-3/4 contraction
+#: ``Σ_ij W_ij · Hc(p_i, p_j)``.
+#:   * ``"ref"``    — the pure-jnp oracle (always available);
+#:   * ``"pallas"`` — the fused MXU-tiled kernel in ``repro.kernels.graph_reg``
+#:     with its analytic VJP (interpret mode off-TPU);
+#:   * ``"auto"``   — ``"pallas"`` on TPU backends, ``"ref"`` elsewhere.
+PAIRWISE = Registry("pairwise")
+PAIRWISE.register("ref", "repro.kernels.ref:graph_reg_pairwise_ref")
+PAIRWISE.register("pallas", "repro.kernels.ops:graph_reg_pairwise_pallas_vjp")
+PAIRWISE.register("auto", "repro.kernels.ops:graph_reg_pairwise")
+
+#: ``(**hyper) -> repro.optim.Optimizer``
+OPTIMIZER = Registry("optimizer")
+OPTIMIZER.register("adagrad", "repro.optim:adagrad")
+OPTIMIZER.register("adam", "repro.optim:adam")
+OPTIMIZER.register("sgd", "repro.optim:sgd")
+
+
+def resolve_pairwise(
+    pairwise: str | Callable | None,
+) -> Callable | None:
+    """Resolve a pairwise-kernel *name* to its implementation.
+
+    ``None`` (use the caller's inline oracle) and already-resolved callables
+    pass through unchanged, so call sites can accept either form.
+    """
+    if pairwise is None or callable(pairwise):
+        return pairwise
+    return PAIRWISE.get(pairwise)

@@ -52,12 +52,20 @@ def build_mini_blocks(
     *,
     tol: float = 0.15,
     seed: int = 0,
+    partitioner=None,
+    coarsen_to: int = 60,
 ) -> PartitionResult:
-    """Step 1: partition into N*M/B balanced mini-blocks of ~B/M nodes."""
+    """Step 1: partition into N*M/B balanced mini-blocks of ~B/M nodes.
+
+    ``partitioner`` is any ``(W, n_parts, *, tol, coarsen_to, seed) ->
+    PartitionResult`` callable (PARTITIONER registry entries qualify);
+    default is the built-in multilevel scheme.
+    """
     n = graph.n_nodes
     n_blocks = max(1, int(round(n * n_classes / batch_size)))
     n_blocks = min(n_blocks, n)  # can't have more blocks than nodes
-    return partition_graph(graph.W, n_blocks, tol=tol, seed=seed)
+    part = partitioner or partition_graph
+    return part(graph.W, n_blocks, tol=tol, coarsen_to=coarsen_to, seed=seed)
 
 
 def synthesize_meta_batches(
@@ -117,10 +125,13 @@ def plan_meta_batches(
     seed: int = 0,
     tol: float = 0.15,
     shuffle_blocks: bool = True,
+    partitioner=None,
+    coarsen_to: int = 60,
 ) -> MetaBatchPlan:
     """One-shot preprocessing: mini-blocks -> meta-batches -> batch graph."""
     rng = np.random.default_rng(seed)
-    mini = build_mini_blocks(graph, batch_size, n_classes, tol=tol, seed=seed)
+    mini = build_mini_blocks(graph, batch_size, n_classes, tol=tol, seed=seed,
+                             partitioner=partitioner, coarsen_to=coarsen_to)
     metas, meta_of_block = synthesize_meta_batches(
         mini, n_classes, rng=rng, shuffle_blocks=shuffle_blocks)
     meta_of_node = meta_of_block[mini.labels]

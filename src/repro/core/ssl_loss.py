@@ -16,10 +16,16 @@ All functions take *logits* and work in log-space for stability.  The dense
 ``W`` block is the (meta-)batch's affinity sub-matrix — dense by construction
 after graph partitioning (paper Fig. 1b); the pairwise contraction
 ``Σ_ij W_ij Hc(p_i,p_j)`` is the compute hot-spot and has a fused Pallas
-kernel in ``repro.kernels.graph_reg`` (pass it as ``pairwise_impl``).
+kernel in ``repro.kernels.graph_reg`` — select it by name via
+``pairwise="pallas"`` (or ``"auto"``), resolved through the
+``repro.api.registry.PAIRWISE`` registry.  ``pairwise=None`` keeps the
+inline jnp oracle.  The old ``pairwise_impl=`` callable kwarg still works
+but is deprecated.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import Callable
 
 import jax
@@ -38,14 +44,38 @@ __all__ = [
 Array = jax.Array
 
 
+@dataclasses.dataclass(frozen=True)
 class SSLHyper:
-    """Hyper-parameters of Eq. 2 (γ graph, κ entropy, λ ℓ2)."""
+    """Hyper-parameters of Eq. 2 (γ graph, κ entropy, λ ℓ2).
 
-    def __init__(self, gamma: float = 1e-3, kappa: float = 1e-4,
-                 weight_decay: float = 1e-5):
-        self.gamma = gamma
-        self.kappa = kappa
-        self.weight_decay = weight_decay
+    Frozen and hashable so it can sit in jit closures / static args; all
+    three weights must be non-negative (zero disables the term).
+    """
+
+    gamma: float = 1e-3
+    kappa: float = 1e-4
+    weight_decay: float = 1e-5
+
+    def __post_init__(self):
+        for name in ("gamma", "kappa", "weight_decay"):
+            v = getattr(self, name)
+            if not v >= 0:
+                raise ValueError(
+                    f"SSLHyper.{name} must be >= 0, got {v!r}")
+
+
+def _resolve_pairwise(pairwise: str | Callable | None,
+                      pairwise_impl: Callable | None) -> Callable | None:
+    """Back-compat shim: prefer the deprecated explicit callable, else look
+    the name up in the PAIRWISE registry (None -> inline jnp oracle)."""
+    if pairwise_impl is not None:
+        warnings.warn(
+            "pairwise_impl= is deprecated; pass pairwise=<registry name> "
+            "(e.g. 'ref', 'pallas', 'auto') instead", DeprecationWarning,
+            stacklevel=3)
+        return pairwise_impl
+    from repro.api.registry import resolve_pairwise  # lazy: avoids cycle
+    return resolve_pairwise(pairwise)
 
 
 def entropy(logp: Array) -> Array:
@@ -72,13 +102,17 @@ def graph_regularizer(
     gamma: float,
     kappa: float,
     *,
+    pairwise: str | Callable | None = None,
     pairwise_impl: Callable[[Array, Array], Array] | None = None,
 ) -> Array:
     """γ Σ_ij W_ij Hc(p_i,p_j) − (κ + γ Σ_j W_ij) H(p_i)   (Eq. 4 + entropy reg).
 
+    ``pairwise`` selects the contraction implementation by registry name
+    ("ref" | "pallas" | "auto"); ``None`` uses the inline jnp oracle.
     Returns the summed (not averaged) penalty over the batch.
     """
-    impl = pairwise_impl or pairwise_cross_entropy_term
+    impl = (_resolve_pairwise(pairwise, pairwise_impl)
+            or pairwise_cross_entropy_term)
     cross = impl(logp, W)
     deg = jnp.sum(W, axis=1)                     # Σ_j ω_ij
     h = entropy(logp)
@@ -98,6 +132,7 @@ def ssl_objective(
     hyper: SSLHyper,
     *,
     params=None,
+    pairwise: str | Callable | None = None,
     pairwise_impl: Callable[[Array, Array], Array] | None = None,
     reduction: str = "mean",
 ) -> tuple[Array, dict]:
@@ -108,19 +143,22 @@ def ssl_objective(
       labels: (B,) int class ids; entries where ``label_mask == 0`` ignored.
       label_mask: (B,) {0,1} — 1 for labeled points (semi-supervised).
       W: (B, B) dense affinity block for this batch.
+      pairwise: pairwise-kernel registry name ("ref" | "pallas" | "auto")
+        or a ``(logp, W) -> scalar`` callable; None = inline jnp oracle.
       reduction: 'sum' is the paper-faithful Eq. 2; 'mean' normalizes the
         supervised term by #labeled and the graph terms by B (scale-stable
         across batch sizes; used by the trainer).
 
     Returns (loss, metrics-dict).
     """
+    pairwise = _resolve_pairwise(pairwise, pairwise_impl)
     logp = jax.nn.log_softmax(logits, axis=-1)
     # Supervised term: Hc(t_i, p_i) over labeled points (t one-hot => CE).
     picked = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
     sup = -jnp.sum(picked * label_mask)
     n_labeled = jnp.maximum(jnp.sum(label_mask), 1.0)
     greg = graph_regularizer(logp, W, hyper.gamma, hyper.kappa,
-                             pairwise_impl=pairwise_impl)
+                             pairwise=pairwise)
     l2 = hyper.weight_decay * l2_penalty(params) if params is not None else jnp.float32(0)
     if reduction == "mean":
         b = logits.shape[0]

@@ -21,7 +21,9 @@ from repro.core.affinity import AffinityGraph
 from repro.core.metabatch import MetaBatchPlan, NeighborSampler
 from repro.data.synthetic_timit import SyntheticCorpus
 
-__all__ = ["SSLBatch", "MetaBatchPipeline", "random_batch_pipeline"]
+__all__ = ["SSLBatch", "MetaBatchPipeline", "random_batch_pipeline",
+           "make_meta_batch_pipeline", "make_graph_batch_pipeline",
+           "make_random_batch_pipeline"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +91,60 @@ class MetaBatchPipeline:
                            valid=np.stack(vs))
 
 
+# ---------------------------------------------------------------------------
+# PIPELINE-registry factories.  Uniform signature
+#   (corpus, graph, plan, *, batch_size, n_workers, seed, ...) -> epoch_fn
+# so the experiment layer can swap batching strategies by config name.
+# ---------------------------------------------------------------------------
+def make_meta_batch_pipeline(corpus, graph, plan, *, n_workers: int = 1,
+                             seed: int = 0, with_neighbor: bool = True,
+                             pad_factor: float = 2.4, **_):
+    """The paper's method (§2): meta-batches + Eq.-6 sampled neighbours."""
+    return MetaBatchPipeline(corpus, graph, plan, n_workers=n_workers,
+                             pad_factor=pad_factor,
+                             with_neighbor=with_neighbor, seed=seed).epoch
+
+
+def make_graph_batch_pipeline(corpus, graph, plan, *, n_workers: int = 1,
+                              seed: int = 0, pad_factor: float = 2.4, **_):
+    """Pure graph-partitioned batches — the §2 low-entropy baseline.
+
+    Pair with a plan built with ``shuffle_blocks=False`` so each batch is a
+    run of consecutive (homogeneous) mini-blocks.
+    """
+    return MetaBatchPipeline(corpus, graph, plan, n_workers=n_workers,
+                             pad_factor=pad_factor, with_neighbor=False,
+                             seed=seed).epoch
+
+
+def make_random_batch_pipeline(corpus, graph, plan=None, *,
+                               batch_size: int | None = None,
+                               n_workers: int = 1, seed: int = 0,
+                               steps_per_epoch: int | None = None, **_):
+    """Randomly shuffled batches (Fig. 1a regime) as an epoch factory.
+
+    ``plan`` is optional (no partitioning needed); when present it pins the
+    batch size and epoch length to the meta-batch pipeline's for apples-to-
+    apples ablations.
+    """
+    bs = batch_size or (plan.batch_size if plan is not None else 512)
+    if corpus.n < bs * n_workers:
+        raise ValueError(
+            f"random_batch pipeline needs n >= batch_size * n_workers "
+            f"({corpus.n} < {bs} * {n_workers}); shrink the batch or the "
+            "worker count")
+    if steps_per_epoch is None:
+        steps_per_epoch = (plan.n_meta // n_workers if plan is not None
+                           else max(1, corpus.n // (bs * n_workers)))
+    it = random_batch_pipeline(corpus, graph, bs, n_workers=n_workers,
+                               seed=seed)
+
+    def epoch():
+        return (next(it) for _ in range(steps_per_epoch))
+
+    return epoch
+
+
 def random_batch_pipeline(corpus: SyntheticCorpus, graph: AffinityGraph,
                           batch_size: int, *, n_workers: int = 1,
                           seed: int = 0) -> Iterator[SSLBatch]:
@@ -96,6 +152,12 @@ def random_batch_pipeline(corpus: SyntheticCorpus, graph: AffinityGraph,
     affinity block is still looked up, but is near-empty by construction."""
     rng = np.random.default_rng(seed)
     n = corpus.n
+    if n < batch_size * n_workers:
+        # The per-epoch loop below would never yield — fail loudly instead
+        # of spinning through permutations forever.
+        raise ValueError(
+            f"corpus too small for the requested batches: "
+            f"n={n} < batch_size*n_workers={batch_size * n_workers}")
     P = int(np.ceil(batch_size / 64) * 64)
     while True:
         perm = rng.permutation(n)

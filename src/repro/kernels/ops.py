@@ -62,10 +62,16 @@ _graph_reg_fwd_primal.defvjp(_graph_reg_vjp_fwd, _graph_reg_vjp_bwd)
 
 def graph_reg_pairwise(logp: jax.Array, W: jax.Array, *,
                        use_pallas: bool | None = None) -> jax.Array:
-    """Fused Σ_ij W_ij·Hc(p_i,p_j); drop-in ``pairwise_impl`` for the SSL loss."""
+    """Fused Σ_ij W_ij·Hc(p_i,p_j); the PAIRWISE registry's ``"auto"`` entry."""
     if _want_pallas(use_pallas):
         return _graph_reg_fwd_primal(logp, W)
     return ref.graph_reg_pairwise_ref(logp, W)
+
+
+def graph_reg_pairwise_pallas_vjp(logp: jax.Array, W: jax.Array) -> jax.Array:
+    """The fused Pallas kernel with its analytic VJP, unconditionally
+    (interpret mode off-TPU) — the PAIRWISE registry's ``"pallas"`` entry."""
+    return _graph_reg_fwd_primal(logp, W)
 
 
 def rbf_affinity(x: jax.Array, y: jax.Array, sigma, *,

@@ -31,8 +31,12 @@ Array = jax.Array
 # ------------------------------------------------------------------ DNN/SSL
 def dnn_ssl_loss(params, batch: dict, cfg: DNNConfig, hyper: SSLHyper,
                  *, dropout_rng=None, dropout: float = 0.0,
-                 pairwise_impl=None):
-    """Mean Eq.-3 loss over the k stacked concatenated batches."""
+                 pairwise=None, pairwise_impl=None):
+    """Mean Eq.-3 loss over the k stacked concatenated batches.
+
+    ``pairwise`` names a PAIRWISE registry entry ("ref" | "pallas" | "auto");
+    ``pairwise_impl`` (explicit callable) is deprecated.
+    """
 
     def per_worker(x, y, mask, W, valid):
         logits = dnn_forward(params, x, dropout_rng=dropout_rng,
@@ -41,7 +45,7 @@ def dnn_ssl_loss(params, batch: dict, cfg: DNNConfig, hyper: SSLHyper,
         mask = mask * valid
         Wm = W * valid[:, None] * valid[None, :]
         loss, metrics = ssl_objective(
-            logits, y, mask, Wm, hyper, params=params,
+            logits, y, mask, Wm, hyper, params=params, pairwise=pairwise,
             pairwise_impl=pairwise_impl, reduction="mean")
         return loss, metrics
 
@@ -53,10 +57,12 @@ def dnn_ssl_loss(params, batch: dict, cfg: DNNConfig, hyper: SSLHyper,
 
 def dnn_ssl_step(params, opt_state, batch: dict, *, cfg: DNNConfig,
                  hyper: SSLHyper, opt: Optimizer, lr: Array,
-                 dropout_rng=None, dropout: float = 0.0, pairwise_impl=None):
+                 dropout_rng=None, dropout: float = 0.0, pairwise=None,
+                 pairwise_impl=None):
     (loss, metrics), grads = jax.value_and_grad(
         dnn_ssl_loss, has_aux=True)(params, batch, cfg, hyper,
                                     dropout_rng=dropout_rng, dropout=dropout,
+                                    pairwise=pairwise,
                                     pairwise_impl=pairwise_impl)
     new_params, new_state = opt.update(grads, opt_state, params, lr)
     metrics["loss/total"] = loss
@@ -98,7 +104,7 @@ def chunked_ce(x: Array, head: Array, targets: Array, mask: Array,
 
 
 def lm_loss(params, cfg: ModelConfig, batch: dict, hyper: SSLHyper | None,
-            *, pairwise_impl=None, act_sharding=None):
+            *, pairwise=None, pairwise_impl=None, act_sharding=None):
     """Next-token CE (+ optional sequence-level SSL graph regularizer)."""
     out = tf.forward(params, cfg, batch["tokens"],
                      modality_embeds=batch.get("modality_embeds"),
@@ -121,6 +127,7 @@ def lm_loss(params, cfg: ModelConfig, batch: dict, hyper: SSLHyper | None,
 
         def per_group(pl, y, m, W):
             return ssl_objective(pl, y, m, W, hyper, params=None,
+                                 pairwise=pairwise,
                                  pairwise_impl=pairwise_impl,
                                  reduction="mean")
 
@@ -135,10 +142,10 @@ def lm_loss(params, cfg: ModelConfig, batch: dict, hyper: SSLHyper | None,
 
 def lm_train_step(params, opt_state, batch: dict, *, cfg: ModelConfig,
                   hyper: SSLHyper | None, opt: Optimizer, lr,
-                  pairwise_impl=None, act_sharding=None):
+                  pairwise=None, pairwise_impl=None, act_sharding=None):
     (loss, metrics), grads = jax.value_and_grad(lm_loss, has_aux=True)(
-        params, cfg, batch, hyper, pairwise_impl=pairwise_impl,
-        act_sharding=act_sharding)
+        params, cfg, batch, hyper, pairwise=pairwise,
+        pairwise_impl=pairwise_impl, act_sharding=act_sharding)
     new_params, new_state = opt.update(grads, opt_state, params, lr)
     return new_params, new_state, metrics
 

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Iterable
 
 import jax
@@ -53,8 +54,20 @@ def train_dnn_ssl(
     eval_data: tuple[np.ndarray, np.ndarray] | None = None,
     seed: int = 0,
     opt: Optimizer | None = None,
+    pairwise: str | Callable | None = "auto",
     pairwise_impl=None,
+    mesh: jax.sharding.Mesh | None = None,
 ) -> TrainResult:
+    """Run the paper's training loop over ``pipeline_epoch`` batches.
+
+    ``pairwise`` selects the Σ W_ij·Hc(p_i,p_j) implementation by PAIRWISE
+    registry name — the default ``"auto"`` uses the fused Pallas kernel on
+    TPU and the jnp oracle elsewhere.  ``pairwise_impl`` (raw callable) is
+    deprecated.  When ``mesh`` (a ``("data",)`` mesh) is given, parameters
+    are replicated and each batch's leading worker axis is sharded over it —
+    the paper's k-worker synchronous SGD, with pjit inserting the gradient
+    all-reduce the parameter server performed.
+    """
     opt = opt or adagrad()
     key = jax.random.PRNGKey(seed)
     key, init_key = jax.random.split(key)
@@ -62,10 +75,20 @@ def train_dnn_ssl(
     opt_state = opt.init(params)
     schedule = parallel_lr_schedule(base_lr, n_workers, lr_reset_epochs)
 
+    put_batch = jnp.asarray
+    if mesh is not None:
+        P = jax.sharding.PartitionSpec
+        replicated = jax.sharding.NamedSharding(mesh, P())
+        sharded = jax.sharding.NamedSharding(mesh, P("data"))
+        params = jax.device_put(params, replicated)
+        opt_state = jax.device_put(opt_state, replicated)
+        put_batch = lambda v: jax.device_put(jnp.asarray(v), sharded)  # noqa: E731
+
     step_fn = jax.jit(
         lambda p, s, b, lr, rng: dnn_ssl_step(
             p, s, b, cfg=cfg, hyper=hyper, opt=opt, lr=lr,
-            dropout_rng=rng, dropout=dropout, pairwise_impl=pairwise_impl))
+            dropout_rng=rng, dropout=dropout, pairwise=pairwise,
+            pairwise_impl=pairwise_impl))
 
     history = []
     for epoch in range(n_epochs):
@@ -74,12 +97,18 @@ def train_dnn_ssl(
         ms = []
         for batch in pipeline_epoch():
             key, rng = jax.random.split(key)
-            jb = {k: jnp.asarray(v) for k, v in dataclasses.asdict(batch).items()}
+            jb = {k: put_batch(v) for k, v in dataclasses.asdict(batch).items()}
             params, opt_state, metrics = step_fn(params, opt_state, jb, lr, rng)
             ms.append(metrics)
+        if not ms:
+            # e.g. n_meta < n_workers: the pipeline had nothing to yield.
+            warnings.warn(
+                f"epoch {epoch}: pipeline yielded no batches "
+                "(n_meta < n_workers?); skipping epoch row", stacklevel=2)
+            continue
         row = {k: float(np.mean([float(m[k]) for m in ms])) for k in ms[0]}
         row.update(epoch=epoch, lr=float(lr), seconds=time.time() - t0)
         if eval_data is not None:
-            row["eval/acc"] = evaluate_dnn(params, *eval_data)
+            row["eval/acc"] = evaluate_dnn(jax.device_get(params), *eval_data)
         history.append(row)
     return TrainResult(params=params, history=history)

@@ -1,0 +1,243 @@
+"""The config-driven ``repro.api`` layer: configs, registries, Experiment."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AFFINITY, PAIRWISE, PARTITIONER, PIPELINE,
+                       BatchConfig, DataConfig, Experiment, ExperimentConfig,
+                       GraphConfig, ObjectiveConfig, Registry, TrainConfig,
+                       resolve_pairwise)
+from repro.core.ssl_loss import SSLHyper
+
+
+def tiny_config(**objective_kw) -> ExperimentConfig:
+    return ExperimentConfig(
+        data=DataConfig(n=400, n_classes=6, input_dim=32, manifold_dim=5,
+                        label_ratio=0.1),
+        batch=BatchConfig(batch_size=96),
+        objective=ObjectiveConfig(gamma=0.5, kappa=1e-4, weight_decay=1e-5,
+                                  **objective_kw),
+        train=TrainConfig(n_epochs=2, dropout=0.0, base_lr=5e-3,
+                          hidden_dim=64, n_hidden=2))
+
+
+# ------------------------------------------------------------------- configs
+def test_config_roundtrip_identity():
+    cfg = tiny_config(pairwise="ref")
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_config_roundtrip_defaults_and_partial_dict():
+    assert ExperimentConfig.from_dict({}) == ExperimentConfig()
+    cfg = ExperimentConfig.from_dict({"objective": {"gamma": 2.0}})
+    assert cfg.objective.gamma == 2.0
+    assert cfg.batch == BatchConfig()          # untouched sections default
+
+
+@pytest.mark.parametrize("section,bad", [
+    ("data", {"n": 0}),
+    ("data", {"label_ratio": 0.0}),
+    ("graph", {"k": -1}),
+    ("batch", {"batch_size": 0}),
+    ("objective", {"gamma": -0.1}),
+    ("train", {"execution": "magic"}),
+    ("train", {"n_workers": 0}),
+])
+def test_config_validation_rejects(section, bad):
+    with pytest.raises(ValueError):
+        ExperimentConfig.from_dict({section: bad})
+
+
+def test_graph_batch_pipeline_requires_unshuffled_blocks():
+    with pytest.raises(ValueError, match="shuffle_blocks"):
+        BatchConfig(pipeline="graph_batch")
+    BatchConfig(pipeline="graph_batch", shuffle_blocks=False)  # coherent
+
+
+def test_config_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown"):
+        ExperimentConfig.from_dict({"objective": {"gammma": 1.0}})
+    with pytest.raises(ValueError, match="unknown"):
+        ExperimentConfig.from_dict({"objectives": {}})
+
+
+def test_sslhyper_frozen_and_validated():
+    h = SSLHyper(1.0, 1e-4, 1e-5)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        h.gamma = 2.0
+    for bad in (dict(gamma=-1.0), dict(kappa=-1e-9),
+                dict(weight_decay=-0.5)):
+        with pytest.raises(ValueError):
+            SSLHyper(**bad)
+
+
+# ----------------------------------------------------------------- registries
+def test_registry_register_get_and_unknown():
+    reg = Registry("demo")
+    reg.register("direct", np.sum)
+    assert reg.get("direct") is np.sum
+
+    @reg.register("decorated")
+    def f():
+        return 42
+
+    assert reg.get("decorated") is f
+    assert reg.names() == ["decorated", "direct"]
+    assert "direct" in reg and "missing" not in reg
+    with pytest.raises(KeyError, match="demo.*missing.*decorated"):
+        reg.get("missing")
+
+
+def test_registry_lazy_spec_resolution():
+    reg = Registry("lazy")
+    reg.register("builder", "repro.core.affinity:build_affinity_graph")
+    from repro.core.affinity import build_affinity_graph
+    assert reg.get("builder") is build_affinity_graph
+
+
+def test_default_registries_resolve():
+    assert callable(AFFINITY.get("knn_rbf"))
+    assert callable(PARTITIONER.get("multilevel"))
+    for name in ("meta_batch", "graph_batch", "random_batch"):
+        assert callable(PIPELINE.get(name))
+    for name in ("ref", "pallas", "auto"):
+        assert callable(PAIRWISE.get(name))
+
+
+def test_pairwise_auto_falls_back_to_ref_off_tpu(rng, monkeypatch):
+    """Off-TPU, the "auto" entry must compute exactly what "ref" computes."""
+    monkeypatch.delenv("REPRO_FORCE_PALLAS", raising=False)
+    assert jax.default_backend() != "tpu"   # CPU container invariant
+    logp = jax.nn.log_softmax(jnp.asarray(rng.normal(size=(24, 7)),
+                                          jnp.float32))
+    W = jnp.asarray(np.abs(rng.normal(size=(24, 24))), jnp.float32)
+    auto = PAIRWISE.get("auto")(logp, W)
+    want = PAIRWISE.get("ref")(logp, W)
+    assert float(auto) == float(want)       # same code path, bit-identical
+
+
+def test_pairwise_pallas_matches_ref(rng):
+    logp = jax.nn.log_softmax(jnp.asarray(rng.normal(size=(48, 11)),
+                                          jnp.float32))
+    W = jnp.asarray(np.abs(rng.normal(size=(48, 48))), jnp.float32)
+    got = PAIRWISE.get("pallas")(logp, W)
+    want = PAIRWISE.get("ref")(logp, W)
+    np.testing.assert_allclose(float(got), float(want), rtol=3e-5)
+
+
+def test_resolve_pairwise_passthrough():
+    assert resolve_pairwise(None) is None
+    assert resolve_pairwise(np.sum) is np.sum
+    assert resolve_pairwise("ref") is PAIRWISE.get("ref")
+
+
+def test_pairwise_impl_kwarg_is_deprecated_but_works(rng):
+    from repro.core.ssl_loss import ssl_objective
+    logits = jnp.asarray(rng.normal(size=(16, 5)), jnp.float32)
+    labels = jnp.zeros(16, jnp.int32)
+    mask = jnp.ones(16, jnp.float32)
+    W = jnp.asarray(np.abs(rng.normal(size=(16, 16))), jnp.float32)
+    hyp = SSLHyper(0.1, 0.01, 0.0)
+    with pytest.warns(DeprecationWarning, match="pairwise_impl"):
+        old, _ = ssl_objective(logits, labels, mask, W, hyp,
+                               pairwise_impl=PAIRWISE.get("ref"))
+    new, _ = ssl_objective(logits, labels, mask, W, hyp, pairwise="ref")
+    assert float(old) == float(new)
+
+
+# ----------------------------------------------------------------- experiment
+@pytest.fixture(scope="module")
+def ref_result():
+    return Experiment(tiny_config(pairwise="ref")).run()
+
+
+def test_experiment_run_produces_structured_result(ref_result):
+    cfg = tiny_config(pairwise="ref")
+    assert ref_result.config == cfg
+    assert len(ref_result.history) == cfg.train.n_epochs
+    assert ref_result.final["epoch"] == cfg.train.n_epochs - 1
+    assert np.isfinite(ref_result.final["loss/total"])
+    assert ref_result.seconds > 0
+    assert ref_result.params is not None
+    assert ref_result.best("eval/acc") >= ref_result.history[0]["eval/acc"]
+
+
+def test_experiment_matches_handwired_trainer(ref_result):
+    """Experiment.run() must equal the hand-assembled pipeline it replaced."""
+    from repro.core.metabatch import plan_meta_batches
+    from repro.data import MetaBatchPipeline
+    from repro.models.dnn import DNNConfig
+    from repro.optim import adagrad
+    from repro.train.trainer import train_dnn_ssl
+
+    cfg = tiny_config(pairwise="ref")
+    exp = Experiment(cfg).build()    # reuse the same corpus/graph/plan
+    pipe = MetaBatchPipeline(exp.corpus, exp.graph, exp.plan, n_workers=1,
+                             seed=cfg.data.seed)
+    res = train_dnn_ssl(
+        pipe.epoch,
+        cfg=DNNConfig(input_dim=32, hidden_dim=64, n_hidden=2, n_classes=6,
+                      dropout=0.0),
+        hyper=SSLHyper(0.5, 1e-4, 1e-5), n_epochs=2, base_lr=5e-3,
+        dropout=0.0, eval_data=exp.eval_data, seed=0, opt=adagrad(),
+        pairwise="ref")
+    for got, want in zip(ref_result.history, res.history):
+        np.testing.assert_allclose(got["loss/total"], want["loss/total"],
+                                   rtol=1e-6)
+        np.testing.assert_allclose(got["eval/acc"], want["eval/acc"],
+                                   atol=1e-12)
+
+
+def test_pallas_config_matches_ref_config(ref_result):
+    """Selecting the kernel purely via config must not change the losses."""
+    res_pal = Experiment(tiny_config(pairwise="pallas")).run()
+    for a, b in zip(ref_result.history, res_pal.history):
+        np.testing.assert_allclose(a["loss/total"], b["loss/total"],
+                                   rtol=1e-4)
+        np.testing.assert_allclose(a["eval/acc"], b["eval/acc"], atol=5e-2)
+
+
+def test_random_batch_pipeline_via_config():
+    cfg = dataclasses.replace(
+        tiny_config(pairwise="ref"),
+        batch=BatchConfig(pipeline="random_batch", batch_size=96))
+    res = Experiment(cfg).run()
+    assert len(res.history) == 2
+    assert np.isfinite(res.final["loss/total"])
+
+
+def test_random_batch_rejects_oversized_batches():
+    """batch_size*n_workers > n used to hang the generator forever."""
+    cfg = dataclasses.replace(
+        tiny_config(pairwise="ref"),
+        batch=BatchConfig(pipeline="random_batch", batch_size=512))
+    with pytest.raises(ValueError, match="batch_size"):
+        Experiment(cfg).build()
+
+
+def test_zero_batch_epoch_warns_instead_of_crashing():
+    cfg = dataclasses.replace(
+        tiny_config(pairwise="ref"),
+        train=dataclasses.replace(tiny_config().train, n_workers=64,
+                                  n_epochs=1))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        res = Experiment(cfg).run()
+    assert res.history == []
+    assert any("no batches" in str(w.message) for w in caught)
+
+
+def test_parallel_execution_matches_sequential(ref_result):
+    """On one device the ("data",) mesh path must be numerically inert."""
+    cfg = dataclasses.replace(
+        tiny_config(pairwise="ref"),
+        train=dataclasses.replace(tiny_config().train,
+                                  execution="parallel"))
+    res = Experiment(cfg).run()
+    for a, b in zip(ref_result.history, res.history):
+        np.testing.assert_allclose(a["loss/total"], b["loss/total"],
+                                   rtol=1e-6)
