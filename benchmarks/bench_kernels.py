@@ -1,12 +1,22 @@
-"""Kernel micro-benchmarks: fused Pallas graph-regularizer and RBF-affinity
-vs their jnp oracles (interpret mode on CPU — correctness-representative,
-not TPU timings), plus the jnp oracle timings that the trainer uses on CPU.
+"""Kernel micro-benchmarks: fused Pallas graph-regularizer and streaming
+top-k vs their jnp oracles (interpret mode on CPU — correctness-
+representative, not TPU timings), plus the jnp oracle timings that the
+trainer uses on CPU.
+
+Times the *forward* and the *fwd+bwd* (``jax.value_and_grad`` w.r.t. logp)
+paths for ref vs fused, and counts (B, B)-shaped intermediates materialized
+outside Pallas kernels — the fused path must show zero (the whole point of
+the tiled analytic VJP).  ``run(json_path=...)`` additionally dumps the
+records as machine-readable JSON so the perf trajectory is tracked across
+PRs (``benchmarks/run.py`` writes ``BENCH_kernels.json``).
 
 Implementations are looked up from the ``repro.api`` PAIRWISE registry —
 the same path the trainer takes when a config says ``pairwise="ref"`` or
-``"pallas"``.
+``"fused"``.
 """
 from __future__ import annotations
+
+import json
 
 import jax
 import jax.numpy as jnp
@@ -18,31 +28,127 @@ from repro.kernels import ref
 from .common import timeit
 
 
-def run(quick: bool = True) -> list[str]:
+def count_bxb_intermediates(fn, *args, B: int) -> int:
+    """Number of (B, B)-shaped values produced outside Pallas kernels in
+    ``fn``'s jaxpr (descending through pjit/custom_vjp calls; a value coming
+    straight out of a ``pallas_call`` does not count — the kernel produced
+    it tile by tile)."""
+    closed = jax.make_jaxpr(fn)(*args)
+
+    drop_var = getattr(jax.core, "DropVar", ())
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                continue
+            if eqn.primitive.name == "broadcast_in_dim":
+                continue   # constant splat (e.g. a zero cotangent), not a product
+            if all(isinstance(v, drop_var) for v in eqn.outvars):
+                continue   # dead output — DCE removes it before it exists
+            sub = []
+            for p in eqn.params.values():
+                if hasattr(p, "eqns"):               # open Jaxpr
+                    sub.append(p)
+                elif hasattr(p, "jaxpr"):            # ClosedJaxpr
+                    sub.append(p.jaxpr)
+            if sub:
+                # Call-like eqn (pjit/custom_vjp/scan): its own outvars just
+                # re-bind inner productions — count only the inner eqns.
+                n += sum(walk(s) for s in sub)
+                continue
+            n += sum(1 for v in eqn.outvars
+                     if getattr(v.aval, "shape", None) == (B, B))
+        return n
+
+    return walk(closed.jaxpr)
+
+
+def _graph_reg_records(quick: bool) -> list[dict]:
     rng = np.random.default_rng(0)
-    rows = []
-    impl_ref = PAIRWISE.get("ref")
-    impl_pallas = PAIRWISE.get("pallas")
-    for B, C in [(512, 39), (1024, 39)] + ([] if quick else [(2048, 39)]):
+    gamma, kappa = 1.0, 1e-4
+    recs = []
+    impls = {
+        "ref": lambda lp, w: ref.graph_regularizer_ref(lp, w, gamma, kappa),
+        "fused": lambda lp, w, _f=PAIRWISE.get("fused"): _f(lp, w, gamma,
+                                                           kappa),
+    }
+    shapes = [(512, 39), (1024, 39)] + ([] if quick else [(2048, 39)])
+    for B, C in shapes:
         logp = jax.nn.log_softmax(
             jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
         W = jnp.asarray(np.abs(rng.normal(size=(B, B)))
                         * (rng.random((B, B)) < 0.05), jnp.float32)
-        f_ref = jax.jit(impl_ref)
-        t_ref = timeit(lambda: f_ref(logp, W).block_until_ready())
-        rows.append(f"kernel/graph_reg_ref_B{B},{t_ref:.1f},jnp_oracle")
-        if quick:
-            t_pal = timeit(
-                lambda: impl_pallas(logp, W).block_until_ready(), repeats=2)
-            rows.append(
-                f"kernel/graph_reg_pallas_B{B},{t_pal:.1f},interpret_mode")
-    for N, D in [(1024, 351)]:
+        for name, impl in impls.items():
+            if name == "fused" and B > 1024 and jax.default_backend() != "tpu":
+                continue   # interpret-mode grid sweeps get slow at B≥2048
+            fwd = jax.jit(impl)
+            grad = jax.jit(jax.value_and_grad(impl))
+            repeats = 2 if name == "fused" else 5
+            t_fwd = timeit(lambda: fwd(logp, W).block_until_ready(),
+                           repeats=repeats)
+            t_bwd = timeit(
+                lambda: grad(logp, W)[1].block_until_ready(),
+                repeats=repeats)
+            recs.append({
+                "kernel": "graph_reg", "impl": name, "B": B, "C": C,
+                "fwd_us": round(t_fwd, 1), "fwd_bwd_us": round(t_bwd, 1),
+                "bxb_outside_kernels": count_bxb_intermediates(
+                    jax.grad(lambda lp: impl(lp, W)), logp, B=B),
+                "mode": ("interpret" if name == "fused"
+                         and jax.default_backend() != "tpu" else
+                         jax.default_backend()),
+            })
+    return recs
+
+
+def _topk_records(quick: bool) -> list[dict]:
+    from repro.kernels.pairwise import knn_topk_pallas
+
+    rng = np.random.default_rng(0)
+    recs = []
+    for N, D, k in [(1024, 351, 10)]:
         x = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
         f_ref = jax.jit(lambda a: ref.rbf_affinity_ref(a, a, 2.0))
-        t_ref = timeit(lambda: f_ref(x).block_until_ready())
-        rows.append(f"kernel/rbf_ref_N{N},{t_ref:.1f},jnp_oracle")
+        t_dense = timeit(lambda: f_ref(x).block_until_ready())
+        recs.append({"kernel": "rbf_dense", "impl": "ref", "N": N, "D": D,
+                     "fwd_us": round(t_dense, 1),
+                     "mode": jax.default_backend()})
+        f_topk = jax.jit(lambda a: ref.knn_topk_ref(a, a, k,
+                                                    exclude_self=True))
+        t_topk_ref = timeit(lambda: f_topk(x)[0].block_until_ready())
+        recs.append({"kernel": "knn_topk", "impl": "ref", "N": N, "D": D,
+                     "k": k, "fwd_us": round(t_topk_ref, 1),
+                     "mode": jax.default_backend()})
+        if quick:
+            t_stream = timeit(
+                lambda: knn_topk_pallas(x, x, k, exclude_self=True)[0]
+                .block_until_ready(), repeats=2)
+            recs.append({"kernel": "knn_topk", "impl": "pallas_stream",
+                         "N": N, "D": D, "k": k,
+                         "fwd_us": round(t_stream, 1),
+                         "mode": ("interpret"
+                                  if jax.default_backend() != "tpu"
+                                  else "tpu")})
+    return recs
+
+
+def run(quick: bool = True, json_path: str | None = None) -> list[str]:
+    recs = _graph_reg_records(quick) + _topk_records(quick)
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump({"backend": jax.default_backend(), "records": recs},
+                      fh, indent=2)
+    rows = []
+    for r in recs:
+        shape = f"B{r['B']}" if "B" in r else f"N{r['N']}"
+        rows.append(f"kernel/{r['kernel']}_{r['impl']}_{shape},"
+                    f"{r['fwd_us']:.1f},"
+                    + (f"fwd_bwd={r['fwd_bwd_us']:.1f}us;"
+                       f"bxb={r['bxb_outside_kernels']}"
+                       if "fwd_bwd_us" in r else r["mode"]))
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    print("\n".join(run(json_path="BENCH_kernels.json")))

@@ -39,7 +39,10 @@ def main() -> None:
                          lambda: bench_parallel.run(quick)))
     if only is None or "kernels" in only:
         from benchmarks import bench_kernels
-        sections.append(("kernels", lambda: bench_kernels.run(quick)))
+        # Timings also land in BENCH_kernels.json (machine-readable: fwd and
+        # fwd+bwd for ref vs fused) so the perf trajectory survives across PRs.
+        sections.append(("kernels", lambda: bench_kernels.run(
+            quick, json_path="BENCH_kernels.json")))
     if only is None or "roofline" in only:
         from benchmarks import bench_roofline
 

@@ -23,7 +23,7 @@ def main():
     ap.add_argument("--label-ratio", type=float, default=0.02)
     ap.add_argument("--gamma", type=float, default=1.0)
     ap.add_argument("--pairwise", default="auto",
-                    choices=["auto", "ref", "pallas"],
+                    choices=["auto", "ref", "pallas", "fused"],
                     help="pairwise-kernel registry entry")
     args = ap.parse_args()
 

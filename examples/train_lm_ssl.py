@@ -50,7 +50,7 @@ def main():
     ap.add_argument("--graph-builder", default="knn_rbf",
                     help="AFFINITY registry entry")
     ap.add_argument("--pairwise", default="auto",
-                    choices=["auto", "ref", "pallas"],
+                    choices=["auto", "ref", "pallas", "fused"],
                     help="PAIRWISE registry entry")
     args = ap.parse_args()
 

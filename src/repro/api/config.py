@@ -77,16 +77,25 @@ class DataConfig:
 
 @dataclass(frozen=True)
 class GraphConfig:
-    """k-NN affinity graph (paper §3): ``builder`` names an AFFINITY entry."""
+    """k-NN affinity graph (paper §3): ``builder`` names an AFFINITY entry.
+
+    ``construction`` picks the streaming top-k search backend: ``"host"``
+    (numpy, column-streamed) or ``"device"`` (the Pallas streaming top-k
+    kernel) — both exact, neither materializes the N×N distance matrix.
+    """
 
     builder: str = "knn_rbf"
     k: int = 10
     sigma: float | None = None    # None = self-tuning bandwidth
+    construction: str = "host"
 
     def __post_init__(self):
         _require(self.k > 0, f"k must be positive, got {self.k}")
         _require(self.sigma is None or self.sigma > 0,
                  f"sigma must be positive or None, got {self.sigma}")
+        _require(self.construction in ("host", "device"),
+                 f"construction must be 'host' or 'device', "
+                 f"got {self.construction!r}")
 
 
 @dataclass(frozen=True)
@@ -134,27 +143,48 @@ class BatchConfig:
 class ObjectiveConfig:
     """Eq.-2/3 hyper-parameters plus the pairwise-kernel selection.
 
-    ``pairwise`` names a PAIRWISE registry entry (``"auto"`` picks the fused
-    Pallas kernel on TPU and the jnp oracle elsewhere).  ``gamma=kappa=0``
-    recovers the fully-supervised baseline.
+    ``pairwise`` names a PAIRWISE registry entry — ``"ref"`` (jnp oracle),
+    ``"pallas"`` (tiled cross-term kernel), ``"fused"`` (single-pass fused
+    regularizer kernel, fwd + tiled VJP) or ``"auto"`` (fused on TPU, jnp
+    oracle elsewhere).  ``gamma=kappa=0`` recovers the fully-supervised
+    baseline.
+
+    ``tile_bi``/``tile_bj``/``tile_bc`` pin kernel block sizes (rows ×
+    affinity-columns × class-chunk); ``None`` auto-selects from the
+    ``repro.kernels.tuning`` shape/backend table.
     """
 
     gamma: float = 1.0            # graph-regularizer weight γ
     kappa: float = 1e-4           # entropy-regularizer weight κ
     weight_decay: float = 1e-5    # ℓ2 weight λ
     pairwise: str = "auto"
+    tile_bi: int | None = None
+    tile_bj: int | None = None
+    tile_bc: int | None = None
 
     def __post_init__(self):
         _require(self.gamma >= 0 and self.kappa >= 0
                  and self.weight_decay >= 0,
                  "gamma, kappa and weight_decay must all be >= 0, got "
                  f"({self.gamma}, {self.kappa}, {self.weight_decay})")
+        for name in ("tile_bi", "tile_bj", "tile_bc"):
+            v = getattr(self, name)
+            _require(v is None or (isinstance(v, int) and v > 0),
+                     f"{name} must be a positive int or None, got {v!r}")
 
     def hyper(self):
         """The ``repro.core.ssl_loss.SSLHyper`` this config describes."""
         from repro.core.ssl_loss import SSLHyper
         return SSLHyper(gamma=self.gamma, kappa=self.kappa,
                         weight_decay=self.weight_decay)
+
+    def tiles(self):
+        """The pinned-tile ``TileSpec`` (or None when fully auto)."""
+        if self.tile_bi is None and self.tile_bj is None \
+                and self.tile_bc is None:
+            return None
+        from repro.kernels.tuning import TileSpec
+        return TileSpec(bi=self.tile_bi, bj=self.tile_bj, bc=self.tile_bc)
 
 
 @dataclass(frozen=True)

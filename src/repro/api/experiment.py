@@ -18,13 +18,15 @@ the Fig.-3a label-ratio grid — don't re-run graph construction per point::
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 from typing import Any, Callable
 
 import numpy as np
 
 from repro.api.config import ExperimentConfig
-from repro.api.registry import AFFINITY, OPTIMIZER, PARTITIONER, PIPELINE
+from repro.api.registry import (AFFINITY, OPTIMIZER, PARTITIONER, PIPELINE,
+                                resolve_pairwise)
 
 __all__ = ["Experiment", "ExperimentResult"]
 
@@ -89,8 +91,27 @@ class Experiment:
             self.corpus, self.eval_data = self._make_data()
         if self.graph is None:
             builder = AFFINITY.get(cfg.graph.builder)
+            # Only forward the construction backend to builders that take
+            # it — custom AFFINITY entries keep the bare (X, k=, sigma=)
+            # contract from the registry docs.
+            try:
+                params = inspect.signature(builder).parameters
+                takes_backend = ("backend" in params or any(
+                    p.kind is inspect.Parameter.VAR_KEYWORD
+                    for p in params.values()))
+            except (TypeError, ValueError):   # non-introspectable callable
+                takes_backend = False
+            if takes_backend:
+                kw = {"backend": cfg.graph.construction}
+            elif cfg.graph.construction != "host":
+                raise ValueError(
+                    f"graph.construction={cfg.graph.construction!r} but "
+                    f"AFFINITY builder {cfg.graph.builder!r} does not "
+                    f"accept a backend= argument")
+            else:
+                kw = {}
             self.graph = builder(self.corpus.X, k=cfg.graph.k,
-                                 sigma=cfg.graph.sigma)
+                                 sigma=cfg.graph.sigma, **kw)
         needs_plan = cfg.batch.pipeline != "random_batch"
         if self.plan is None and needs_plan:
             from repro.core.metabatch import plan_meta_batches
@@ -146,6 +167,11 @@ class Experiment:
             dropout=t.dropout)
         mesh = (_data_mesh(t.n_workers)
                 if t.execution == "parallel" else None)
+        # Resolve the pairwise kernel once here (with any pinned tile sizes
+        # from the config) and hand the callable down — nothing below this
+        # point touches the registry again.
+        pairwise = resolve_pairwise(cfg.objective.pairwise,
+                                    tiles=cfg.objective.tiles())
         t0 = time.time()
         res = train_dnn_ssl(
             self.pipeline,
@@ -159,7 +185,7 @@ class Experiment:
             eval_data=self.eval_data,
             seed=t.seed,
             opt=OPTIMIZER.get(t.optimizer)(),
-            pairwise=cfg.objective.pairwise,
+            pairwise=pairwise,
             mesh=mesh)
         seconds = time.time() - t0
         final = res.history[-1] if res.history else {}

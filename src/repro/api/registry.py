@@ -24,6 +24,7 @@ Registering a new component::
 """
 from __future__ import annotations
 
+import functools
 import importlib
 from typing import Any, Callable, Iterable
 
@@ -111,15 +112,20 @@ PIPELINE.register("random_batch",
                   "repro.data.pipeline:make_random_batch_pipeline")
 
 #: ``(logp, W) -> scalar`` computing the Eq.-3/4 contraction
-#: ``Σ_ij W_ij · Hc(p_i, p_j)``.
-#:   * ``"ref"``    — the pure-jnp oracle (always available);
-#:   * ``"pallas"`` — the fused MXU-tiled kernel in ``repro.kernels.graph_reg``
-#:     with its analytic VJP (interpret mode off-TPU);
-#:   * ``"auto"``   — ``"pallas"`` on TPU backends, ``"ref"`` elsewhere.
+#: ``Σ_ij W_ij · Hc(p_i, p_j)`` — or, for entries carrying the
+#: ``full_regularizer`` marker, ``(logp, W, γ, κ) -> scalar`` computing the
+#: *entire* regularizer (cross + degrees + entropy) in one kernel sweep.
+#:   * ``"ref"``    — the pure-jnp cross-term oracle (always available);
+#:   * ``"pallas"`` — the MXU-tiled cross-term kernel with its tiled
+#:     analytic VJP (interpret mode off-TPU);
+#:   * ``"fused"``  — the single-pass fused regularizer kernel (fwd + tiled
+#:     VJP), unconditionally Pallas;
+#:   * ``"auto"``   — ``"fused"`` on TPU backends, the jnp oracle elsewhere.
 PAIRWISE = Registry("pairwise")
 PAIRWISE.register("ref", "repro.kernels.ref:graph_reg_pairwise_ref")
 PAIRWISE.register("pallas", "repro.kernels.ops:graph_reg_pairwise_pallas_vjp")
-PAIRWISE.register("auto", "repro.kernels.ops:graph_reg_pairwise")
+PAIRWISE.register("fused", "repro.kernels.ops:graph_regularizer_fused")
+PAIRWISE.register("auto", "repro.kernels.ops:graph_regularizer_auto")
 
 #: ``(**hyper) -> repro.optim.Optimizer``
 OPTIMIZER = Registry("optimizer")
@@ -130,12 +136,26 @@ OPTIMIZER.register("sgd", "repro.optim:sgd")
 
 def resolve_pairwise(
     pairwise: str | Callable | None,
+    *,
+    tiles=None,
 ) -> Callable | None:
     """Resolve a pairwise-kernel *name* to its implementation.
 
     ``None`` (use the caller's inline oracle) and already-resolved callables
     pass through unchanged, so call sites can accept either form.
+
+    ``tiles`` (a ``repro.kernels.tuning.TileSpec``, e.g. from
+    ``ObjectiveConfig.tiles()``) pins kernel block sizes: entries that
+    advertise ``accepts_tiles`` are wrapped so every call carries the spec;
+    entries that don't (the jnp oracle) ignore it.
     """
     if pairwise is None or callable(pairwise):
         return pairwise
-    return PAIRWISE.get(pairwise)
+    impl = PAIRWISE.get(pairwise)
+    if tiles is not None and getattr(impl, "accepts_tiles", False):
+        @functools.wraps(impl)   # copies full_regularizer/accepts_tiles too
+        def tiled(*args, _impl=impl, _tiles=tiles, **kw):
+            kw.setdefault("tiles", _tiles)
+            return _impl(*args, **kw)
+        return tiled
+    return impl

@@ -4,10 +4,19 @@ The paper builds a sparse k-NN graph (k=10) over ~1M speech frames with a
 ball-tree search, symmetrizes it, and applies an RBF kernel
 ``w_ij = exp(-||x_i - x_j|| / (2 sigma^2))`` to get edge weights.
 
-Graph construction is a one-time *host-side* preprocessing step (paper §1.1),
-so this module is numpy/scipy code.  The blocked pairwise-distance inner loop
-has a device-side twin in ``repro.kernels.pairwise`` (Pallas) used when the
-feature matrix is already on device; both are validated against each other.
+Search is exact blocked brute force, *streaming over candidate columns*: for
+each row block only one (row_block × col_block) distance tile is live at a
+time and a running per-row top-k is merged tile by tile — the N×N (or even
+row_block × N) distance matrix is never materialized, which is what keeps
+construction feasible on the ROADMAP's path to corpus-scale graphs (graph
+construction, not training, is the scale bottleneck — Bai et al. 1511.06104).
+
+Two backends share the same semantics and are validated against each other:
+
+  * ``"host"``   — numpy, column-streamed (this module; the default);
+  * ``"device"`` — the Pallas streaming top-k kernel
+    (``repro.kernels.pairwise.knn_topk_pallas``), which keeps the running
+    top-k in VMEM scratch next to the MXU distance contraction.
 """
 from __future__ import annotations
 
@@ -77,33 +86,85 @@ def pairwise_sq_dists(X: np.ndarray, Y: np.ndarray) -> np.ndarray:
     return d2
 
 
+def _streaming_topk_host(X: np.ndarray, k: int, block: int,
+                         col_block: int) -> tuple[np.ndarray, np.ndarray]:
+    """Column-streamed exact top-k: running (rows, k) state merged one
+    (block × col_block) distance tile at a time; peak memory is one tile
+    plus the running state — independent of n along the candidate axis."""
+    n = X.shape[0]
+    nrm = np.einsum("id,id->i", X, X)
+    cols = np.empty((n, k), dtype=np.int64)
+    dsts = np.empty((n, k), dtype=np.float64)
+    for s in range(0, n, block):
+        e = min(s + block, n)
+        run_d = np.full((e - s, k), np.inf)
+        run_i = np.full((e - s, k), -1, dtype=np.int64)
+        for cs in range(0, n, col_block):
+            ce = min(cs + col_block, n)
+            d2 = nrm[s:e, None] - 2.0 * (X[s:e] @ X[cs:ce].T) + nrm[None, cs:ce]
+            np.maximum(d2, 0.0, out=d2)
+            diag = np.arange(max(s, cs), min(e, ce))     # exclude self
+            if diag.size:
+                d2[diag - s, diag - cs] = np.inf
+            cand_d = np.concatenate([run_d, d2], axis=1)
+            cand_i = np.concatenate(
+                [run_i, np.broadcast_to(np.arange(cs, ce), d2.shape)], axis=1)
+            sel = np.argpartition(cand_d, k - 1, axis=1)[:, :k]
+            run_d = np.take_along_axis(cand_d, sel, axis=1)
+            run_i = np.take_along_axis(cand_i, sel, axis=1)
+        order = np.argsort(run_d, axis=1, kind="stable")
+        cols[s:e] = np.take_along_axis(run_i, order, axis=1)
+        dsts[s:e] = np.take_along_axis(run_d, order, axis=1)
+    return cols, dsts
+
+
+def _streaming_topk_device(X: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """The Pallas streaming top-k kernel (running top-k in VMEM scratch).
+
+    Calls the kernel unconditionally (interpret mode off-TPU) — falling back
+    to the dense jnp oracle here would silently break the "never materialize
+    N×M" contract this backend exists for.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.pairwise import knn_topk_pallas
+
+    x = jnp.asarray(np.asarray(X, dtype=np.float32))
+    d2, idx = knn_topk_pallas(x, x, k, exclude_self=True)
+    return (np.asarray(idx, dtype=np.int64),
+            np.asarray(d2, dtype=np.float64))
+
+
 def knn_edges(
     X: np.ndarray,
     k: int,
     *,
     block: int = 2048,
+    col_block: int = 4096,
+    backend: str = "host",
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Exact k-NN by blocked brute force.
+    """Exact k-NN by blocked brute force, streaming over candidate columns.
 
     The paper uses an approximate ball-tree (sklearn); for our corpus sizes
-    exact blocked search is both simpler and exactly reproducible.  Returns
-    (rows, cols, sq_dists) for the directed k-NN edge set (self excluded).
+    exact blocked search is both simpler and exactly reproducible.  The
+    candidate axis is consumed in ``col_block``-wide chunks against a
+    running per-row top-k, so no row ever sees more than one distance tile
+    at a time.  ``backend="device"`` routes the search through the Pallas
+    streaming top-k kernel instead (same semantics, f32 distances).
+    Returns (rows, cols, sq_dists) for the directed k-NN edge set (self
+    excluded), neighbours sorted nearest-first.
     """
     n = X.shape[0]
     k = min(k, n - 1)
-    rows = np.empty((n, k), dtype=np.int64)
-    dsts = np.empty((n, k), dtype=np.float64)
-    for s in range(0, n, block):
-        e = min(s + block, n)
-        d2 = pairwise_sq_dists(X[s:e], X)
-        d2[np.arange(e - s), np.arange(s, e)] = np.inf  # exclude self
-        idx = np.argpartition(d2, k - 1, axis=1)[:, :k]
-        part = np.take_along_axis(d2, idx, axis=1)
-        order = np.argsort(part, axis=1)
-        rows[s:e] = np.take_along_axis(idx, order, axis=1)
-        dsts[s:e] = np.take_along_axis(part, order, axis=1)
+    if backend not in ("host", "device"):
+        raise ValueError(
+            f"backend must be 'host' or 'device', got {backend!r}")
+    if backend == "device":
+        cols, dsts = _streaming_topk_device(X, k)
+    else:
+        cols, dsts = _streaming_topk_host(X, k, block, col_block)
     src = np.repeat(np.arange(n), k)
-    return src, rows.ravel(), dsts.ravel()
+    return src, cols.ravel(), dsts.ravel()
 
 
 def build_affinity_graph(
@@ -112,15 +173,20 @@ def build_affinity_graph(
     k: int = 10,
     sigma: float | None = None,
     block: int = 2048,
+    col_block: int = 4096,
+    backend: str = "host",
 ) -> AffinityGraph:
     """Build the symmetrized RBF-weighted k-NN graph of the paper.
 
     ``sigma=None`` uses the self-tuning heuristic: sigma = mean distance to
     the k-th neighbour (the paper does not report its sigma; this is the
-    standard choice and is recorded on the returned graph).
+    standard choice and is recorded on the returned graph).  ``backend``
+    selects the streaming top-k search: ``"host"`` (numpy) or ``"device"``
+    (Pallas kernel) — see :func:`knn_edges`.
     """
     n = X.shape[0]
-    src, dst, d2 = knn_edges(X, k, block=block)
+    src, dst, d2 = knn_edges(X, k, block=block, col_block=col_block,
+                             backend=backend)
     dist = np.sqrt(d2)
     if sigma is None:
         kth = dist.reshape(n, -1)[:, -1]

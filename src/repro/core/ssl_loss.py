@@ -15,12 +15,13 @@ Eq. 3 (entropy/cross-entropy decomposition, constants w.r.t. θ dropped):
 All functions take *logits* and work in log-space for stability.  The dense
 ``W`` block is the (meta-)batch's affinity sub-matrix — dense by construction
 after graph partitioning (paper Fig. 1b); the pairwise contraction
-``Σ_ij W_ij Hc(p_i,p_j)`` is the compute hot-spot and has a fused Pallas
-kernel in ``repro.kernels.graph_reg`` — select it by name via
-``pairwise="pallas"`` (or ``"auto"``), resolved through the
-``repro.api.registry.PAIRWISE`` registry.  ``pairwise=None`` keeps the
-inline jnp oracle.  The old ``pairwise_impl=`` callable kwarg still works
-but is deprecated.
+``Σ_ij W_ij Hc(p_i,p_j)`` is the compute hot-spot and has fused Pallas
+kernels in ``repro.kernels.graph_reg`` — select by name via
+``pairwise="pallas"`` (cross term), ``"fused"`` (the whole regularizer in
+one sweep) or ``"auto"`` (fused on TPU, jnp oracle elsewhere), resolved
+through the ``repro.api.registry.PAIRWISE`` registry.  ``pairwise=None``
+keeps the inline jnp oracle.  The old ``pairwise_impl=`` callable kwarg
+still works but is deprecated.
 """
 from __future__ import annotations
 
@@ -67,13 +68,19 @@ class SSLHyper:
 def _resolve_pairwise(pairwise: str | Callable | None,
                       pairwise_impl: Callable | None) -> Callable | None:
     """Back-compat shim: prefer the deprecated explicit callable, else look
-    the name up in the PAIRWISE registry (None -> inline jnp oracle)."""
+    the name up in the PAIRWISE registry (None -> inline jnp oracle).
+
+    Already-resolved callables (and None) short-circuit without touching the
+    registry, so callers can resolve once and pass the callable down.
+    """
     if pairwise_impl is not None:
         warnings.warn(
             "pairwise_impl= is deprecated; pass pairwise=<registry name> "
-            "(e.g. 'ref', 'pallas', 'auto') instead", DeprecationWarning,
-            stacklevel=3)
+            "(e.g. 'ref', 'pallas', 'fused', 'auto') instead",
+            DeprecationWarning, stacklevel=3)
         return pairwise_impl
+    if pairwise is None or callable(pairwise):
+        return pairwise
     from repro.api.registry import resolve_pairwise  # lazy: avoids cycle
     return resolve_pairwise(pairwise)
 
@@ -108,11 +115,17 @@ def graph_regularizer(
     """γ Σ_ij W_ij Hc(p_i,p_j) − (κ + γ Σ_j W_ij) H(p_i)   (Eq. 4 + entropy reg).
 
     ``pairwise`` selects the contraction implementation by registry name
-    ("ref" | "pallas" | "auto"); ``None`` uses the inline jnp oracle.
+    ("ref" | "pallas" | "fused" | "auto"); ``None`` uses the inline jnp
+    oracle.  Implementations carrying the ``full_regularizer`` marker (the
+    fused single-pass kernel) compute the *whole* penalty — cross term, row
+    degrees and entropy correction — in one sweep, so the separate jnp
+    degree/entropy passes below are skipped entirely.
     Returns the summed (not averaged) penalty over the batch.
     """
-    impl = (_resolve_pairwise(pairwise, pairwise_impl)
-            or pairwise_cross_entropy_term)
+    impl = _resolve_pairwise(pairwise, pairwise_impl)
+    if impl is not None and getattr(impl, "full_regularizer", False):
+        return impl(logp, W, gamma, kappa)
+    impl = impl or pairwise_cross_entropy_term
     cross = impl(logp, W)
     deg = jnp.sum(W, axis=1)                     # Σ_j ω_ij
     h = entropy(logp)
@@ -143,14 +156,18 @@ def ssl_objective(
       labels: (B,) int class ids; entries where ``label_mask == 0`` ignored.
       label_mask: (B,) {0,1} — 1 for labeled points (semi-supervised).
       W: (B, B) dense affinity block for this batch.
-      pairwise: pairwise-kernel registry name ("ref" | "pallas" | "auto")
-        or a ``(logp, W) -> scalar`` callable; None = inline jnp oracle.
+      pairwise: pairwise-kernel registry name ("ref" | "pallas" | "fused" |
+        "auto") or a ``(logp, W) -> scalar`` callable; None = inline jnp
+        oracle.  "fused"/"auto" compute the whole graph regularizer in one
+        Pallas sweep (see ``graph_regularizer``).
       reduction: 'sum' is the paper-faithful Eq. 2; 'mean' normalizes the
         supervised term by #labeled and the graph terms by B (scale-stable
         across batch sizes; used by the trainer).
 
     Returns (loss, metrics-dict).
     """
+    # Resolve the registry name exactly once; graph_regularizer passes the
+    # already-resolved callable straight through (no second lookup).
     pairwise = _resolve_pairwise(pairwise, pairwise_impl)
     logp = jax.nn.log_softmax(logits, axis=-1)
     # Supervised term: Hc(t_i, p_i) over labeled points (t one-hot => CE).

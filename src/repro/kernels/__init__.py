@@ -1,2 +1,4 @@
 from .flash_attention import flash_attention_gqa_pallas
-from .ops import graph_reg_pairwise, rbf_affinity
+from .ops import (graph_reg_pairwise, graph_regularizer_auto,
+                  graph_regularizer_fused, knn_topk, rbf_affinity)
+from .tuning import TileSpec, select_tiles

@@ -1,21 +1,42 @@
-"""Fused graph-regularizer kernel (the paper's compute hot-spot, §1.1).
+"""Fused graph-regularizer kernels (the paper's compute hot-spot, §1.1).
 
-Computes the weighted pairwise cross-entropy contraction of Eq. 3/4:
+The Eq.-3/4 regularizer over one dense (meta-)batch affinity block is
 
-    cross(P, logP, W) = Σ_ij W_ij · Hc(p_i, p_j) = −Σ_ij W_ij (P · logPᵀ)_ij
+    L(logp, W) = γ Σ_ij W_ij · Hc(p_i, p_j) − Σ_i (κ + γ Σ_j W_ij) H(p_i)
 
-The paper's efficiency argument is exactly this: graph partitioning makes the
-per-batch affinity block W dense, so the regularizer becomes a matrix-matrix
-product instead of sparse gathers.  On TPU we tile it for the MXU:
+with Hc(p_i, p_j) = −Σ_c p_ic log p_jc and H(p_i) = −Σ_c p_ic log p_ic.
+The paper's efficiency argument is exactly this: graph partitioning makes
+the per-batch affinity block W dense, so the regularizer becomes one
+matrix-matrix contraction instead of sparse gathers.  On TPU we tile it for
+the MXU, and — unlike the historical three-pass path (Pallas cross term,
+then jnp degrees, then jnp entropy) — compute *all three terms in a single
+grid sweep*:
 
-  grid = (B/bi, B/bj, C/bc);  for each (i, j) output tile, the class
-  dimension is accumulated over bc-sized chunks into a VMEM scratch tile
-  (bi × bj, f32), and on the last chunk the tile is contracted with the
-  W tile into a scalar accumulator.
+  grid = (B/bi, B/bj, C/bc), class chunk innermost.  For each (i, j) tile
+  the class dimension is accumulated over bc-chunks into a VMEM scratch
+  tile (bi × bj, f32); row degrees Σ_j W_ij accumulate once per j-block
+  into a (bi, 1) scratch, the per-row entropy accumulates on the j == 0
+  pass, and the last chunk of each tile folds everything into the scalar
+  output.
 
-All tile dims default to 128/512 — MXU-aligned (128 lanes) with the class
-chunk kept wide to amortize the weight-stationary W tile.  VMEM working set:
-bi·bc + bj·bc + bi·bj + bi·bj(scratch) floats ≈ 0.9 MB at defaults.
+The backward pass is analytic and tiled the same way (see
+``_reg_bwd_dlogp_kernel`` / ``_reg_bwd_dw_kernel``):
+
+    ∂L/∂logp = γ·[−(P ⊙ (W·logP) + Wᵀ·P)] + (κ + γ·deg) ⊙ P ⊙ (logP + 1)
+    ∂L/∂W_ij = −γ·[(P·logPᵀ)_ij + H(p_i)]
+
+so no B×B intermediate is ever materialized outside a kernel.
+
+All kernels take an internal scalar triple ``(gc, κ, ge)`` — cross-term
+weight, uniform entropy weight, degree-entropy weight — so the same code
+serves both the full regularizer (gc = ge = γ) and the bare pairwise cross
+term (gc = 1, κ = ge = 0).
+
+Block sizes default to the ``repro.kernels.tuning`` table — MXU-aligned
+(128 lanes) with the class chunk kept wide to amortize the weight-
+stationary W tile.  VMEM working set at (128, 128, 512) defaults:
+bi·bc + bj·bc + bi·bj + scratch ≈ 0.9 MB.  ``interpret=None`` derives the
+mode from the backend: compiled on TPU, interpreter elsewhere.
 """
 from __future__ import annotations
 
@@ -26,11 +47,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .tuning import TileSpec, default_interpret as _default_interpret, \
+    select_tiles
+
 DEFAULT_BI = 128
 DEFAULT_BJ = 128
 DEFAULT_BC = 512
 
 
+def _pad2(a: jax.Array, pr: int, pc: int) -> jax.Array:
+    return jnp.pad(a, ((0, pr), (0, pc))) if (pr or pc) else a
+
+
+def _reg_tiles(B: int, C: int, bi, bj, bc) -> tuple[int, int, int]:
+    """Table-selected tiles with explicit overrides, clamped to the shape."""
+    auto = select_tiles("graph_reg", rows=B,
+                        pinned=TileSpec(bi=bi, bj=bj, bc=bc))
+    return (min(auto.bi or DEFAULT_BI, B), min(auto.bj or DEFAULT_BJ, B),
+            min(auto.bc or DEFAULT_BC, C))
+
+
+# ---------------------------------------------------------------------------
+# Forward: single-pass fused regularizer.
+# ---------------------------------------------------------------------------
 def _graph_reg_kernel(p_ref, logp_ref, w_ref, out_ref, acc_ref, *,
                       n_c_blocks: int):
     ci = pl.program_id(2)
@@ -57,13 +96,132 @@ def _graph_reg_kernel(p_ref, logp_ref, w_ref, out_ref, acc_ref, *,
         out_ref[0, 0] += -jnp.sum(w_ref[...] * acc_ref[...])
 
 
+def _fused_reg_kernel(p_ref, logpj_ref, logpi_ref, w_ref, s_ref, out_ref,
+                      acc_ref, deg_ref, ent_ref, *, n_j: int, n_c: int):
+    i, j, c = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0) & (c == 0))
+    def _init_out():
+        out_ref[0, 0] = 0.0
+
+    @pl.when((j == 0) & (c == 0))
+    def _init_row_state():
+        deg_ref[...] = jnp.zeros_like(deg_ref)
+        ent_ref[...] = jnp.zeros_like(ent_ref)
+
+    @pl.when(c == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        # Row degrees: one j-block strip of Σ_j W_ij per tile (W is c-inv).
+        deg_ref[...] += jnp.sum(w_ref[...], axis=1, keepdims=True)
+
+    # S_tile += P_i(bi, bc) @ logP_j(bj, bc)^T   — MXU contraction.
+    acc_ref[...] += jax.lax.dot_general(
+        p_ref[...], logpj_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _entropy_chunk():
+        # H(p_i) accumulated over class chunks, once per row block (j == 0).
+        ent_ref[...] += -jnp.sum(p_ref[...] * logpi_ref[...], axis=1,
+                                 keepdims=True)
+
+    gc = s_ref[0, 0]
+    kappa = s_ref[0, 1]
+    ge = s_ref[0, 2]
+
+    @pl.when(c == n_c - 1)
+    def _finish_tile():
+        out_ref[0, 0] += -gc * jnp.sum(w_ref[...] * acc_ref[...])
+
+    @pl.when((j == n_j - 1) & (c == n_c - 1))
+    def _finish_row_block():
+        # −Σ_i (κ + ge·deg_i)·H(p_i) for this row block; deg/ent complete.
+        out_ref[0, 0] += -jnp.sum((kappa + ge * deg_ref[...]) * ent_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj", "bc", "interpret"))
+def _fused_reg_forward(
+    logp: jax.Array, W: jax.Array, scalars: jax.Array, *,
+    bi: int, bj: int, bc: int, interpret: bool,
+) -> jax.Array:
+    B, C = logp.shape
+    pad_i, pad_j, pad_c = (-B) % bi, (-B) % bj, (-C) % bc
+    # Padding: p rows/cols pad to 0 (so padded entries kill every product);
+    # logp pads to 0 as well — 0·logp and p·0 terms all vanish.
+    p = _pad2(jnp.exp(logp), pad_i, pad_c)
+    logpj = _pad2(logp, pad_j, pad_c)
+    logpi = _pad2(logp, pad_i, pad_c)
+    Wp = _pad2(W, pad_i, pad_j)
+    grid = ((B + pad_i) // bi, (B + pad_j) // bj, (C + pad_c) // bc)
+    out = pl.pallas_call(
+        functools.partial(_fused_reg_kernel, n_j=grid[1], n_c=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bc), lambda i, j, c: (i, c)),
+            pl.BlockSpec((bj, bc), lambda i, j, c: (j, c)),
+            pl.BlockSpec((bi, bc), lambda i, j, c: (i, c)),
+            pl.BlockSpec((bi, bj), lambda i, j, c: (i, j)),
+            pl.BlockSpec((1, 4), lambda i, j, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, c: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bi, bj), jnp.float32),   # S tile accumulator
+            pltpu.VMEM((bi, 1), jnp.float32),    # row degrees
+            pltpu.VMEM((bi, 1), jnp.float32),    # row entropies
+        ],
+        interpret=interpret,
+    )(p.astype(jnp.float32), logpj.astype(jnp.float32),
+      logpi.astype(jnp.float32), Wp.astype(jnp.float32), scalars)
+    return out[0, 0]
+
+
+def graph_reg_fused_pallas(
+    logp: jax.Array, W: jax.Array, gamma: float, kappa: float, *,
+    bi: int | None = None, bj: int | None = None, bc: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-pass fused Eq.-3/4 regularizer (cross + degrees + entropy).
+
+    Returns γ Σ_ij W_ij Hc(p_i,p_j) − Σ_i (κ + γ Σ_j W_ij) H(p_i) as one
+    scalar from one grid sweep.  logp: (B, C); W: (B, B).
+    """
+    B, C = logp.shape
+    bi, bj, bc = _reg_tiles(B, C, bi, bj, bc)
+    scalars = jnp.stack([gamma, kappa, gamma, 0.0]).astype(
+        jnp.float32).reshape(1, 4)
+    return _fused_reg_forward(logp, W, scalars, bi=bi, bj=bj, bc=bc,
+                              interpret=_default_interpret(interpret))
+
+
+def graph_reg_cross_pallas(
+    logp: jax.Array, W: jax.Array, *,
+    bi: int | None = None, bj: int | None = None, bc: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Bare cross term Σ_ij W_ij Hc(p_i,p_j) through the fused kernel
+    (gc = 1, κ = ge = 0 switches the entropy/degree terms off)."""
+    B, C = logp.shape
+    bi, bj, bc = _reg_tiles(B, C, bi, bj, bc)
+    scalars = jnp.zeros((1, 4), jnp.float32).at[0, 0].set(1.0)
+    return _fused_reg_forward(logp, W, scalars, bi=bi, bj=bj, bc=bc,
+                              interpret=_default_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("bi", "bj", "bc", "interpret"))
 def graph_reg_pairwise_pallas(
     logp: jax.Array, W: jax.Array, *,
     bi: int = DEFAULT_BI, bj: int = DEFAULT_BJ, bc: int = DEFAULT_BC,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Σ_ij W_ij Hc(p_i, p_j) with p = exp(logp).  logp: (B, C); W: (B, B)."""
+    """Σ_ij W_ij Hc(p_i, p_j) with p = exp(logp).  logp: (B, C); W: (B, B).
+
+    The original cross-term-only kernel, kept as the minimal reference
+    Pallas path; the registry entries now route through the fused kernel.
+    """
+    interpret = _default_interpret(interpret)
     B, C = logp.shape
     bi, bj, bc = min(bi, B), min(bj, B), min(bc, C)
     pad_i = (-B) % bi
@@ -96,3 +254,172 @@ def graph_reg_pairwise_pallas(
     )(p.astype(jnp.float32), logp_p.astype(jnp.float32),
       Wp.astype(jnp.float32))
     return out[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Backward: tiled analytic VJP (no B×B intermediate outside the kernels).
+# ---------------------------------------------------------------------------
+def _reg_bwd_dlogp_kernel(w_ref, wt_ref, pj_ref, logpj_ref, pi_ref,
+                          logpi_ref, s_ref, out_ref, a_ref, b_ref, deg_ref,
+                          *, n_j: int):
+    c, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init_tile():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    @pl.when((c == 0) & (j == 0))
+    def _init_deg():
+        deg_ref[...] = jnp.zeros_like(deg_ref)
+
+    # A += W[i-blk, j-blk] @ logP[j-blk, c-blk]        (the W·logP term)
+    a_ref[...] += jnp.dot(w_ref[...], logpj_ref[...],
+                          preferred_element_type=jnp.float32)
+    # B += W[j-blk, i-blk]ᵀ @ P[j-blk, c-blk]          (the Wᵀ·P term)
+    b_ref[...] += jax.lax.dot_general(
+        wt_ref[...], pj_ref[...],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(c == 0)
+    def _deg_chunk():
+        deg_ref[...] += jnp.sum(w_ref[...], axis=1, keepdims=True)
+
+    @pl.when(j == n_j - 1)
+    def _finish():
+        g, gc, kappa, ge = (s_ref[0, 0], s_ref[0, 1],
+                            s_ref[0, 2], s_ref[0, 3])
+        p = pi_ref[...]
+        coef = kappa + ge * deg_ref[...]
+        out_ref[...] = g * (-gc * (p * a_ref[...] + b_ref[...])
+                            + coef * p * (logpi_ref[...] + 1.0))
+
+
+def _reg_bwd_dw_kernel(pi_ref, logpj_ref, logpi_ref, s_ref, out_ref,
+                       acc_ref, ent_ref, *, n_c: int):
+    j, c = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((j == 0) & (c == 0))
+    def _init_ent():
+        ent_ref[...] = jnp.zeros_like(ent_ref)
+
+    # S_tile += P_i(bi, bc) @ logP_j(bj, bc)^T
+    acc_ref[...] += jax.lax.dot_general(
+        pi_ref[...], logpj_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _entropy_chunk():
+        ent_ref[...] += -jnp.sum(pi_ref[...] * logpi_ref[...], axis=1,
+                                 keepdims=True)
+
+    @pl.when(c == n_c - 1)
+    def _finish():
+        g, gc, ge = s_ref[0, 0], s_ref[0, 1], s_ref[0, 3]
+        out_ref[...] = -g * (gc * acc_ref[...] + ge * ent_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj", "bc", "interpret"))
+def _reg_bwd_dlogp(
+    logp: jax.Array, W: jax.Array, scalars: jax.Array, *,
+    bi: int, bj: int, bc: int, interpret: bool,
+) -> jax.Array:
+    """dL/dlogp tiles: grid (B/bi, C/bc, B/bj), contraction block innermost."""
+    B, C = logp.shape
+    pad_i, pad_j, pad_c = (-B) % bi, (-B) % bj, (-C) % bc
+    p = jnp.exp(logp)
+    pi, logpi = _pad2(p, pad_i, pad_c), _pad2(logp, pad_i, pad_c)
+    pj, logpj = _pad2(p, pad_j, pad_c), _pad2(logp, pad_j, pad_c)
+    # W is read through two views — (i, j) blocks and transposed (j, i)
+    # blocks — so both axes must cover both block paddings.
+    L = max(B + pad_i, B + pad_j)
+    Wp = _pad2(W, L - B, L - B)
+    grid = ((B + pad_i) // bi, (C + pad_c) // bc, (B + pad_j) // bj)
+    out = pl.pallas_call(
+        functools.partial(_reg_bwd_dlogp_kernel, n_j=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bj), lambda i, c, j: (i, j)),   # W
+            pl.BlockSpec((bj, bi), lambda i, c, j: (j, i)),   # W (transposed)
+            pl.BlockSpec((bj, bc), lambda i, c, j: (j, c)),   # P rows j
+            pl.BlockSpec((bj, bc), lambda i, c, j: (j, c)),   # logP rows j
+            pl.BlockSpec((bi, bc), lambda i, c, j: (i, c)),   # P rows i
+            pl.BlockSpec((bi, bc), lambda i, c, j: (i, c)),   # logP rows i
+            pl.BlockSpec((1, 4), lambda i, c, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, bc), lambda i, c, j: (i, c)),
+        out_shape=jax.ShapeDtypeStruct((B + pad_i, C + pad_c), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bi, bc), jnp.float32),   # (W·logP) tile
+            pltpu.VMEM((bi, bc), jnp.float32),   # (Wᵀ·P) tile
+            pltpu.VMEM((bi, 1), jnp.float32),    # row degrees
+        ],
+        interpret=interpret,
+    )(Wp.astype(jnp.float32), Wp.astype(jnp.float32),
+      pj.astype(jnp.float32), logpj.astype(jnp.float32),
+      pi.astype(jnp.float32), logpi.astype(jnp.float32), scalars)
+    return out[:B, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj", "bc", "interpret"))
+def _reg_bwd_dw(
+    logp: jax.Array, scalars: jax.Array, *,
+    bi: int, bj: int, bc: int, interpret: bool,
+) -> jax.Array:
+    """dL/dW tiles: grid (B/bi, B/bj, C/bc), class chunk innermost."""
+    B, C = logp.shape
+    pad_i, pad_j, pad_c = (-B) % bi, (-B) % bj, (-C) % bc
+    p = jnp.exp(logp)
+    pi, logpi = _pad2(p, pad_i, pad_c), _pad2(logp, pad_i, pad_c)
+    logpj = _pad2(logp, pad_j, pad_c)
+    grid = ((B + pad_i) // bi, (B + pad_j) // bj, (C + pad_c) // bc)
+    out = pl.pallas_call(
+        functools.partial(_reg_bwd_dw_kernel, n_c=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bc), lambda i, j, c: (i, c)),   # P rows i
+            pl.BlockSpec((bj, bc), lambda i, j, c: (j, c)),   # logP rows j
+            pl.BlockSpec((bi, bc), lambda i, j, c: (i, c)),   # logP rows i
+            pl.BlockSpec((1, 4), lambda i, j, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B + pad_i, B + pad_j), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bi, bj), jnp.float32),   # S tile
+            pltpu.VMEM((bi, 1), jnp.float32),    # row entropies
+        ],
+        interpret=interpret,
+    )(pi.astype(jnp.float32), logpj.astype(jnp.float32),
+      logpi.astype(jnp.float32), scalars)
+    return out[:B, :B]
+
+
+def graph_reg_bwd_pallas(
+    logp: jax.Array, W: jax.Array, g: jax.Array, *,
+    gamma: float, kappa: float, ent_weight: float,
+    bi: int | None = None, bj: int | None = None, bc: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Tiled analytic VJP of the fused regularizer: (dlogp, dW).
+
+    ``gamma`` weights the cross term, ``kappa`` the uniform entropy term and
+    ``ent_weight`` the degree-weighted entropy term (γ for the full
+    regularizer, 0 for the bare cross term).  ``g`` is the output cotangent.
+    """
+    B, C = logp.shape
+    bi, bj, bc = _reg_tiles(B, C, bi, bj, bc)
+    interpret = _default_interpret(interpret)
+    scalars = jnp.stack(
+        [jnp.asarray(g, jnp.float32), jnp.float32(gamma),
+         jnp.float32(kappa), jnp.float32(ent_weight)]).reshape(1, 4)
+    dlogp = _reg_bwd_dlogp(logp, W, scalars, bi=bi, bj=bj, bc=bc,
+                           interpret=interpret)
+    dW = _reg_bwd_dw(logp, scalars, bi=bi, bj=bj, bc=bc,
+                     interpret=interpret)
+    return dlogp, dW

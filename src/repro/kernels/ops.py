@@ -1,18 +1,31 @@
 """Jit'd public wrappers around the Pallas kernels, with analytic VJPs.
 
-``graph_reg_pairwise`` is a drop-in ``pairwise_impl`` for
-``repro.core.ssl_loss.ssl_objective``: forward runs the fused Pallas kernel
-(TPU; ``interpret=True`` on CPU), backward uses the closed form
+The graph-regularizer entries are what the ``repro.api`` PAIRWISE registry
+points at.  Two calling conventions share one kernel family:
 
-    T(logp, W)          = −Σ_ij W_ij Σ_c exp(logp_ic)·logp_jc
-    ∂T/∂logp            = −(P ⊙ (W·logP)) − Wᵀ·P
-    ∂T/∂W               = −P·logPᵀ
+  * cross-term only (historical PAIRWISE signature): ``fn(logp, W)`` returns
+    ``Σ_ij W_ij·Hc(p_i, p_j)``;
+  * full regularizer (``fn.full_regularizer`` is set): ``fn(logp, W, γ, κ)``
+    returns the whole Eq.-3/4 penalty
+    ``γ·Σ W_ij Hc(p_i,p_j) − Σ_i (κ + γ·Σ_j W_ij)·H(p_i)``
+    from a *single* fused kernel sweep — ``repro.core.ssl_loss`` detects the
+    marker and skips its separate degree/entropy passes.
 
-(two matmuls — no need to rematerialize kernel internals).
+Forward and backward both run tiled Pallas kernels (TPU compiled;
+interpret mode elsewhere); the closed-form cotangents
 
-Selection: ``use_pallas=None`` (default) picks Pallas on TPU backends and the
-jnp oracle elsewhere; the env var ``REPRO_FORCE_PALLAS=1`` forces the kernel
-(interpret mode) for validation runs.
+    ∂L/∂logp = γ·[−(P ⊙ (W·logP) + Wᵀ·P)] + (κ + γ·deg) ⊙ P ⊙ (logP + 1)
+    ∂L/∂W    = −γ·(P·logPᵀ + H(p)·1ᵀ)
+
+are computed tile-by-tile, so no B×B intermediate is materialized outside
+a kernel in either direction (the historical fallback re-built ``P·logPᵀ``
+with full-size jnp matmuls).
+
+Selection: ``"auto"`` picks the fused Pallas path on TPU backends and the
+jnp oracle elsewhere; the env var ``REPRO_FORCE_PALLAS=1`` forces the
+kernels (interpret mode) for validation runs.  γ and κ ride as *static*
+(nondiff) arguments — they come from the frozen ``SSLHyper``/config, never
+from a traced tensor.
 """
 from __future__ import annotations
 
@@ -23,8 +36,19 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .graph_reg import graph_reg_pairwise_pallas
-from .pairwise import rbf_affinity_pallas
+from .graph_reg import (graph_reg_bwd_pallas, graph_reg_cross_pallas,
+                        graph_reg_fused_pallas)
+from .pairwise import knn_topk_pallas, rbf_affinity_pallas
+from .tuning import TileSpec
+
+__all__ = [
+    "graph_reg_pairwise",
+    "graph_reg_pairwise_pallas_vjp",
+    "graph_regularizer_fused",
+    "graph_regularizer_auto",
+    "rbf_affinity",
+    "knn_topk",
+]
 
 
 def _on_tpu() -> bool:
@@ -39,44 +63,119 @@ def _want_pallas(use_pallas: bool | None) -> bool:
     return _on_tpu()
 
 
-@jax.custom_vjp
-def _graph_reg_fwd_primal(logp, W):
-    return graph_reg_pairwise_pallas(logp, W, interpret=not _on_tpu())
+def _tile_kwargs(tiles: TileSpec | None) -> dict:
+    return tiles.kwargs("bi", "bj", "bc") if tiles is not None else {}
 
 
-def _graph_reg_vjp_fwd(logp, W):
-    out = graph_reg_pairwise_pallas(logp, W, interpret=not _on_tpu())
-    return out, (logp, W)
+# ---------------------------------------------------------------------------
+# One custom_vjp covers the whole family: the scalar triple
+# (gamma, kappa, ent_weight) selects cross-only (1, 0, 0) or the full
+# regularizer (γ, κ, γ).  All three — plus the tile spec — are nondiff
+# static arguments, so the VJP only produces (dlogp, dW).
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _reg_primal(logp, W, gamma, kappa, ent_weight, tiles):
+    if ent_weight == 0.0 and kappa == 0.0 and gamma == 1.0:
+        return graph_reg_cross_pallas(logp, W, **_tile_kwargs(tiles))
+    return graph_reg_fused_pallas(logp, W, gamma, kappa,
+                                  **_tile_kwargs(tiles))
 
 
-def _graph_reg_vjp_bwd(res, g):
+def _reg_vjp_fwd(logp, W, gamma, kappa, ent_weight, tiles):
+    return _reg_primal(logp, W, gamma, kappa, ent_weight, tiles), (logp, W)
+
+
+def _reg_vjp_bwd(gamma, kappa, ent_weight, tiles, res, g):
     logp, W = res
-    p = jnp.exp(logp)
-    dlogp = -(p * (W @ logp) + W.T @ p) * g
-    dW = -(p @ logp.T) * g
+    dlogp, dW = graph_reg_bwd_pallas(
+        logp, W, g, gamma=gamma, kappa=kappa, ent_weight=ent_weight,
+        **_tile_kwargs(tiles))
     return dlogp, dW
 
 
-_graph_reg_fwd_primal.defvjp(_graph_reg_vjp_fwd, _graph_reg_vjp_bwd)
+_reg_primal.defvjp(_reg_vjp_fwd, _reg_vjp_bwd)
+
+
+def graph_reg_pairwise_pallas_vjp(
+        logp: jax.Array, W: jax.Array, *,
+        tiles: TileSpec | None = None) -> jax.Array:
+    """Σ_ij W_ij·Hc(p_i,p_j) via the Pallas kernel with its tiled analytic
+    VJP, unconditionally (interpret mode off-TPU) — the PAIRWISE registry's
+    ``"pallas"`` entry."""
+    return _reg_primal(logp, W, 1.0, 0.0, 0.0, tiles)
+
+
+graph_reg_pairwise_pallas_vjp.accepts_tiles = True
 
 
 def graph_reg_pairwise(logp: jax.Array, W: jax.Array, *,
-                       use_pallas: bool | None = None) -> jax.Array:
-    """Fused Σ_ij W_ij·Hc(p_i,p_j); the PAIRWISE registry's ``"auto"`` entry."""
+                       use_pallas: bool | None = None,
+                       tiles: TileSpec | None = None) -> jax.Array:
+    """Cross term with backend auto-selection (Pallas on TPU, oracle off)."""
     if _want_pallas(use_pallas):
-        return _graph_reg_fwd_primal(logp, W)
+        return _reg_primal(logp, W, 1.0, 0.0, 0.0, tiles)
     return ref.graph_reg_pairwise_ref(logp, W)
 
 
-def graph_reg_pairwise_pallas_vjp(logp: jax.Array, W: jax.Array) -> jax.Array:
-    """The fused Pallas kernel with its analytic VJP, unconditionally
-    (interpret mode off-TPU) — the PAIRWISE registry's ``"pallas"`` entry."""
-    return _graph_reg_fwd_primal(logp, W)
+graph_reg_pairwise.accepts_tiles = True
+
+
+def graph_regularizer_fused(
+        logp: jax.Array, W: jax.Array,
+        gamma: float | None = None, kappa: float | None = None, *,
+        tiles: TileSpec | None = None) -> jax.Array:
+    """The single-pass fused regularizer kernel — the registry's ``"fused"``
+    entry.  Called with (logp, W, γ, κ) it returns the *entire* Eq.-3/4
+    penalty in one sweep; called with just (logp, W) it degrades to the
+    bare cross term (PAIRWISE signature compatibility).
+
+    γ/κ must be Python floats (they are static kernel parameters); pass
+    hyper-parameters from ``SSLHyper``/``ObjectiveConfig``, not tracers.
+    """
+    if gamma is None:
+        return _reg_primal(logp, W, 1.0, 0.0, 0.0, tiles)
+    gamma, kappa = float(gamma), float(kappa or 0.0)
+    return _reg_primal(logp, W, gamma, kappa, gamma, tiles)
+
+
+graph_regularizer_fused.full_regularizer = True
+graph_regularizer_fused.accepts_tiles = True
+
+
+def graph_regularizer_auto(
+        logp: jax.Array, W: jax.Array,
+        gamma: float | None = None, kappa: float | None = None, *,
+        use_pallas: bool | None = None,
+        tiles: TileSpec | None = None) -> jax.Array:
+    """The ``"auto"`` registry entry: fused Pallas kernels on TPU, the jnp
+    oracle elsewhere.  Same dual signature as ``graph_regularizer_fused``."""
+    if _want_pallas(use_pallas):
+        return graph_regularizer_fused(logp, W, gamma, kappa, tiles=tiles)
+    if gamma is None:
+        return ref.graph_reg_pairwise_ref(logp, W)
+    return ref.graph_regularizer_ref(logp, W, gamma, kappa or 0.0)
+
+
+graph_regularizer_auto.full_regularizer = True
+graph_regularizer_auto.accepts_tiles = True
 
 
 def rbf_affinity(x: jax.Array, y: jax.Array, sigma, *,
                  use_pallas: bool | None = None) -> jax.Array:
     """Dense RBF affinity block (graph construction device path)."""
     if _want_pallas(use_pallas):
-        return rbf_affinity_pallas(x, y, sigma, interpret=not _on_tpu())
+        return rbf_affinity_pallas(x, y, sigma)   # interpret derived inside
     return ref.rbf_affinity_ref(x, y, sigma)
+
+
+def knn_topk(x: jax.Array, y: jax.Array, k: int, *,
+             exclude_self: bool = False,
+             use_pallas: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Per-row k smallest squared distances + indices (graph construction).
+
+    Pallas path streams candidate columns and never materializes (N, M);
+    the oracle fallback builds the dense matrix (fine for small corpora).
+    """
+    if _want_pallas(use_pallas):
+        return knn_topk_pallas(x, y, k, exclude_self=exclude_self)
+    return ref.knn_topk_ref(x, y, k, exclude_self=exclude_self)

@@ -15,9 +15,40 @@ def graph_reg_pairwise_ref(logp: jax.Array, W: jax.Array) -> jax.Array:
     return -jnp.sum(W * (p @ logp.T))
 
 
+def graph_regularizer_ref(logp: jax.Array, W: jax.Array,
+                          gamma: float, kappa: float) -> jax.Array:
+    """Full Eq.-3/4 regularizer oracle (the fused kernel's ground truth):
+
+        γ Σ_ij W_ij Hc(p_i,p_j) − Σ_i (κ + γ Σ_j W_ij) H(p_i)
+    """
+    p = jnp.exp(logp)
+    cross = -jnp.sum(W * (p @ logp.T))
+    deg = jnp.sum(W, axis=1)
+    h = -jnp.sum(p * logp, axis=-1)
+    return gamma * cross - jnp.sum((kappa + gamma * deg) * h)
+
+
 def rbf_affinity_ref(x: jax.Array, y: jax.Array, sigma) -> jax.Array:
     """exp(−‖x_i − y_j‖ / 2σ²) dense block;  x: (N, D), y: (M, D)."""
     xx = jnp.sum(x.astype(jnp.float32) ** 2, 1)[:, None]
     yy = jnp.sum(y.astype(jnp.float32) ** 2, 1)[None, :]
     d2 = jnp.maximum(xx - 2.0 * x.astype(jnp.float32) @ y.astype(jnp.float32).T + yy, 0.0)
     return jnp.exp(-jnp.sqrt(d2) / (2.0 * jnp.float32(sigma) ** 2))
+
+
+def knn_topk_ref(x: jax.Array, y: jax.Array, k: int, *,
+                 exclude_self: bool = False) -> tuple[jax.Array, jax.Array]:
+    """k smallest squared distances per row, via the dense (N, M) matrix.
+
+    Returns ``(d2, idx)`` of shape (N, k), sorted ascending per row — the
+    ground truth the streaming top-k kernel never materializes.
+    """
+    xx = jnp.sum(x.astype(jnp.float32) ** 2, 1)[:, None]
+    yy = jnp.sum(y.astype(jnp.float32) ** 2, 1)[None, :]
+    d2 = jnp.maximum(
+        xx - 2.0 * x.astype(jnp.float32) @ y.astype(jnp.float32).T + yy, 0.0)
+    if exclude_self:
+        n = min(x.shape[0], y.shape[0])
+        d2 = d2.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return -neg, idx

@@ -1,0 +1,129 @@
+"""Block-size selection for the Pallas kernels (shape + backend → tiles).
+
+Every kernel in this package is tiled over a grid whose block sizes trade
+VMEM working set against grid-step overhead.  The right tiles depend on the
+problem shape *and* the backend: on TPU the MXU wants 128-lane-aligned
+blocks and a wide accumulation chunk; in interpret mode (CPU validation)
+fewer, fatter grid steps dominate wall time.
+
+``DEFAULT_TILE_TABLE`` encodes the hand-tuned defaults as ordered
+``(kernel, backend, max_rows, TileSpec)`` rules — first match wins, with
+``backend=None`` / ``max_rows=None`` rows acting as wildcards.  Callers go
+through :func:`select_tiles`, which also lets a config *pin* individual
+dims (a pinned dim always wins over the table).
+
+Tile dims (not every kernel uses all four):
+
+  * ``bi`` — output/row block (rows of ``logp`` / ``x``);
+  * ``bj`` — column block of the affinity matrix / candidate set;
+  * ``bc`` — class-dimension accumulation chunk (graph regularizer);
+  * ``bd`` — feature-dimension accumulation chunk (pairwise distances).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["TileSpec", "DEFAULT_TILE_TABLE", "select_tiles",
+           "default_interpret"]
+
+
+def default_interpret(interpret: bool | None) -> bool:
+    """The one backend→interpret policy: ``None`` means compiled on TPU,
+    interpreter everywhere else (CPU validation containers)."""
+    if interpret is None:
+        import jax
+        return jax.default_backend() != "tpu"
+    return interpret
+
+_DIMS = ("bi", "bj", "bc", "bd")
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSpec:
+    """Block sizes for one kernel launch; ``None`` means "auto-select".
+
+    Frozen + hashable so it can ride through ``jax.jit`` static arguments
+    and ``custom_vjp`` nondiff arguments unchanged.
+    """
+
+    bi: int | None = None
+    bj: int | None = None
+    bc: int | None = None
+    bd: int | None = None
+
+    def __post_init__(self):
+        for name in _DIMS:
+            v = getattr(self, name)
+            if v is not None and (not isinstance(v, int) or v <= 0):
+                raise ValueError(
+                    f"TileSpec.{name} must be a positive int or None, "
+                    f"got {v!r}")
+
+    def astuple(self) -> tuple[int | None, ...]:
+        return (self.bi, self.bj, self.bc, self.bd)
+
+    def merged_over(self, auto: "TileSpec") -> "TileSpec":
+        """Overlay: this spec's pinned (non-None) dims win over ``auto``."""
+        return TileSpec(*(p if p is not None else a
+                          for p, a in zip(self.astuple(), auto.astuple())))
+
+    def kwargs(self, *dims: str) -> dict[str, int]:
+        """The non-None subset of ``dims`` as kernel keyword arguments."""
+        out = {}
+        for d in dims:
+            v = getattr(self, d)
+            if v is not None:
+                out[d] = v
+        return out
+
+
+#: Ordered first-match-wins rules: (kernel, backend, max_rows, tiles).
+#: ``backend=None`` matches any backend; ``max_rows=None`` any row count.
+DEFAULT_TILE_TABLE: tuple[tuple[str, str | None, int | None, TileSpec], ...] = (
+    # Fused graph regularizer: (bi, bj) tiles of the B×B affinity block,
+    # bc-wide class chunks accumulated into the VMEM S tile.
+    ("graph_reg", "tpu", 512,  TileSpec(bi=128, bj=128, bc=256)),
+    ("graph_reg", "tpu", 2048, TileSpec(bi=128, bj=128, bc=512)),
+    ("graph_reg", "tpu", None, TileSpec(bi=256, bj=128, bc=512)),
+    # Interpret/CPU validation: keep the MXU shape but the narrow chunk —
+    # grid-step count dominates, not VMEM pressure.
+    ("graph_reg", None,  None, TileSpec(bi=128, bj=128, bc=512)),
+    # Dense RBF affinity block.
+    ("rbf", "tpu", 1024, TileSpec(bi=128, bj=128, bd=256)),
+    ("rbf", "tpu", None, TileSpec(bi=256, bj=128, bd=256)),
+    ("rbf", None,  None, TileSpec(bi=128, bj=128, bd=256)),
+    # Streaming top-k: wide candidate-column sweeps amortize the per-chunk
+    # top-k merge; the running (bi, k) state stays resident in VMEM.
+    ("topk", "tpu", None, TileSpec(bi=128, bj=512, bd=256)),
+    ("topk", None,  None, TileSpec(bi=128, bj=512, bd=256)),
+)
+
+
+def select_tiles(
+    kernel: str,
+    *,
+    rows: int,
+    backend: str | None = None,
+    pinned: TileSpec | None = None,
+    table=DEFAULT_TILE_TABLE,
+) -> TileSpec:
+    """Pick block sizes for ``kernel`` at ``rows`` problem rows.
+
+    ``backend=None`` reads ``jax.default_backend()``.  ``pinned`` dims (from
+    an ``ExperimentConfig``) override whatever the table selects; unknown
+    kernels fall back to the pinned values alone.
+    """
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    auto = TileSpec()
+    for kern, be, max_rows, tiles in table:
+        if kern != kernel:
+            continue
+        if be is not None and be != backend:
+            continue
+        if max_rows is not None and rows > max_rows:
+            continue
+        auto = tiles
+        break
+    return pinned.merged_over(auto) if pinned is not None else auto

@@ -157,16 +157,18 @@ def analyze_hlo(hlo_text: str) -> HloCosts:  # noqa: C901 — one-pass parser
     coll_bytes = {k: 0.0 for k in COLLECTIVE_OPS}
     coll_count = {k: 0 for k in COLLECTIVE_OPS}
 
-    def operand_bytes(rest: str) -> int:
+    def operand_names(rest: str) -> list[str]:
+        """Operand op-names of ``kind(...)``.  Operands may be bare (``%p``)
+        or carry their shape (``f32[64,64]{1,0} %get-tuple-element.4``);
+        shapes contain commas, so split on the ``%`` sigil, not ``,``."""
         m = _OPERAND_RE.search(rest[rest.index("("):] if "(" in rest else "")
         if not m:
-            return 0
-        total = 0
-        for tok in m.group(1).split(","):
-            tok = tok.strip().lstrip("%")
-            if tok in shape_of:
-                total += _first_shape_bytes(shape_of[tok])
-        return total
+            return []
+        return re.findall(r"%([\w\.\-]+)", m.group(1))
+
+    def operand_bytes(rest: str) -> int:
+        return sum(_first_shape_bytes(shape_of[name])
+                   for name in operand_names(rest) if name in shape_of)
 
     for comp, ops in comps.items():
         w = mult.get(comp, 0.0)
@@ -178,12 +180,8 @@ def analyze_hlo(hlo_text: str) -> HloCosts:  # noqa: C901 — one-pass parser
             if base == "dot":
                 out_dims = _parse_dims(rest)
                 cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
-                lhs_name = None
-                om = _OPERAND_RE.search(rest[rest.index("("):])
-                if om:
-                    toks = [t.strip().lstrip("%")
-                            for t in om.group(1).split(",")]
-                    lhs_name = toks[0] if toks else None
+                names = operand_names(rest)
+                lhs_name = names[0] if names else None
                 contract = 1
                 if cm and lhs_name and lhs_name in shape_of:
                     lhs_dims = _parse_dims(shape_of[lhs_name])

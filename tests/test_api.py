@@ -104,7 +104,7 @@ def test_default_registries_resolve():
     assert callable(PARTITIONER.get("multilevel"))
     for name in ("meta_batch", "graph_batch", "random_batch"):
         assert callable(PIPELINE.get(name))
-    for name in ("ref", "pallas", "auto"):
+    for name in ("ref", "pallas", "fused", "auto"):
         assert callable(PAIRWISE.get(name))
 
 

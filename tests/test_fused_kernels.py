@@ -1,0 +1,245 @@
+"""Fused single-pass regularizer (fwd + tiled VJP) and streaming top-k.
+
+No hypothesis dependency — unlike tests/test_kernels.py this module must run
+in the minimal container, because it guards the fused kernels' gradient
+semantics on non-tile-aligned shapes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentConfig, ObjectiveConfig, PAIRWISE, resolve_pairwise
+from repro.core.ssl_loss import SSLHyper, graph_regularizer, ssl_objective
+from repro.kernels import ref
+from repro.kernels.graph_reg import (graph_reg_bwd_pallas,
+                                     graph_reg_cross_pallas,
+                                     graph_reg_fused_pallas)
+from repro.kernels.ops import (graph_regularizer_auto, graph_regularizer_fused,
+                               knn_topk)
+from repro.kernels.pairwise import knn_topk_pallas
+from repro.kernels.tuning import TileSpec, select_tiles
+
+
+def _problem(rng, B, C, density=0.3):
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    W = np.abs(rng.normal(size=(B, B))) * (rng.random((B, B)) < density)
+    return logp, jnp.asarray(W, jnp.float32)
+
+
+# ------------------------------------------------------------ forward value
+@pytest.mark.parametrize("B,C", [(16, 32), (33, 70), (96, 200), (128, 512),
+                                 (130, 700), (257, 39)])
+def test_fused_forward_matches_oracle(rng, B, C):
+    """Single-sweep fused kernel == γ·cross − Σ(κ+γ·deg)·H on padded and
+    unpadded shapes (B, C not multiples of the tile sizes)."""
+    logp, W = _problem(rng, B, C)
+    gamma, kappa = 0.7, 0.013
+    got = graph_reg_fused_pallas(logp, W, gamma, kappa, bi=32, bj=64, bc=128)
+    want = ref.graph_regularizer_ref(logp, W, gamma, kappa)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_fused_cross_mode_matches_pairwise_oracle(rng):
+    logp, W = _problem(rng, 70, 50)
+    got = graph_reg_cross_pallas(logp, W, bi=32, bj=32, bc=32)
+    want = ref.graph_reg_pairwise_ref(logp, W)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------- gradients
+@pytest.mark.parametrize("B,C", [(48, 90), (33, 70), (130, 150)])
+def test_fused_vjp_matches_autodiff_of_oracle(rng, B, C):
+    """Tiled analytic VJP == jax.grad of the jnp oracle, on shapes where B
+    and C are NOT multiples of bi/bj/bc (the padding edge case)."""
+    logp, W = _problem(rng, B, C)
+    gamma, kappa = 0.31, 2e-3
+    f = lambda lp, w: graph_regularizer_fused(  # noqa: E731
+        lp, w, gamma, kappa, tiles=TileSpec(bi=32, bj=64, bc=64))
+    g = lambda lp, w: ref.graph_regularizer_ref(lp, w, gamma, kappa)  # noqa: E731
+    for argnum in (0, 1):
+        got = jax.grad(f, argnums=argnum)(logp, W)
+        want = jax.grad(g, argnums=argnum)(logp, W)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_cross_vjp_matches_autodiff_of_oracle(rng):
+    """The "pallas" (cross-only) entry's tiled backward on unaligned shapes."""
+    logp, W = _problem(rng, 41, 67)
+    impl = PAIRWISE.get("pallas")
+    for argnum in (0, 1):
+        got = jax.grad(lambda lp, w: impl(lp, w), argnums=argnum)(logp, W)
+        want = jax.grad(lambda lp, w: ref.graph_reg_pairwise_ref(lp, w),
+                        argnums=argnum)(logp, W)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_bwd_kernel_cotangent_scaling(rng):
+    """dL/dx under cotangent g must be g·(dL/dx under cotangent 1)."""
+    logp, W = _problem(rng, 24, 17)
+    d1, dW1 = graph_reg_bwd_pallas(logp, W, 1.0, gamma=0.5, kappa=1e-3,
+                                   ent_weight=0.5, bi=16, bj=16, bc=16)
+    d3, dW3 = graph_reg_bwd_pallas(logp, W, 3.0, gamma=0.5, kappa=1e-3,
+                                   ent_weight=0.5, bi=16, bj=16, bc=16)
+    np.testing.assert_allclose(np.asarray(d3), 3.0 * np.asarray(d1),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dW3), 3.0 * np.asarray(dW1),
+                               rtol=1e-5)
+
+
+# --------------------------------------------------- dispatch / registry
+def test_graph_regularizer_dispatches_full_kernel(rng):
+    logp, W = _problem(rng, 50, 23)
+    got = graph_regularizer(logp, W, 0.9, 1e-3, pairwise="fused")
+    want = graph_regularizer(logp, W, 0.9, 1e-3, pairwise=None)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_auto_full_regularizer_off_tpu_is_oracle(rng, monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_PALLAS", raising=False)
+    logp, W = _problem(rng, 30, 12)
+    got = graph_regularizer_auto(logp, W, 0.4, 1e-2)
+    want = ref.graph_regularizer_ref(logp, W, 0.4, 1e-2)
+    assert float(got) == float(want)
+
+
+def test_ssl_objective_fused_matches_ref(rng):
+    logits = jnp.asarray(rng.normal(size=(37, 9)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 9, size=37), jnp.int32)
+    mask = jnp.asarray(rng.random(37) < 0.3, jnp.float32)
+    W = jnp.asarray(np.abs(rng.normal(size=(37, 37))), jnp.float32)
+    hyp = SSLHyper(0.5, 1e-3, 0.0)
+    fused, m_fused = ssl_objective(logits, labels, mask, W, hyp,
+                                   pairwise="fused")
+    want, m_want = ssl_objective(logits, labels, mask, W, hyp, pairwise="ref")
+    np.testing.assert_allclose(float(fused), float(want), rtol=1e-5)
+    np.testing.assert_allclose(float(m_fused["loss/graph"]),
+                               float(m_want["loss/graph"]), rtol=1e-5)
+
+
+def test_resolve_pairwise_tiles_wrapping_keeps_markers():
+    tiled = resolve_pairwise("fused", tiles=TileSpec(bi=32))
+    assert getattr(tiled, "full_regularizer", False)
+    assert getattr(tiled, "accepts_tiles", False)
+    # The oracle ignores tile hints entirely.
+    assert resolve_pairwise("ref", tiles=TileSpec(bi=32)) is PAIRWISE.get("ref")
+
+
+def test_fused_selectable_from_experiment_config(rng):
+    cfg = ExperimentConfig(objective=ObjectiveConfig(
+        gamma=0.5, pairwise="fused", tile_bi=32, tile_bj=32, tile_bc=64))
+    impl = resolve_pairwise(cfg.objective.pairwise, tiles=cfg.objective.tiles())
+    logp, W = _problem(rng, 29, 13)
+    got = graph_regularizer(logp, W, cfg.objective.gamma, cfg.objective.kappa,
+                            pairwise=impl)
+    want = ref.graph_regularizer_ref(logp, W, cfg.objective.gamma,
+                                     cfg.objective.kappa)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_objective_config_validates_tiles():
+    with pytest.raises(ValueError, match="tile_bi"):
+        ObjectiveConfig(tile_bi=0)
+    cfg = ExperimentConfig(objective=ObjectiveConfig(tile_bc=256))
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+
+
+# ------------------------------------------------------------- tile tuning
+def test_select_tiles_pinned_beats_table():
+    auto = select_tiles("graph_reg", rows=256, backend="cpu")
+    assert auto.bi and auto.bj and auto.bc
+    pinned = select_tiles("graph_reg", rows=256, backend="cpu",
+                          pinned=TileSpec(bi=64))
+    assert pinned.bi == 64
+    assert pinned.bj == auto.bj and pinned.bc == auto.bc
+
+
+def test_select_tiles_shape_buckets():
+    small = select_tiles("graph_reg", rows=256, backend="tpu")
+    large = select_tiles("graph_reg", rows=4096, backend="tpu")
+    assert small.bc == 256 and large.bi == 256
+
+
+def test_tilespec_rejects_bad_dims():
+    with pytest.raises(ValueError):
+        TileSpec(bi=-8)
+
+
+# -------------------------------------------------------- streaming top-k
+@pytest.mark.parametrize("N,M,D,k", [(40, 40, 16, 5), (130, 257, 100, 10),
+                                     (33, 65, 7, 3)])
+def test_knn_topk_kernel_matches_dense_oracle(rng, N, M, D, k):
+    x = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    y = x if N == M else jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
+    ex = N == M
+    d2, idx = knn_topk_pallas(x, y, k, exclude_self=ex, bi=32, bj=64, bd=32)
+    d2r, idxr = ref.knn_topk_ref(x, y, k, exclude_self=ex)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2r),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idxr))
+
+
+def test_knn_topk_rejects_impossible_k(rng):
+    x = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+    with pytest.raises(ValueError, match="k must be"):
+        knn_topk_pallas(x, x, 8, exclude_self=True)
+
+
+def test_streaming_host_knn_matches_dense(rng):
+    """Column-streamed host search == single-tile search == dense oracle."""
+    from repro.core.affinity import knn_edges
+    X = rng.normal(size=(150, 20)).astype(np.float32)
+    src_a, dst_a, d_a = knn_edges(X, 6, col_block=37)    # many column chunks
+    src_b, dst_b, d_b = knn_edges(X, 6, col_block=10_000)  # one chunk
+    np.testing.assert_array_equal(src_a, src_b)
+    np.testing.assert_array_equal(dst_a, dst_b)
+    np.testing.assert_allclose(d_a, d_b)
+    d2r, idxr = ref.knn_topk_ref(jnp.asarray(X), jnp.asarray(X), 6,
+                                 exclude_self=True)
+    np.testing.assert_array_equal(dst_a.reshape(150, 6), np.asarray(idxr))
+
+
+def test_affinity_graph_device_backend_matches_host(rng):
+    from repro.core.affinity import build_affinity_graph
+    X = rng.normal(size=(120, 16)).astype(np.float32)
+    g_host = build_affinity_graph(X, k=5)
+    g_dev = build_affinity_graph(X, k=5, backend="device")
+    assert g_host.sigma == pytest.approx(g_dev.sigma, rel=1e-4)
+    np.testing.assert_allclose(g_host.W.toarray(), g_dev.W.toarray(),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_knn_edges_rejects_unknown_backend(rng):
+    from repro.core.affinity import knn_edges
+    with pytest.raises(ValueError, match="backend"):
+        knn_edges(rng.normal(size=(10, 3)), 2, backend="gpu")
+
+
+def test_knn_topk_ops_fallback_matches_kernel(rng):
+    x = jnp.asarray(rng.normal(size=(20, 6)), jnp.float32)
+    d2a, idxa = knn_topk(x, x, 4, exclude_self=True, use_pallas=False)
+    d2b, idxb = knn_topk(x, x, 4, exclude_self=True, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(d2a), np.asarray(d2b),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idxa), np.asarray(idxb))
+
+
+# ------------------------------------------------- no B×B outside kernels
+def test_fused_grad_materializes_no_bxb_outside_kernels(rng):
+    """The fwd+bwd jaxpr of the fused path must contain no (B, B)-shaped
+    intermediate produced by anything but a pallas kernel (the historical
+    fallback rebuilt P·logPᵀ with full-size jnp matmuls)."""
+    from benchmarks.bench_kernels import count_bxb_intermediates
+    B = 64   # tile-aligned: padding adds no (B, B) reshapes either way
+    logp, W = _problem(rng, B, 39)
+    fused = lambda lp: graph_regularizer_fused(lp, W, 0.5, 1e-3)  # noqa: E731
+    oracle = lambda lp: ref.graph_regularizer_ref(lp, W, 0.5, 1e-3)  # noqa: E731
+    n_fused = count_bxb_intermediates(jax.grad(fused), logp, B=B)
+    n_ref = count_bxb_intermediates(jax.grad(oracle), logp, B=B)
+    assert n_fused == 0
+    assert n_ref > 0

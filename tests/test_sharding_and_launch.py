@@ -131,7 +131,9 @@ mesh = jax.make_mesh((4, 2), ("data", "model"))
 spec = input_specs("qwen1.5-0.5b", "decode_32k", mesh, "fsdp_tp")
 with mesh:
     compiled = jax.jit(spec["fn"], donate_argnums=spec["donate"]).lower(*spec["args"]).compile()
-print(json.dumps({"ok": True, "flops": compiled.cost_analysis().get("flops", 0)}))
+ca = compiled.cost_analysis()
+ca = ca[0] if isinstance(ca, (list, tuple)) else ca  # list-of-dicts pre-0.5
+print(json.dumps({"ok": True, "flops": ca.get("flops", 0)}))
 """
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
