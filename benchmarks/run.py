@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: quality,label,ablation,"
-                         "parallel,kernels,roofline")
+                         "parallel,kernels,train,roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -43,6 +43,12 @@ def main() -> None:
         # fwd+bwd for ref vs fused) so the perf trajectory survives across PRs.
         sections.append(("kernels", lambda: bench_kernels.run(
             quick, json_path="BENCH_kernels.json")))
+    if only is None or "train" in only:
+        from benchmarks import bench_train
+        # Training throughput lands in BENCH_train.json (python-loop vs the
+        # scan-compiled engine, per strategy) — the loop-speed trajectory.
+        sections.append(("train(engine)", lambda: bench_train.run(
+            quick, json_path="BENCH_train.json")))
     if only is None or "roofline" in only:
         from benchmarks import bench_roofline
 

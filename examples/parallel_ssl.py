@@ -1,11 +1,16 @@
 """Data-parallel SSL training across k workers (paper §2.3 / Fig 3b).
 
-Driven end to end by ``repro.api``: ``TrainConfig(execution="parallel")``
-makes the trainer shard each batch's leading worker axis over a ``("data",)``
-mesh — the same pjit pattern the production launcher uses on the 16x16 pod
-mesh — with the paper's lr = 0.001*k rule applied by the schedule.
+Driven end to end by ``repro.api`` through the unified training engine:
+``--strategy`` picks the STRATEGY registry entry by name —
+
+  * ``sync_mesh`` shards each batch's leading worker axis over a
+    ``("data",)`` mesh (the same pjit pattern the production launcher uses
+    on the 16x16 pod mesh), with the paper's lr = 0.001*k rule;
+  * ``async_ps``  runs the §4 stale-gradient parameter-server regime;
+  * ``sequential`` keeps the vmapped k-worker step on one device.
 
     python examples/parallel_ssl.py --workers 4 --epochs 6
+    python examples/parallel_ssl.py --workers 4 --strategy async_ps
 """
 import argparse
 import os
@@ -14,6 +19,10 @@ import sys
 ap = argparse.ArgumentParser()
 ap.add_argument("--workers", type=int, default=4)
 ap.add_argument("--epochs", type=int, default=6)
+ap.add_argument("--strategy", default="sync_mesh",
+                choices=["sequential", "sync_mesh", "async_ps"])
+ap.add_argument("--scan-chunk", type=int, default=0,
+                help="steps per compiled lax.scan (0 = whole epoch)")
 args = ap.parse_args()
 
 # Device count must be set before jax initializes.
@@ -22,24 +31,30 @@ os.environ["XLA_FLAGS"] = (
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.api import (BatchConfig, DataConfig, Experiment,  # noqa: E402
-                       ExperimentConfig, ObjectiveConfig, TrainConfig)
+                       ExecutionConfig, ExperimentConfig, ObjectiveConfig,
+                       TrainConfig)
 
 
 def main():
     k = args.workers
     cfg = ExperimentConfig(
-        name=f"parallel-{k}w",
+        name=f"parallel-{k}w-{args.strategy}",
         data=DataConfig(n=4000, n_classes=16, input_dim=128, manifold_dim=10,
                         label_ratio=0.05),          # the paper's 5% scenario
         batch=BatchConfig(batch_size=256),
         objective=ObjectiveConfig(gamma=1.0, kappa=1e-4, weight_decay=1e-5),
         train=TrainConfig(n_epochs=args.epochs, n_workers=k,
-                          execution="parallel", base_lr=1e-3,
-                          lr_reset_epochs=10, dropout=0.0,
-                          hidden_dim=512, n_hidden=3))
+                          base_lr=1e-3, lr_reset_epochs=10, dropout=0.0,
+                          hidden_dim=512, n_hidden=3),
+        execution=ExecutionConfig(strategy=args.strategy,
+                                  scan_chunk=args.scan_chunk))
 
-    print(f"worker axis sharded over {k} logical devices; "
-          f"lr rule: 0.001*{k} for 10 epochs, then 0.001")
+    if args.strategy == "sync_mesh":
+        print(f"worker axis sharded over {k} logical devices; "
+              f"lr rule: 0.001*{k} for 10 epochs, then 0.001")
+    elif args.strategy == "async_ps":
+        print(f"{k} async workers pushing stale gradients "
+              "(max_staleness=2, round-robin server)")
     res = Experiment(cfg).run()
     for row in res.history:
         print(f"epoch {row['epoch']}: lr={row['lr']:.4f} "

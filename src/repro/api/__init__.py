@@ -13,16 +13,17 @@ kernels, optimizers) are selected by name in the config and resolved through
 the registries in :mod:`repro.api.registry`; register new implementations
 there instead of forking the wiring.
 """
-from .config import (BatchConfig, DataConfig, ExperimentConfig, GraphConfig,
-                     ObjectiveConfig, PartitionConfig, TrainConfig)
+from .config import (BatchConfig, DataConfig, ExecutionConfig,
+                     ExperimentConfig, GraphConfig, ObjectiveConfig,
+                     PartitionConfig, TrainConfig)
 from .experiment import Experiment, ExperimentResult
 from .registry import (AFFINITY, OPTIMIZER, PAIRWISE, PARTITIONER, PIPELINE,
-                       Registry, resolve_pairwise)
+                       STRATEGY, Registry, resolve_pairwise)
 
 __all__ = [
     "ExperimentConfig", "DataConfig", "GraphConfig", "PartitionConfig",
-    "BatchConfig", "ObjectiveConfig", "TrainConfig",
+    "BatchConfig", "ObjectiveConfig", "TrainConfig", "ExecutionConfig",
     "Experiment", "ExperimentResult",
     "Registry", "AFFINITY", "PARTITIONER", "PIPELINE", "PAIRWISE",
-    "OPTIMIZER", "resolve_pairwise",
+    "OPTIMIZER", "STRATEGY", "resolve_pairwise",
 ]

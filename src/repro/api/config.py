@@ -25,6 +25,7 @@ __all__ = [
     "BatchConfig",
     "ObjectiveConfig",
     "TrainConfig",
+    "ExecutionConfig",
     "ExperimentConfig",
 ]
 
@@ -194,7 +195,9 @@ class TrainConfig:
     ``execution="sequential"`` runs the vmapped k-worker step on the default
     device; ``"parallel"`` additionally shards the leading worker axis over a
     ``("data",)`` mesh of the available devices — the launcher's pjit
-    pattern, which *is* the paper's synchronous k-worker SGD.
+    pattern, which *is* the paper's synchronous k-worker SGD.  (Back-compat
+    shorthand: ``"parallel"`` selects the engine's ``"sync_mesh"`` strategy
+    unless ``ExecutionConfig.strategy`` overrides it.)
     """
 
     n_epochs: int = 10
@@ -225,6 +228,48 @@ class TrainConfig:
 
 
 @dataclass(frozen=True)
+class ExecutionConfig:
+    """How the unified engine executes the loop (see ``repro.train.engine``).
+
+    ``strategy`` names a STRATEGY registry entry (``"sequential"``,
+    ``"sync_mesh"``, ``"async_ps"``); ``None`` (the default) infers it from
+    the legacy ``TrainConfig.execution`` shorthand — an *explicit* name
+    always wins.  ``scan_chunk`` steps are compiled into one donated
+    ``lax.scan`` (0 = the whole epoch in one scan — fastest, but stages
+    every batch of the epoch at once; the bounded default keeps memory
+    flat).  ``prefetch`` chunks are staged host→device ahead of compute (0
+    turns prefetching off).  ``checkpoint_every > 0`` saves the full engine
+    carry every N epochs into ``checkpoint_dir``; ``resume=True`` restores
+    the newest checkpoint exactly (rng and step included).
+    ``max_staleness`` is the ``async_ps`` worker lag in server steps.
+    """
+
+    strategy: str | None = None
+    scan_chunk: int = 16
+    prefetch: int = 2
+    checkpoint_every: int = 0
+    checkpoint_dir: str | None = None
+    resume: bool = False
+    max_staleness: int = 2
+
+    def __post_init__(self):
+        _require(self.strategy is None
+                 or (isinstance(self.strategy, str) and self.strategy != ""),
+                 f"strategy must be a non-empty name or None (= infer from "
+                 f"TrainConfig.execution), got {self.strategy!r}")
+        _require(self.scan_chunk >= 0,
+                 f"scan_chunk must be >= 0, got {self.scan_chunk}")
+        _require(self.prefetch >= 0,
+                 f"prefetch must be >= 0, got {self.prefetch}")
+        _require(self.checkpoint_every >= 0,
+                 f"checkpoint_every must be >= 0, got {self.checkpoint_every}")
+        _require(self.checkpoint_every == 0 or self.checkpoint_dir,
+                 "checkpoint_every > 0 requires checkpoint_dir")
+        _require(self.max_staleness >= 1,
+                 f"max_staleness must be >= 1, got {self.max_staleness}")
+
+
+@dataclass(frozen=True)
 class ExperimentConfig:
     """The single config object an ``Experiment`` runs from."""
 
@@ -235,6 +280,7 @@ class ExperimentConfig:
     batch: BatchConfig = field(default_factory=BatchConfig)
     objective: ObjectiveConfig = field(default_factory=ObjectiveConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
+    execution: ExecutionConfig = field(default_factory=ExecutionConfig)
 
     @classmethod
     def _sections(cls) -> dict[str, type]:

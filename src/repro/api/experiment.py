@@ -49,18 +49,6 @@ class ExperimentResult:
         return max(vals)
 
 
-def _data_mesh(n_workers: int):
-    """``("data",)`` mesh whose size is the largest divisor of ``n_workers``
-    realizable on the available devices (1 on a single-device host — the
-    sharded arrays then simply live on that device)."""
-    import jax
-
-    n_dev = len(jax.devices())
-    size = max(d for d in range(1, min(n_workers, n_dev) + 1)
-               if n_workers % d == 0)
-    return jax.make_mesh((size,), ("data",))
-
-
 class Experiment:
     """Config-driven experiment: ``build()`` assembles, ``run()`` trains."""
 
@@ -123,15 +111,30 @@ class Experiment:
                 partitioner=PARTITIONER.get(cfg.partition.method),
                 coarsen_to=cfg.partition.coarsen_to)
         factory = PIPELINE.get(cfg.batch.pipeline)
+        # The async parameter-server regime consumes 1-worker batches
+        # round-robin (k lives in the engine strategy, not the pipeline).
+        pipeline_workers = (1 if self._strategy() == "async_ps"
+                            else cfg.train.n_workers)
         self.pipeline = factory(
             self.corpus, self.graph, self.plan,
             batch_size=cfg.batch.batch_size,
-            n_workers=cfg.train.n_workers,
+            n_workers=pipeline_workers,
             with_neighbor=cfg.batch.with_neighbor,
             pad_factor=cfg.batch.pad_factor,
             seed=cfg.data.seed)
         self._built = True
         return self
+
+    def _strategy(self) -> str:
+        """Effective STRATEGY name: an explicit ``ExecutionConfig.strategy``
+        always wins; ``None`` falls back to the legacy
+        ``TrainConfig.execution`` shorthand ("parallel" → "sync_mesh")."""
+        strategy = self.config.execution.strategy
+        if strategy is None:
+            strategy = ("sync_mesh"
+                        if self.config.train.execution == "parallel"
+                        else "sequential")
+        return strategy
 
     def _make_data(self):
         """Synthesize the train corpus + held-out test split from the config."""
@@ -161,12 +164,12 @@ class Experiment:
 
         cfg = self.config
         t = cfg.train
+        ex = cfg.execution
         model_cfg = DNNConfig(
             input_dim=self.corpus.X.shape[1], hidden_dim=t.hidden_dim,
             n_hidden=t.n_hidden, n_classes=self.corpus.n_classes,
             dropout=t.dropout)
-        mesh = (_data_mesh(t.n_workers)
-                if t.execution == "parallel" else None)
+        strategy = self._strategy()
         # Resolve the pairwise kernel once here (with any pinned tile sizes
         # from the config) and hand the callable down — nothing below this
         # point touches the registry again.
@@ -186,7 +189,13 @@ class Experiment:
             seed=t.seed,
             opt=OPTIMIZER.get(t.optimizer)(),
             pairwise=pairwise,
-            mesh=mesh)
+            strategy=strategy,
+            scan_chunk=ex.scan_chunk,
+            prefetch=ex.prefetch,
+            max_staleness=ex.max_staleness,
+            checkpoint_every=ex.checkpoint_every,
+            checkpoint_dir=ex.checkpoint_dir,
+            resume=ex.resume)
         seconds = time.time() - t0
         final = res.history[-1] if res.history else {}
         return ExperimentResult(config=cfg, history=res.history,

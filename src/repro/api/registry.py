@@ -35,6 +35,7 @@ __all__ = [
     "PIPELINE",
     "PAIRWISE",
     "OPTIMIZER",
+    "STRATEGY",
     "resolve_pairwise",
 ]
 
@@ -126,6 +127,20 @@ PAIRWISE.register("ref", "repro.kernels.ref:graph_reg_pairwise_ref")
 PAIRWISE.register("pallas", "repro.kernels.ops:graph_reg_pairwise_pallas_vjp")
 PAIRWISE.register("fused", "repro.kernels.ops:graph_regularizer_fused")
 PAIRWISE.register("auto", "repro.kernels.ops:graph_regularizer_auto")
+
+#: ``(engine) -> strategy`` execution strategies for the unified training
+#: engine (:mod:`repro.train.engine`) — how the scan body maps work onto
+#: devices:
+#:   * ``"sequential"`` — single-device execution;
+#:   * ``"sync_mesh"``  — params replicated over a ``("data",)`` mesh, each
+#:     chunk's worker axis sharded over it (the paper's synchronous k-worker
+#:     SGD, pjit inserting the gradient all-reduce);
+#:   * ``"async_ps"``   — the §4 stale-gradient parameter-server simulation
+#:     (snapshots + round-robin schedule inside the scan body).
+STRATEGY = Registry("strategy")
+STRATEGY.register("sequential", "repro.train.engine:SequentialStrategy")
+STRATEGY.register("sync_mesh", "repro.train.engine:SyncMeshStrategy")
+STRATEGY.register("async_ps", "repro.train.engine:AsyncPSStrategy")
 
 #: ``(**hyper) -> repro.optim.Optimizer``
 OPTIMIZER = Registry("optimizer")

@@ -20,13 +20,12 @@ kernels in ``repro.kernels.graph_reg`` — select by name via
 ``pairwise="pallas"`` (cross term), ``"fused"`` (the whole regularizer in
 one sweep) or ``"auto"`` (fused on TPU, jnp oracle elsewhere), resolved
 through the ``repro.api.registry.PAIRWISE`` registry.  ``pairwise=None``
-keeps the inline jnp oracle.  The old ``pairwise_impl=`` callable kwarg
-still works but is deprecated.
+keeps the inline jnp oracle; an already-resolved callable passes through
+unchanged (resolve once, pass the callable down).
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Callable
 
 import jax
@@ -65,20 +64,12 @@ class SSLHyper:
                     f"SSLHyper.{name} must be >= 0, got {v!r}")
 
 
-def _resolve_pairwise(pairwise: str | Callable | None,
-                      pairwise_impl: Callable | None) -> Callable | None:
-    """Back-compat shim: prefer the deprecated explicit callable, else look
-    the name up in the PAIRWISE registry (None -> inline jnp oracle).
+def _resolve_pairwise(pairwise: str | Callable | None) -> Callable | None:
+    """Registry-name lookup (None -> inline jnp oracle).
 
     Already-resolved callables (and None) short-circuit without touching the
     registry, so callers can resolve once and pass the callable down.
     """
-    if pairwise_impl is not None:
-        warnings.warn(
-            "pairwise_impl= is deprecated; pass pairwise=<registry name> "
-            "(e.g. 'ref', 'pallas', 'fused', 'auto') instead",
-            DeprecationWarning, stacklevel=3)
-        return pairwise_impl
     if pairwise is None or callable(pairwise):
         return pairwise
     from repro.api.registry import resolve_pairwise  # lazy: avoids cycle
@@ -110,7 +101,6 @@ def graph_regularizer(
     kappa: float,
     *,
     pairwise: str | Callable | None = None,
-    pairwise_impl: Callable[[Array, Array], Array] | None = None,
 ) -> Array:
     """γ Σ_ij W_ij Hc(p_i,p_j) − (κ + γ Σ_j W_ij) H(p_i)   (Eq. 4 + entropy reg).
 
@@ -122,7 +112,7 @@ def graph_regularizer(
     degree/entropy passes below are skipped entirely.
     Returns the summed (not averaged) penalty over the batch.
     """
-    impl = _resolve_pairwise(pairwise, pairwise_impl)
+    impl = _resolve_pairwise(pairwise)
     if impl is not None and getattr(impl, "full_regularizer", False):
         return impl(logp, W, gamma, kappa)
     impl = impl or pairwise_cross_entropy_term
@@ -146,7 +136,6 @@ def ssl_objective(
     *,
     params=None,
     pairwise: str | Callable | None = None,
-    pairwise_impl: Callable[[Array, Array], Array] | None = None,
     reduction: str = "mean",
 ) -> tuple[Array, dict]:
     """Decomposed Eq.-3 objective over one (concatenated meta-)batch.
@@ -168,7 +157,7 @@ def ssl_objective(
     """
     # Resolve the registry name exactly once; graph_regularizer passes the
     # already-resolved callable straight through (no second lookup).
-    pairwise = _resolve_pairwise(pairwise, pairwise_impl)
+    pairwise = _resolve_pairwise(pairwise)
     logp = jax.nn.log_softmax(logits, axis=-1)
     # Supervised term: Hc(t_i, p_i) over labeled points (t one-hot => CE).
     picked = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)[:, 0]

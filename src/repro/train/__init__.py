@@ -1,3 +1,6 @@
 from .checkpoint import load_checkpoint, save_checkpoint
-from .train_step import dnn_ssl_step, lm_supervised_step, lm_train_step
+from .engine import (Engine, EngineResult, TrainState, data_mesh, lift_step,
+                     prefetch_to_device)
+from .train_step import (dnn_ssl_grads, dnn_ssl_step, lm_supervised_step,
+                         lm_train_step)
 from .trainer import TrainResult, evaluate_dnn, train_dnn_ssl

@@ -10,20 +10,22 @@ anticipates: more updates per wall-clock unit, noisier/staler gradients.
 The simulation is exact w.r.t. the update sequence an async parameter server
 would produce under a round-robin arrival schedule with fixed per-worker
 delay — deterministic, so it is testable.
+
+``train_dnn_ssl_async`` is now a thin back-compat wrapper: the regime lives
+in the unified engine as the ``"async_ps"`` STRATEGY entry (one scan body,
+sharing ``dnn_ssl_grads`` and the PAIRWISE registry with the synchronous
+path) — see :mod:`repro.train.engine`.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Iterable
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.ssl_loss import SSLHyper
-from repro.models.dnn import DNNConfig
-from repro.optim import Optimizer, adagrad
-from repro.train.train_step import dnn_ssl_loss
+from repro.models.dnn import DNNConfig, init_dnn
+from repro.optim import Optimizer, constant_lr
+from repro.train.trainer import train_dnn_ssl
 
 __all__ = ["train_dnn_ssl_async"]
 
@@ -40,45 +42,33 @@ def train_dnn_ssl_async(
     seed: int = 0,
     opt: Optimizer | None = None,
     eval_fn: Callable | None = None,
+    pairwise: str | Callable | None = None,
+    scan_chunk: int = 16,
 ):
     """Async SSL training. ``pipeline_epoch`` must yield (1, P, ·) batches
-    (n_workers=1 pipelines); workers consume them round-robin."""
-    from repro.models.dnn import init_dnn
+    (n_workers=1 pipelines); workers consume them round-robin.
 
-    opt = opt or adagrad()
-    params = init_dnn(cfg, jax.random.PRNGKey(seed))
-    opt_state = opt.init(params)
-
-    grad_fn = jax.jit(
-        lambda p, b: jax.grad(
-            lambda q: dnn_ssl_loss(q, b, cfg, hyper)[0])(p))
-    update_fn = jax.jit(
-        lambda g, s, p, lr: opt.update(g, s, p, lr))
-
-    # Each worker's stale parameter snapshot (staleness grows with k and
-    # delay; snapshots refresh when the worker pushes).
-    snapshots = [params] * n_workers
-    ages = [0] * n_workers
-    history = []
-    for epoch in range(n_epochs):
-        losses = []
-        for step, batch in enumerate(pipeline_epoch()):
-            w = step % n_workers
-            jb = {k: jnp.asarray(v)
-                  for k, v in dataclasses.asdict(batch).items()}
-            # Worker w computes a gradient on its (stale) snapshot...
-            g = grad_fn(snapshots[w], jb)
-            # ...the server applies it to the CURRENT params immediately.
-            params, opt_state = update_fn(g, opt_state, params,
-                                          jnp.float32(base_lr))
-            ages[w] += 1
-            # Snapshot refresh: worker pulls fresh params after its push,
-            # but only every `max_staleness` pushes (simulated delay).
-            if ages[w] >= max_staleness:
-                snapshots[w] = params
-                ages[w] = 0
-        row = {"epoch": epoch}
-        if eval_fn is not None:
-            row["eval/acc"] = float(eval_fn(params))
-        history.append(row)
-    return params, history
+    Returns ``(params, history)`` — the historical contract.  The reference
+    regime used a constant lr and initialized straight from
+    ``PRNGKey(seed)``; both are preserved here.
+    """
+    res = train_dnn_ssl(
+        pipeline_epoch,
+        cfg=cfg,
+        hyper=hyper,
+        n_epochs=n_epochs,
+        n_workers=n_workers,
+        base_lr=base_lr,
+        dropout=0.0,
+        seed=seed,
+        opt=opt,
+        pairwise=pairwise,
+        strategy="async_ps",
+        max_staleness=max_staleness,
+        scan_chunk=scan_chunk,
+        lr_schedule=constant_lr(base_lr),
+        params=init_dnn(cfg, jax.random.PRNGKey(seed)),
+        eval_fn=(None if eval_fn is None
+                 else (lambda p: {"eval/acc": float(eval_fn(p))})),
+    )
+    return res.params, res.history

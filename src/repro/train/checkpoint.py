@@ -2,6 +2,13 @@
 
 Path-keyed, so checkpoints are stable across process restarts and can be
 saved from sharded arrays (``jax.device_get`` gathers before writing).
+Paths are normalized to exactly one ``.npz`` suffix in both directions, so
+callers may pass either a bare path or a ``.npz`` path to either function.
+
+Each leaf's dtype *name* is stored alongside its bytes: numpy serializes
+extension dtypes (bfloat16, float8) as raw void records, and the recorded
+name lets ``load_checkpoint`` view them back losslessly instead of handing
+the caller opaque ``V2`` buffers.
 """
 from __future__ import annotations
 
@@ -13,31 +20,64 @@ import numpy as np
 __all__ = ["save_checkpoint", "load_checkpoint"]
 
 _SEP = "::"
+_DTYPE_PREFIX = "__dtype__" + _SEP
+
+
+def _norm(path: str) -> str:
+    """One ``.npz`` suffix, always — ``np.savez`` appends its own when the
+    suffix is missing, which used to desync save/load paths."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _key(path) -> str:
+    return _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
-                        for p in path)
-        flat[key] = np.asarray(jax.device_get(leaf))
+        flat[_key(path)] = np.asarray(jax.device_get(leaf))
     return flat
 
 
+def _restore_dtype(arr: np.ndarray, name: str) -> np.ndarray:
+    if arr.dtype.name == name:
+        return arr
+    try:
+        dt = np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # registered extension dtypes (bfloat16, fp8, …)
+        dt = np.dtype(getattr(ml_dtypes, name))
+    # Void records are the same bits under a lost dtype — reinterpret;
+    # anything else genuinely changed representation in the archive.
+    return arr.view(dt) if arr.dtype.kind == "V" else arr.astype(dt)
+
+
 def save_checkpoint(path: str, tree) -> None:
+    path = _norm(path)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    flat = _flatten(tree)
+    dtypes = {_DTYPE_PREFIX + k: np.str_(v.dtype.name)
+              for k, v in flat.items()}
+    np.savez(path, **flat, **dtypes)
 
 
 def load_checkpoint(path: str, like):
-    """Restore into the structure of ``like`` (a template pytree)."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    """Restore into the structure of ``like`` (a template pytree).
+
+    Leaves keep the dtype they were *saved* with (the template supplies
+    structure and expected shapes only) — restoring must not silently cast
+    e.g. a uint32 PRNG key or an int32 step counter to the template's dtype.
+    """
+    data = np.load(_norm(path))
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
     new_leaves = []
     for p, leaf in leaves_with_path:
-        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
-                        for q in p)
+        key = _key(p)
         arr = data[key]
+        if _DTYPE_PREFIX + key in data.files:   # absent in old checkpoints
+            arr = _restore_dtype(arr, str(data[_DTYPE_PREFIX + key]))
         assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
-        new_leaves.append(arr.astype(leaf.dtype))
+        new_leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, new_leaves)

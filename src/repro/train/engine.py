@@ -1,0 +1,499 @@
+"""Unified scan-compiled training engine (the one loop for every scenario).
+
+One :class:`Engine` replaces the three divergent Python-stepped loops the
+repo grew (sequential trainer, async parameter-server simulation, launcher
+smoke path).  It compiles a whole epoch — or fixed-size chunks of steps —
+into a single jitted ``lax.scan`` whose carry (:class:`TrainState`) is
+**donated**, so per-step Python dispatch and per-step state copies both
+disappear from the hot loop, and feeds the scan from a double-buffered
+host→device prefetch iterator so the next chunk is stacked and transferred
+while the current one computes.
+
+How work is mapped onto devices is an *execution strategy*, looked up by
+name in the ``repro.api.registry.STRATEGY`` registry:
+
+  * ``"sequential"`` — single-device execution (state and batches on the
+    default device);
+  * ``"sync_mesh"``  — the paper's k-worker synchronous SGD: parameters
+    replicated over a ``("data",)`` mesh, each chunk's worker axis sharded
+    over it, pjit inserting the gradient all-reduce the parameter server
+    performed;
+  * ``"async_ps"``   — the §4 stale-gradient parameter-server simulation:
+    each of k workers holds a snapshot up to ``max_staleness`` server steps
+    old, gradients are taken at the snapshot and applied to the live
+    parameters immediately (deterministic round-robin schedule, expressed
+    entirely inside the scan body).
+
+Periodic checkpointing (``checkpoint_every`` epochs into ``checkpoint_dir``)
+saves the *strategy carry* — params, optimizer state, rng key, step counter,
+and for async the snapshots/ages too — so ``run(..., resume=True)`` resumes
+mid-run exactly: the restored run's history matches an uninterrupted run.
+Host-side pipeline RNG is replayed by draining the skipped epochs' batch
+iterators (data pass only, no compute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import queue
+import threading
+import time
+import warnings
+from typing import Any, Callable, Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+__all__ = [
+    "TrainState",
+    "EngineResult",
+    "Engine",
+    "data_mesh",
+    "lift_step",
+    "prefetch_to_device",
+    "SequentialStrategy",
+    "SyncMeshStrategy",
+    "AsyncPSStrategy",
+]
+
+_LATEST = "LATEST"
+
+
+# --------------------------------------------------------------------- state
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["params", "opt_state", "rng", "step"],
+                   meta_fields=[])
+@dataclasses.dataclass
+class TrainState:
+    """The scan carry: everything a training step reads and writes.
+
+    Pytree-registered so it flows through ``jit``/``scan``/``device_put``
+    and checkpoints as a flat tree.  ``rng`` and ``step`` live *inside* the
+    state so a restored checkpoint resumes the exact dropout stream and
+    worker schedule.
+    """
+
+    params: Any
+    opt_state: Any
+    rng: jax.Array           # PRNG key consumed by the step (dropout etc.)
+    step: jax.Array          # global step counter (int32 scalar)
+
+    @classmethod
+    def create(cls, params, opt_state, rng) -> "TrainState":
+        return cls(params=params, opt_state=opt_state, rng=rng,
+                   step=jnp.zeros((), jnp.int32))
+
+
+@dataclasses.dataclass
+class EngineResult:
+    state: TrainState
+    history: list[dict]      # per-epoch metric rows
+
+    @property
+    def params(self):
+        return self.state.params
+
+
+def lift_step(update_fn: Callable) -> Callable:
+    """Adapt a raw ``(params, opt_state, batch, lr) -> (params, opt_state,
+    metrics)`` update into an engine ``step_fn``: threads the step counter,
+    leaves ``rng`` untouched (for rng-free steps like the LM path — steps
+    that consume rng write their own adapter, as the SSL trainer does)."""
+
+    def step_fn(state: TrainState, batch, lr):
+        params, opt_state, metrics = update_fn(state.params, state.opt_state,
+                                               batch, lr)
+        return dataclasses.replace(state, params=params, opt_state=opt_state,
+                                   step=state.step + 1), metrics
+
+    return step_fn
+
+
+def data_mesh(n_workers: int):
+    """``("data",)`` mesh whose size is the largest divisor of ``n_workers``
+    realizable on the available devices (1 on a single-device host — the
+    sharded arrays then simply live on that device)."""
+    n_dev = len(jax.devices())
+    size = max(d for d in range(1, min(n_workers, n_dev) + 1)
+               if n_workers % d == 0)
+    return jax.make_mesh((size,), ("data",))
+
+
+# ------------------------------------------------------------------ prefetch
+def prefetch_to_device(chunks: Iterable, put: Callable, depth: int = 2
+                       ) -> Iterator:
+    """Double-buffered host→device pipeline: a background thread stacks and
+    transfers up to ``depth`` chunks ahead of the consumer, so host work and
+    H2D copies overlap device compute.  ``depth <= 0`` degrades to a plain
+    synchronous map (useful for debugging)."""
+    if depth <= 0:
+        for c in chunks:
+            yield put(c)
+        return
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    sentinel = object()
+    stop = threading.Event()
+    errors: list[BaseException] = []
+
+    def _put(item) -> bool:
+        """Offer ``item`` until it fits or the consumer signalled stop."""
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def producer():
+        try:
+            for c in chunks:
+                if stop.is_set() or not _put(put(c)):
+                    return
+        except BaseException as e:  # noqa: BLE001 — re-raised on the consumer
+            errors.append(e)
+        finally:
+            _put(sentinel)
+
+    t = threading.Thread(target=producer, daemon=True,
+                         name="engine-prefetch")
+    t.start()
+    try:
+        while True:
+            item = q.get()
+            if item is sentinel:
+                break
+            yield item
+        t.join()
+        if errors:
+            raise errors[0]
+    finally:
+        # Consumer gone early (exception in the training step, generator
+        # closed): tell the producer to stop and unblock any pending put so
+        # neither the thread nor its staged device buffers outlive this
+        # iterator.
+        stop.set()
+        while True:
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+        t.join(timeout=5.0)
+
+
+def _as_host_dict(batch) -> dict:
+    if dataclasses.is_dataclass(batch) and not isinstance(batch, dict):
+        return dataclasses.asdict(batch)
+    return dict(batch)
+
+
+def _stack_chunk(batches: list[dict]) -> dict:
+    """Stack per-step host batches into one (S, ...) scan chunk."""
+    return {k: np.stack([b[k] for b in batches]) for k in batches[0]}
+
+
+# ---------------------------------------------------------------- strategies
+class SequentialStrategy:
+    """Single-device execution: the scan body is the step function itself."""
+
+    def __init__(self, engine: "Engine"):
+        self.engine = engine
+        if engine.step_fn is None:
+            raise ValueError(f"strategy {type(self).__name__} needs step_fn=")
+
+    # Placement ----------------------------------------------------------
+    def place_state(self, state: TrainState) -> TrainState:
+        return state
+
+    def place_batch(self, chunk: dict) -> dict:
+        return jax.tree.map(jnp.asarray, chunk)
+
+    def place_carry(self, carry):
+        """Re-place a carry restored from a (host, numpy) checkpoint."""
+        return jax.tree.map(jnp.asarray, carry)
+
+    # Carry lifecycle ----------------------------------------------------
+    def init_carry(self, state: TrainState):
+        return state
+
+    def begin_epoch(self, carry):
+        return carry
+
+    def state_of(self, carry) -> TrainState:
+        return carry
+
+    # Scan body ----------------------------------------------------------
+    def body(self, carry, batch, lr):
+        return self.engine.step_fn(carry, batch, lr)
+
+
+class SyncMeshStrategy(SequentialStrategy):
+    """The current pjit data-parallel path: params replicated over a
+    ``("data",)`` mesh, each chunk's leading worker axis (axis 1 — axis 0 is
+    the scan axis) sharded over it."""
+
+    def __init__(self, engine: "Engine"):
+        super().__init__(engine)
+        if engine.mesh is None:
+            raise ValueError("strategy 'sync_mesh' needs mesh= (a ('data',) "
+                             "mesh); use repro.train.engine.data_mesh")
+        P = jax.sharding.PartitionSpec
+        self._replicated = jax.sharding.NamedSharding(engine.mesh, P())
+        self._sharded = jax.sharding.NamedSharding(engine.mesh,
+                                                   P(None, "data"))
+
+    def place_state(self, state: TrainState) -> TrainState:
+        return jax.device_put(state, self._replicated)
+
+    def place_batch(self, chunk: dict) -> dict:
+        return jax.tree.map(
+            lambda a: jax.device_put(jnp.asarray(a), self._sharded), chunk)
+
+    def place_carry(self, carry):
+        return jax.device_put(carry, self._replicated)
+
+
+class AsyncPSStrategy:
+    """Stale-gradient parameter-server simulation as a scan body.
+
+    Carry = (state, snapshots, ages, t): ``snapshots`` stacks k per-worker
+    parameter copies, ``ages[w]`` counts pushes since worker w last pulled,
+    ``t`` is the epoch-local step (the round-robin schedule restarts each
+    epoch, matching the reference simulation).  Worker ``t % k`` computes a
+    gradient at its snapshot via ``engine.grad_fn`` (which shares
+    ``dnn_ssl_step``'s loss plumbing and the PAIRWISE registry); the server
+    applies it to the live params immediately; the worker pulls fresh params
+    once its age reaches ``max_staleness``.
+    """
+
+    def __init__(self, engine: "Engine"):
+        self.engine = engine
+        if engine.grad_fn is None or engine.opt is None:
+            raise ValueError("strategy 'async_ps' needs grad_fn= and opt=")
+        self.k = engine.n_workers
+        self.max_staleness = engine.max_staleness
+
+    # Placement ----------------------------------------------------------
+    def place_state(self, state: TrainState) -> TrainState:
+        return state
+
+    def place_batch(self, chunk: dict) -> dict:
+        return jax.tree.map(jnp.asarray, chunk)
+
+    def place_carry(self, carry):
+        return jax.tree.map(jnp.asarray, carry)
+
+    # Carry lifecycle ----------------------------------------------------
+    def init_carry(self, state: TrainState):
+        snapshots = jax.tree.map(lambda p: jnp.stack([p] * self.k),
+                                 state.params)
+        ages = jnp.zeros((self.k,), jnp.int32)
+        return (state, snapshots, ages, jnp.zeros((), jnp.int32))
+
+    def begin_epoch(self, carry):
+        state, snapshots, ages, _ = carry
+        return (state, snapshots, ages, jnp.zeros((), jnp.int32))
+
+    def state_of(self, carry) -> TrainState:
+        return carry[0]
+
+    # Scan body ----------------------------------------------------------
+    def body(self, carry, batch, lr):
+        state, snapshots, ages, t = carry
+        w = t % self.k
+        snap_w = jax.tree.map(lambda s: s[w], snapshots)
+        grads, metrics = self.engine.grad_fn(snap_w, batch)
+        params, opt_state = self.engine.opt.update(
+            grads, state.opt_state, state.params, lr)
+        ages = ages.at[w].add(1)
+        refresh = ages[w] >= self.max_staleness
+        snapshots = jax.tree.map(
+            lambda s, p: s.at[w].set(jnp.where(refresh, p, s[w])),
+            snapshots, params)
+        ages = ages.at[w].set(jnp.where(refresh, 0, ages[w]))
+        state = TrainState(params=params, opt_state=opt_state,
+                           rng=state.rng, step=state.step + 1)
+        return (state, snapshots, ages, t + 1), metrics
+
+
+# -------------------------------------------------------------------- engine
+class Engine:
+    """Scan-compiled trainer: one jitted ``lax.scan`` per chunk of steps.
+
+    Args:
+      step_fn: ``(state, batch, lr) -> (state, metrics)`` — the per-step
+        update used by ``sequential``/``sync_mesh`` (and any custom strategy
+        that calls it).
+      grad_fn: ``(params, batch) -> (grads, metrics)`` — gradient at given
+        (possibly stale) params; required by ``async_ps``.
+      opt: the ``repro.optim.Optimizer`` applying server updates
+        (``async_ps`` only — synchronous strategies fold the update into
+        ``step_fn``).
+      strategy: STRATEGY registry name or an already-constructed instance.
+      scan_chunk: steps per compiled scan; 0 compiles the whole epoch.
+      prefetch: host→device prefetch depth (2 = double buffering; 0 = off).
+      checkpoint_every/checkpoint_dir: save the full strategy carry every N
+        epochs; ``run(..., resume=True)`` restores the newest one.
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable | None = None,
+        *,
+        grad_fn: Callable | None = None,
+        opt=None,
+        strategy: str | Any = "sequential",
+        mesh=None,
+        n_workers: int = 1,
+        max_staleness: int = 2,
+        scan_chunk: int = 0,
+        prefetch: int = 2,
+        checkpoint_every: int = 0,
+        checkpoint_dir: str | None = None,
+    ):
+        if scan_chunk < 0:
+            raise ValueError(f"scan_chunk must be >= 0, got {scan_chunk}")
+        if checkpoint_every < 0:
+            raise ValueError(
+                f"checkpoint_every must be >= 0, got {checkpoint_every}")
+        if checkpoint_every > 0 and not checkpoint_dir:
+            raise ValueError("checkpoint_every > 0 requires checkpoint_dir")
+        self.step_fn = step_fn
+        self.grad_fn = grad_fn
+        self.opt = opt
+        self.mesh = mesh
+        self.n_workers = n_workers
+        self.max_staleness = max_staleness
+        self.scan_chunk = scan_chunk
+        self.prefetch = prefetch
+        self.checkpoint_every = checkpoint_every
+        self.checkpoint_dir = checkpoint_dir
+        if isinstance(strategy, str):
+            # Lazy import: keeps repro.train importable without repro.api
+            # having been set up first (no cycle either way — api.registry
+            # only *names* this module).
+            from repro.api.registry import STRATEGY
+            strategy = STRATEGY.get(strategy)(self)
+        self.strategy = strategy
+        # One jitted scan per chunk length (jit caches by shape); the carry
+        # is donated, so state buffers are reused in place step to step.
+        self._chunk_fn = jax.jit(self._run_chunk, donate_argnums=0)
+
+    # ---------------------------------------------------------------- scan
+    def _run_chunk(self, carry, batches, lr):
+        def body(c, b):
+            return self.strategy.body(c, b, lr)
+
+        return jax.lax.scan(body, carry, batches)
+
+    def _host_chunks(self, batch_iter: Iterable) -> Iterator[dict]:
+        """Group host batches into stacked (S, ...) scan chunks."""
+        pending: list[dict] = []
+        for b in batch_iter:
+            pending.append(_as_host_dict(b))
+            if self.scan_chunk and len(pending) == self.scan_chunk:
+                yield _stack_chunk(pending)
+                pending = []
+        if pending:
+            yield _stack_chunk(pending)
+
+    # ---------------------------------------------------------- checkpoints
+    def _ckpt_path(self, epoch: int) -> str:
+        return os.path.join(self.checkpoint_dir, f"ckpt_{epoch:05d}")
+
+    def _save(self, carry, epoch: int, history: list[dict]) -> None:
+        path = self._ckpt_path(epoch)
+        save_checkpoint(path, carry)
+        with open(path + ".meta.json", "w") as f:
+            json.dump({"epoch": epoch, "history": history}, f)
+        with open(os.path.join(self.checkpoint_dir, _LATEST), "w") as f:
+            f.write(os.path.basename(path))
+
+    def _load_latest(self, template_carry):
+        """(carry, completed_epochs, history) from the newest checkpoint, or
+        None when the directory holds none."""
+        if not self.checkpoint_dir:
+            return None
+        pointer = os.path.join(self.checkpoint_dir, _LATEST)
+        if not os.path.exists(pointer):
+            return None
+        with open(pointer) as f:
+            base = f.read().strip()
+        path = os.path.join(self.checkpoint_dir, base)
+        carry = load_checkpoint(path, template_carry)
+        with open(path + ".meta.json") as f:
+            meta = json.load(f)
+        return (self.strategy.place_carry(carry), int(meta["epoch"]),
+                list(meta["history"]))
+
+    # ----------------------------------------------------------------- run
+    def run(
+        self,
+        pipeline_epoch: Callable[[], Iterable],
+        *,
+        state: TrainState,
+        n_epochs: int,
+        lr_schedule: Callable[[int], float],
+        eval_fn: Callable[[Any], dict] | None = None,
+        resume: bool = False,
+    ) -> EngineResult:
+        """Train for ``n_epochs`` passes of ``pipeline_epoch()`` batches.
+
+        ``pipeline_epoch`` is called once per epoch and must yield host
+        batches (dicts or dataclasses of equal-shaped numpy arrays).
+        ``eval_fn(params) -> dict`` is merged into each epoch row.  With
+        ``resume=True`` and a checkpoint present in ``checkpoint_dir``,
+        training restarts from the saved carry/epoch; the skipped epochs'
+        batch iterators are drained so host-side pipeline RNG replays the
+        exact stream an uninterrupted run would have seen.
+        """
+        strategy = self.strategy
+        start, history = 0, []
+        # Copy the initial leaves: the first chunk call DONATES the carry,
+        # and caller-owned buffers (e.g. a params pytree reused across runs)
+        # must survive this run.
+        state = jax.tree.map(lambda x: jnp.array(x), state)
+        carry = strategy.init_carry(strategy.place_state(state))
+        if resume:
+            loaded = self._load_latest(carry)
+            if loaded is not None:
+                carry, start, history = loaded
+        if start < n_epochs:     # replay host pipeline RNG, no compute
+            for _ in range(start):
+                for _ in pipeline_epoch():
+                    pass
+        for epoch in range(start, n_epochs):
+            lr = jnp.float32(lr_schedule(epoch))
+            t0 = time.time()
+            carry = strategy.begin_epoch(carry)
+            metric_chunks = []
+            chunks = prefetch_to_device(
+                self._host_chunks(pipeline_epoch()),
+                strategy.place_batch, self.prefetch)
+            for placed in chunks:
+                carry, metrics = self._chunk_fn(carry, placed, lr)
+                metric_chunks.append(metrics)   # fetched after the epoch
+            if not metric_chunks:
+                # e.g. n_meta < n_workers: the pipeline had nothing to yield.
+                warnings.warn(
+                    f"epoch {epoch}: pipeline yielded no batches "
+                    "(n_meta < n_workers?); skipping epoch row", stacklevel=2)
+                continue
+            row = {
+                k: float(np.mean(np.concatenate(
+                    [np.asarray(mc[k]) for mc in metric_chunks])))
+                for k in metric_chunks[0]
+            }
+            row.update(epoch=epoch, lr=float(lr), seconds=time.time() - t0)
+            if eval_fn is not None:
+                row.update(eval_fn(strategy.state_of(carry).params))
+            history.append(row)
+            if self.checkpoint_every and \
+                    (epoch + 1) % self.checkpoint_every == 0:
+                self._save(carry, epoch + 1, history)
+        return EngineResult(state=strategy.state_of(carry), history=history)

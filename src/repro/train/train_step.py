@@ -30,12 +30,12 @@ Array = jax.Array
 
 # ------------------------------------------------------------------ DNN/SSL
 def dnn_ssl_loss(params, batch: dict, cfg: DNNConfig, hyper: SSLHyper,
-                 *, dropout_rng=None, dropout: float = 0.0,
-                 pairwise=None, pairwise_impl=None):
+                 *, dropout_rng=None, dropout: float = 0.0, pairwise=None):
     """Mean Eq.-3 loss over the k stacked concatenated batches.
 
-    ``pairwise`` names a PAIRWISE registry entry ("ref" | "pallas" | "auto");
-    ``pairwise_impl`` (explicit callable) is deprecated.
+    ``pairwise`` names a PAIRWISE registry entry ("ref" | "pallas" |
+    "fused" | "auto") or is an already-resolved ``(logp, W) -> scalar``
+    callable; ``None`` keeps the inline jnp oracle.
     """
 
     def per_worker(x, y, mask, W, valid):
@@ -46,7 +46,7 @@ def dnn_ssl_loss(params, batch: dict, cfg: DNNConfig, hyper: SSLHyper,
         Wm = W * valid[:, None] * valid[None, :]
         loss, metrics = ssl_objective(
             logits, y, mask, Wm, hyper, params=params, pairwise=pairwise,
-            pairwise_impl=pairwise_impl, reduction="mean")
+            reduction="mean")
         return loss, metrics
 
     losses, metrics = jax.vmap(per_worker)(
@@ -55,17 +55,30 @@ def dnn_ssl_loss(params, batch: dict, cfg: DNNConfig, hyper: SSLHyper,
     return jnp.mean(losses), jax.tree.map(jnp.mean, metrics)
 
 
-def dnn_ssl_step(params, opt_state, batch: dict, *, cfg: DNNConfig,
-                 hyper: SSLHyper, opt: Optimizer, lr: Array,
-                 dropout_rng=None, dropout: float = 0.0, pairwise=None,
-                 pairwise_impl=None):
+def dnn_ssl_grads(params, batch: dict, *, cfg: DNNConfig, hyper: SSLHyper,
+                  dropout_rng=None, dropout: float = 0.0, pairwise=None):
+    """``(grads, metrics)`` of the Eq.-3 loss at ``params``.
+
+    The shared gradient core: ``dnn_ssl_step`` applies it synchronously;
+    the engine's ``async_ps`` strategy evaluates it at a *stale* parameter
+    snapshot and hands the gradient to the server update — both through the
+    same loss plumbing and PAIRWISE registry selection.
+    """
     (loss, metrics), grads = jax.value_and_grad(
         dnn_ssl_loss, has_aux=True)(params, batch, cfg, hyper,
                                     dropout_rng=dropout_rng, dropout=dropout,
-                                    pairwise=pairwise,
-                                    pairwise_impl=pairwise_impl)
-    new_params, new_state = opt.update(grads, opt_state, params, lr)
+                                    pairwise=pairwise)
     metrics["loss/total"] = loss
+    return grads, metrics
+
+
+def dnn_ssl_step(params, opt_state, batch: dict, *, cfg: DNNConfig,
+                 hyper: SSLHyper, opt: Optimizer, lr: Array,
+                 dropout_rng=None, dropout: float = 0.0, pairwise=None):
+    grads, metrics = dnn_ssl_grads(params, batch, cfg=cfg, hyper=hyper,
+                                   dropout_rng=dropout_rng, dropout=dropout,
+                                   pairwise=pairwise)
+    new_params, new_state = opt.update(grads, opt_state, params, lr)
     return new_params, new_state, metrics
 
 
@@ -104,7 +117,7 @@ def chunked_ce(x: Array, head: Array, targets: Array, mask: Array,
 
 
 def lm_loss(params, cfg: ModelConfig, batch: dict, hyper: SSLHyper | None,
-            *, pairwise=None, pairwise_impl=None, act_sharding=None):
+            *, pairwise=None, act_sharding=None):
     """Next-token CE (+ optional sequence-level SSL graph regularizer)."""
     out = tf.forward(params, cfg, batch["tokens"],
                      modality_embeds=batch.get("modality_embeds"),
@@ -127,9 +140,7 @@ def lm_loss(params, cfg: ModelConfig, batch: dict, hyper: SSLHyper | None,
 
         def per_group(pl, y, m, W):
             return ssl_objective(pl, y, m, W, hyper, params=None,
-                                 pairwise=pairwise,
-                                 pairwise_impl=pairwise_impl,
-                                 reduction="mean")
+                                 pairwise=pairwise, reduction="mean")
 
         ssl_losses, ssl_metrics = jax.vmap(per_group)(
             pooled, batch["seq_labels"], batch["seq_label_mask"], batch["W"])
@@ -142,10 +153,10 @@ def lm_loss(params, cfg: ModelConfig, batch: dict, hyper: SSLHyper | None,
 
 def lm_train_step(params, opt_state, batch: dict, *, cfg: ModelConfig,
                   hyper: SSLHyper | None, opt: Optimizer, lr,
-                  pairwise=None, pairwise_impl=None, act_sharding=None):
+                  pairwise=None, act_sharding=None):
     (loss, metrics), grads = jax.value_and_grad(lm_loss, has_aux=True)(
         params, cfg, batch, hyper, pairwise=pairwise,
-        pairwise_impl=pairwise_impl, act_sharding=act_sharding)
+        act_sharding=act_sharding)
     new_params, new_state = opt.update(grads, opt_state, params, lr)
     return new_params, new_state, metrics
 

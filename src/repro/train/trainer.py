@@ -1,17 +1,22 @@
-"""Sequential / data-parallel SSL training loop for the paper's experiments.
+"""Sequential / data-parallel SSL training for the paper's experiments.
 
 Reproduces the paper's §3 protocol: AdaGrad, base lr 1e-3, effective lr
 ``1e-3·k`` reset after 10 epochs, dropout 0.2, batch size 1024/2048, label
-ratios 2–100%.  The same loop drives the fully-supervised baseline (γ=κ=0),
-the random-batch baseline, and the meta-batch method — only the pipeline and
-hyper-parameters change.
+ratios 2–100%.  The same entry point drives the fully-supervised baseline
+(γ=κ=0), the random-batch baseline, and the meta-batch method — only the
+pipeline and hyper-parameters change.
+
+``train_dnn_ssl`` is a thin wrapper over the unified scan-compiled
+:class:`repro.train.engine.Engine`: it builds the :class:`TrainState`
+and the Eq.-3 step/grad functions, picks an execution strategy
+(``sequential`` / ``sync_mesh`` / ``async_ps`` — STRATEGY registry names),
+and delegates the loop (scan compilation, buffer donation, host→device
+prefetch, periodic checkpointing with exact resume) to the engine.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-import warnings
-from typing import Callable, Iterable
+from typing import Any, Callable, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +24,9 @@ import numpy as np
 
 from repro.core.ssl_loss import SSLHyper
 from repro.models.dnn import DNNConfig, dnn_forward, init_dnn
-from repro.optim import Optimizer, adagrad, parallel_lr_schedule
-from repro.train.train_step import dnn_ssl_step
+from repro.optim import Optimizer, adagrad, constant_lr, parallel_lr_schedule
+from repro.train.engine import Engine, TrainState, data_mesh
+from repro.train.train_step import dnn_ssl_grads, dnn_ssl_step
 
 __all__ = ["TrainResult", "train_dnn_ssl", "evaluate_dnn"]
 
@@ -29,6 +35,7 @@ __all__ = ["TrainResult", "train_dnn_ssl", "evaluate_dnn"]
 class TrainResult:
     params: dict
     history: list[dict]          # per-epoch metrics
+    state: Any = None            # final engine TrainState (params/opt/rng/step)
 
 
 def evaluate_dnn(params, X: np.ndarray, y: np.ndarray,
@@ -52,63 +59,97 @@ def train_dnn_ssl(
     lr_reset_epochs: int = 10,
     dropout: float = 0.2,
     eval_data: tuple[np.ndarray, np.ndarray] | None = None,
+    eval_fn: Callable[[Any], dict] | None = None,
     seed: int = 0,
     opt: Optimizer | None = None,
     pairwise: str | Callable | None = "auto",
-    pairwise_impl=None,
     mesh: jax.sharding.Mesh | None = None,
+    strategy: str | None = None,
+    scan_chunk: int = 16,
+    prefetch: int = 2,
+    max_staleness: int = 2,
+    checkpoint_every: int = 0,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
+    lr_schedule: Callable[[int], float] | None = None,
+    params: dict | None = None,
 ) -> TrainResult:
     """Run the paper's training loop over ``pipeline_epoch`` batches.
 
     ``pairwise`` selects the Σ W_ij·Hc(p_i,p_j) implementation by PAIRWISE
     registry name — the default ``"auto"`` uses the fused Pallas kernel on
-    TPU and the jnp oracle elsewhere.  ``pairwise_impl`` (raw callable) is
-    deprecated.  When ``mesh`` (a ``("data",)`` mesh) is given, parameters
-    are replicated and each batch's leading worker axis is sharded over it —
-    the paper's k-worker synchronous SGD, with pjit inserting the gradient
-    all-reduce the parameter server performed.
+    TPU and the jnp oracle elsewhere — or is an already-resolved callable.
+
+    ``strategy`` names a STRATEGY registry entry; when omitted it is
+    inferred: ``"sync_mesh"`` if ``mesh`` (a ``("data",)`` mesh) is given —
+    parameters replicated, each batch's leading worker axis sharded over it,
+    the paper's k-worker synchronous SGD with pjit inserting the gradient
+    all-reduce the parameter server performed — else ``"sequential"``.
+    ``"async_ps"`` runs the §4 stale-gradient regime (``max_staleness``
+    server steps of lag, dropout off — the async server pushes no rng).
+
+    ``scan_chunk`` steps are compiled into one donated ``lax.scan`` (0 =
+    the whole epoch — fastest, but the full epoch's batches are staged at
+    once; the bounded default keeps host/device memory flat at big shapes);
+    ``prefetch`` chunks are staged host→device ahead of compute.  ``checkpoint_every``/``checkpoint_dir`` enable periodic
+    checkpoints; ``resume=True`` restores the newest one exactly (rng and
+    step included).  ``params`` overrides the seeded init (back-compat for
+    callers that pre-initialize).
     """
     opt = opt or adagrad()
     key = jax.random.PRNGKey(seed)
     key, init_key = jax.random.split(key)
-    params = init_dnn(cfg, init_key)
-    opt_state = opt.init(params)
-    schedule = parallel_lr_schedule(base_lr, n_workers, lr_reset_epochs)
+    if params is None:
+        params = init_dnn(cfg, init_key)
+    state = TrainState.create(params, opt.init(params), key)
 
-    put_batch = jnp.asarray
-    if mesh is not None:
-        P = jax.sharding.PartitionSpec
-        replicated = jax.sharding.NamedSharding(mesh, P())
-        sharded = jax.sharding.NamedSharding(mesh, P("data"))
-        params = jax.device_put(params, replicated)
-        opt_state = jax.device_put(opt_state, replicated)
-        put_batch = lambda v: jax.device_put(jnp.asarray(v), sharded)  # noqa: E731
+    if strategy is None:
+        strategy = "sync_mesh" if mesh is not None else "sequential"
+    if strategy == "sync_mesh" and mesh is None:
+        mesh = data_mesh(n_workers)
+    if strategy == "async_ps" and dropout > 0.0:
+        # The async server pushes no per-step rng to workers, so dropout
+        # cannot be honored there — refuse rather than silently train a
+        # different model than the caller configured.
+        raise ValueError(
+            "strategy 'async_ps' does not support dropout (the stale-"
+            f"gradient workers are rng-free); got dropout={dropout}. "
+            "Set dropout=0.0 explicitly.")
 
-    step_fn = jax.jit(
-        lambda p, s, b, lr, rng: dnn_ssl_step(
-            p, s, b, cfg=cfg, hyper=hyper, opt=opt, lr=lr,
-            dropout_rng=rng, dropout=dropout, pairwise=pairwise,
-            pairwise_impl=pairwise_impl))
+    # Resolve the pairwise kernel once; everything below passes the callable.
+    from repro.api.registry import resolve_pairwise
+    pairwise = resolve_pairwise(pairwise)
 
-    history = []
-    for epoch in range(n_epochs):
-        lr = jnp.float32(schedule(epoch))
-        t0 = time.time()
-        ms = []
-        for batch in pipeline_epoch():
-            key, rng = jax.random.split(key)
-            jb = {k: put_batch(v) for k, v in dataclasses.asdict(batch).items()}
-            params, opt_state, metrics = step_fn(params, opt_state, jb, lr, rng)
-            ms.append(metrics)
-        if not ms:
-            # e.g. n_meta < n_workers: the pipeline had nothing to yield.
-            warnings.warn(
-                f"epoch {epoch}: pipeline yielded no batches "
-                "(n_meta < n_workers?); skipping epoch row", stacklevel=2)
-            continue
-        row = {k: float(np.mean([float(m[k]) for m in ms])) for k in ms[0]}
-        row.update(epoch=epoch, lr=float(lr), seconds=time.time() - t0)
-        if eval_data is not None:
-            row["eval/acc"] = evaluate_dnn(jax.device_get(params), *eval_data)
-        history.append(row)
-    return TrainResult(params=params, history=history)
+    def step_fn(s: TrainState, batch: dict, lr):
+        # Same split order as the historical Python loop: carry keeps the
+        # first subkey, the step consumes the second — bit-identical stream.
+        rng, sub = jax.random.split(s.rng)
+        p, o, metrics = dnn_ssl_step(
+            s.params, s.opt_state, batch, cfg=cfg, hyper=hyper, opt=opt,
+            lr=lr, dropout_rng=sub, dropout=dropout, pairwise=pairwise)
+        return TrainState(params=p, opt_state=o, rng=rng,
+                          step=s.step + 1), metrics
+
+    def grad_fn(p, batch):  # async_ps: gradient at a (stale) snapshot
+        return dnn_ssl_grads(p, batch, cfg=cfg, hyper=hyper,
+                             dropout_rng=None, dropout=0.0,
+                             pairwise=pairwise)
+
+    engine = Engine(step_fn, grad_fn=grad_fn, opt=opt, strategy=strategy,
+                    mesh=mesh, n_workers=n_workers,
+                    max_staleness=max_staleness, scan_chunk=scan_chunk,
+                    prefetch=prefetch, checkpoint_every=checkpoint_every,
+                    checkpoint_dir=checkpoint_dir)
+    # The lr·k scaling rule compensates k-way gradient *averaging*; the
+    # async server applies every pushed gradient individually, so its
+    # reference regime keeps the base lr.
+    schedule = lr_schedule or (
+        constant_lr(base_lr) if strategy == "async_ps"
+        else parallel_lr_schedule(base_lr, n_workers, lr_reset_epochs))
+    if eval_fn is None and eval_data is not None:
+        def eval_fn(p):
+            return {"eval/acc": evaluate_dnn(jax.device_get(p), *eval_data)}
+    res = engine.run(pipeline_epoch, state=state, n_epochs=n_epochs,
+                     lr_schedule=schedule, eval_fn=eval_fn, resume=resume)
+    return TrainResult(params=res.state.params, history=res.history,
+                       state=res.state)

@@ -46,10 +46,39 @@ def test_config_roundtrip_defaults_and_partial_dict():
     ("objective", {"gamma": -0.1}),
     ("train", {"execution": "magic"}),
     ("train", {"n_workers": 0}),
+    ("execution", {"scan_chunk": -1}),
+    ("execution", {"prefetch": -1}),
+    ("execution", {"checkpoint_every": 2}),   # requires checkpoint_dir
+    ("execution", {"max_staleness": 0}),
 ])
 def test_config_validation_rejects(section, bad):
     with pytest.raises(ValueError):
         ExperimentConfig.from_dict({section: bad})
+
+
+def test_execution_config_roundtrip_and_defaults():
+    from repro.api import ExecutionConfig
+    cfg = ExperimentConfig.from_dict(
+        {"execution": {"strategy": "async_ps", "scan_chunk": 4,
+                       "max_staleness": 3}})
+    assert cfg.execution == ExecutionConfig(strategy="async_ps", scan_chunk=4,
+                                            max_staleness=3)
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+    assert ExecutionConfig().strategy is None   # = infer from TrainConfig
+    ExecutionConfig(checkpoint_every=2, checkpoint_dir="/tmp/x")  # coherent
+
+
+def test_explicit_strategy_overrides_legacy_parallel_shorthand():
+    """ExecutionConfig(strategy="sequential") must win over the legacy
+    TrainConfig(execution="parallel") shorthand — None means 'infer'."""
+    from repro.api import ExecutionConfig
+    legacy = dataclasses.replace(tiny_config().train, execution="parallel")
+    infer = Experiment(dataclasses.replace(tiny_config(), train=legacy))
+    assert infer._strategy() == "sync_mesh"
+    explicit = Experiment(dataclasses.replace(
+        tiny_config(), train=legacy,
+        execution=ExecutionConfig(strategy="sequential")))
+    assert explicit._strategy() == "sequential"
 
 
 def test_graph_batch_pipeline_requires_unshuffled_blocks():
@@ -100,12 +129,15 @@ def test_registry_lazy_spec_resolution():
 
 
 def test_default_registries_resolve():
+    from repro.api import STRATEGY
     assert callable(AFFINITY.get("knn_rbf"))
     assert callable(PARTITIONER.get("multilevel"))
     for name in ("meta_batch", "graph_batch", "random_batch"):
         assert callable(PIPELINE.get(name))
     for name in ("ref", "pallas", "fused", "auto"):
         assert callable(PAIRWISE.get(name))
+    for name in ("sequential", "sync_mesh", "async_ps"):
+        assert callable(STRATEGY.get(name))
 
 
 def test_pairwise_auto_falls_back_to_ref_off_tpu(rng, monkeypatch):
@@ -135,18 +167,32 @@ def test_resolve_pairwise_passthrough():
     assert resolve_pairwise("ref") is PAIRWISE.get("ref")
 
 
-def test_pairwise_impl_kwarg_is_deprecated_but_works(rng):
+def test_pairwise_accepts_resolved_callable_and_shim_is_gone(rng):
+    """PR 1 deprecated the ``pairwise_impl=`` raw-callable kwarg "for one
+    release"; this is that release.  Callables now travel through the one
+    ``pairwise=`` parameter (resolve once, pass down)."""
+    import inspect
+
     from repro.core.ssl_loss import ssl_objective
     logits = jnp.asarray(rng.normal(size=(16, 5)), jnp.float32)
     labels = jnp.zeros(16, jnp.int32)
     mask = jnp.ones(16, jnp.float32)
     W = jnp.asarray(np.abs(rng.normal(size=(16, 16))), jnp.float32)
     hyp = SSLHyper(0.1, 0.01, 0.0)
-    with pytest.warns(DeprecationWarning, match="pairwise_impl"):
-        old, _ = ssl_objective(logits, labels, mask, W, hyp,
-                               pairwise_impl=PAIRWISE.get("ref"))
-    new, _ = ssl_objective(logits, labels, mask, W, hyp, pairwise="ref")
-    assert float(old) == float(new)
+    by_callable, _ = ssl_objective(logits, labels, mask, W, hyp,
+                                   pairwise=PAIRWISE.get("ref"))
+    by_name, _ = ssl_objective(logits, labels, mask, W, hyp, pairwise="ref")
+    assert float(by_callable) == float(by_name)
+    with pytest.raises(TypeError):
+        ssl_objective(logits, labels, mask, W, hyp,
+                      pairwise_impl=PAIRWISE.get("ref"))
+    # ...and the kwarg is gone from the whole chain, not just ssl_objective.
+    from repro.core.ssl_loss import graph_regularizer
+    from repro.train.train_step import dnn_ssl_loss, dnn_ssl_step, lm_loss
+    from repro.train.trainer import train_dnn_ssl
+    for fn in (graph_regularizer, dnn_ssl_loss, dnn_ssl_step, lm_loss,
+               train_dnn_ssl):
+        assert "pairwise_impl" not in inspect.signature(fn).parameters, fn
 
 
 # ----------------------------------------------------------------- experiment
@@ -241,3 +287,29 @@ def test_parallel_execution_matches_sequential(ref_result):
     for a, b in zip(ref_result.history, res.history):
         np.testing.assert_allclose(a["loss/total"], b["loss/total"],
                                    rtol=1e-6)
+
+
+def test_sync_mesh_strategy_by_name_matches_sequential(ref_result):
+    """Selecting the engine strategy via ExecutionConfig (with a non-trivial
+    scan_chunk) must equal the plain sequential run on one device."""
+    from repro.api import ExecutionConfig
+    cfg = dataclasses.replace(
+        tiny_config(pairwise="ref"),
+        execution=ExecutionConfig(strategy="sync_mesh", scan_chunk=2))
+    res = Experiment(cfg).run()
+    for a, b in zip(ref_result.history, res.history):
+        np.testing.assert_allclose(a["loss/total"], b["loss/total"],
+                                   rtol=1e-6)
+
+
+def test_async_ps_strategy_via_config_runs_and_learns():
+    """The §4 stale-gradient regime is registry-selectable end to end."""
+    from repro.api import ExecutionConfig
+    cfg = dataclasses.replace(
+        tiny_config(pairwise="ref"),
+        train=dataclasses.replace(tiny_config().train, n_workers=4),
+        execution=ExecutionConfig(strategy="async_ps", max_staleness=2))
+    res = Experiment(cfg).run()
+    assert len(res.history) == cfg.train.n_epochs
+    assert res.history[-1]["loss/total"] < res.history[0]["loss/total"]
+    assert np.isfinite(res.final["loss/total"])

@@ -1,0 +1,335 @@
+"""The unified scan-compiled training engine (repro.train.engine).
+
+Equivalence guarantees, in order of strictness:
+
+  * the ``sequential`` strategy (any ``scan_chunk``) reproduces the seed
+    repo's Python-stepped loop — history to numerical tolerance, params
+    bit-identically, *including the dropout rng stream*;
+  * checkpoint at epoch e + resume == an uninterrupted run;
+  * the ``async_ps`` strategy reproduces the pre-refactor async trainer's
+    deterministic stale-gradient update sequence;
+  * ``sync_mesh`` on one device is numerically inert.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SSLHyper, build_affinity_graph, plan_meta_batches
+from repro.data import MetaBatchPipeline, drop_labels, make_corpus
+from repro.models.dnn import DNNConfig, init_dnn
+from repro.optim import adagrad, constant_lr, parallel_lr_schedule
+from repro.train import train_dnn_ssl
+from repro.train.async_trainer import train_dnn_ssl_async
+from repro.train.engine import Engine, TrainState, prefetch_to_device
+from repro.train.train_step import dnn_ssl_loss, dnn_ssl_step
+
+CFG = DNNConfig(input_dim=32, hidden_dim=48, n_hidden=2, n_classes=6,
+                dropout=0.0)
+HYPER = SSLHyper(0.3, 1e-4, 1e-5)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    full = make_corpus(800, n_classes=6, input_dim=32, manifold_dim=5, seed=0)
+    corpus = dataclasses.replace(
+        full, X=full.X[:600], y=full.y[:600], label_mask=full.label_mask[:600])
+    labeled = drop_labels(corpus, 0.1, seed=1)
+    graph = build_affinity_graph(corpus.X, k=8)
+    plan = plan_meta_batches(graph, batch_size=96, n_classes=6, seed=0)
+    test = (full.X[600:], full.y[600:])
+    return labeled, graph, plan, test
+
+
+def fresh_pipeline(setup, n_workers: int = 1):
+    labeled, graph, plan, _ = setup
+    return MetaBatchPipeline(labeled, graph, plan, n_workers=n_workers,
+                             seed=0).epoch
+
+
+def max_param_delta(a, b) -> float:
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ------------------------------------------------- seed-loop reference
+def python_loop_reference(pipeline_epoch, *, n_epochs, dropout, base_lr,
+                          pairwise="ref", seed=0):
+    """The seed repo's training loop, verbatim: one jitted step per batch,
+    host-side rng splits, per-epoch metric means."""
+    opt = adagrad()
+    key = jax.random.PRNGKey(seed)
+    key, init_key = jax.random.split(key)
+    params = init_dnn(CFG, init_key)
+    opt_state = opt.init(params)
+    schedule = parallel_lr_schedule(base_lr, 1, 10)
+    step_fn = jax.jit(
+        lambda p, s, b, lr, rng: dnn_ssl_step(
+            p, s, b, cfg=CFG, hyper=HYPER, opt=opt, lr=lr,
+            dropout_rng=rng, dropout=dropout, pairwise=pairwise))
+    history = []
+    for epoch in range(n_epochs):
+        lr = jnp.float32(schedule(epoch))
+        ms = []
+        for batch in pipeline_epoch():
+            key, rng = jax.random.split(key)
+            jb = {k: jnp.asarray(v)
+                  for k, v in dataclasses.asdict(batch).items()}
+            params, opt_state, metrics = step_fn(params, opt_state, jb, lr,
+                                                 rng)
+            ms.append(metrics)
+        history.append(
+            {k: float(np.mean([float(m[k]) for m in ms])) for k in ms[0]})
+    return params, history
+
+
+# ----------------------------------------------------------- TrainState
+def test_train_state_is_a_pytree():
+    state = TrainState.create({"w": jnp.ones(3)}, {"accum": jnp.zeros(3)},
+                              jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    again = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(again, TrainState)
+    assert int(again.step) == 0
+
+    bumped = jax.jit(lambda s: dataclasses.replace(s, step=s.step + 1))(state)
+    assert int(bumped.step) == 1
+    assert isinstance(bumped, TrainState)
+
+
+# --------------------------------------------- sequential scan == seed loop
+@pytest.mark.parametrize("scan_chunk,dropout", [
+    (1, 0.0),    # per-step scan == the seed loop, the satellite's contract
+    (1, 0.2),    # ...including the dropout rng stream
+    (0, 0.2),    # whole-epoch compilation changes nothing
+    (3, 0.0),    # nor does chunking with a ragged remainder
+])
+def test_sequential_scan_reproduces_seed_loop(engine_setup, scan_chunk,
+                                              dropout):
+    want_params, want_hist = python_loop_reference(
+        fresh_pipeline(engine_setup), n_epochs=3, dropout=dropout,
+        base_lr=5e-3)
+    res = train_dnn_ssl(
+        fresh_pipeline(engine_setup), cfg=CFG, hyper=HYPER, n_epochs=3,
+        dropout=dropout, base_lr=5e-3, seed=0, pairwise="ref",
+        scan_chunk=scan_chunk)
+    assert len(res.history) == len(want_hist)
+    for got, want in zip(res.history, want_hist):
+        for k in want:
+            np.testing.assert_allclose(got[k], want[k], rtol=1e-5,
+                                       err_msg=k)
+    assert max_param_delta(res.params, want_params) == 0.0
+    assert int(res.state.step) == 3 * len(
+        list(fresh_pipeline(engine_setup)()))
+
+
+def test_prefetch_depth_does_not_change_results(engine_setup):
+    kw = dict(cfg=CFG, hyper=HYPER, n_epochs=2, dropout=0.2, base_lr=5e-3,
+              seed=0, pairwise="ref")
+    res0 = train_dnn_ssl(fresh_pipeline(engine_setup), prefetch=0, **kw)
+    res2 = train_dnn_ssl(fresh_pipeline(engine_setup), prefetch=2, **kw)
+    assert max_param_delta(res0.params, res2.params) == 0.0
+
+
+# ----------------------------------------------------------- sync_mesh
+def test_sync_mesh_strategy_matches_sequential(engine_setup):
+    """On one device the replicated/sharded placement is numerically inert."""
+    kw = dict(cfg=CFG, hyper=HYPER, n_epochs=2, dropout=0.0, base_lr=5e-3,
+              seed=0, pairwise="ref", n_workers=2)
+    seq = train_dnn_ssl(fresh_pipeline(engine_setup, 2), **kw)
+    mesh = train_dnn_ssl(fresh_pipeline(engine_setup, 2),
+                         strategy="sync_mesh", **kw)
+    for a, b in zip(seq.history, mesh.history):
+        np.testing.assert_allclose(a["loss/total"], b["loss/total"],
+                                   rtol=1e-6)
+
+
+# ------------------------------------------------------------- async_ps
+def async_reference(pipeline_epoch, *, n_epochs, n_workers, max_staleness,
+                    base_lr, seed=0):
+    """The pre-refactor async trainer, verbatim: round-robin workers pushing
+    stale gradients, snapshots refreshed every ``max_staleness`` pushes."""
+    opt = adagrad()
+    params = init_dnn(CFG, jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    grad_fn = jax.jit(lambda p, b: jax.grad(
+        lambda q: dnn_ssl_loss(q, b, CFG, HYPER)[0])(p))
+    update_fn = jax.jit(lambda g, s, p, lr: opt.update(g, s, p, lr))
+    snapshots = [params] * n_workers
+    ages = [0] * n_workers
+    for _ in range(n_epochs):
+        for step, batch in enumerate(pipeline_epoch()):
+            w = step % n_workers
+            jb = {k: jnp.asarray(v)
+                  for k, v in dataclasses.asdict(batch).items()}
+            g = grad_fn(snapshots[w], jb)
+            params, opt_state = update_fn(g, opt_state, params,
+                                          jnp.float32(base_lr))
+            ages[w] += 1
+            if ages[w] >= max_staleness:
+                snapshots[w] = params
+                ages[w] = 0
+    return params
+
+
+@pytest.mark.parametrize("n_workers,max_staleness", [(4, 2), (3, 1)])
+def test_async_ps_reproduces_reference_update_sequence(engine_setup,
+                                                       n_workers,
+                                                       max_staleness):
+    want = async_reference(fresh_pipeline(engine_setup), n_epochs=2,
+                           n_workers=n_workers, max_staleness=max_staleness,
+                           base_lr=5e-3)
+    got, hist = train_dnn_ssl_async(
+        fresh_pipeline(engine_setup), cfg=CFG, hyper=HYPER, n_epochs=2,
+        n_workers=n_workers, max_staleness=max_staleness, base_lr=5e-3,
+        seed=0)
+    assert max_param_delta(got, want) == 0.0
+    assert [h["epoch"] for h in hist] == [0, 1]
+
+
+# ------------------------------------------------------ checkpoint/resume
+def test_checkpoint_then_resume_matches_uninterrupted(engine_setup, tmp_path):
+    kw = dict(cfg=CFG, hyper=HYPER, dropout=0.2, base_lr=5e-3, seed=0,
+              pairwise="ref")
+    uninterrupted = train_dnn_ssl(fresh_pipeline(engine_setup), n_epochs=4,
+                                  **kw)
+    # Run 1: train 2 epochs, checkpointing every 2.
+    train_dnn_ssl(fresh_pipeline(engine_setup), n_epochs=2,
+                  checkpoint_every=2, checkpoint_dir=str(tmp_path), **kw)
+    assert (tmp_path / "ckpt_00002.npz").exists()
+    assert (tmp_path / "LATEST").read_text() == "ckpt_00002"
+    # Run 2 (fresh process state): resume and finish.
+    resumed = train_dnn_ssl(fresh_pipeline(engine_setup), n_epochs=4,
+                            checkpoint_every=2, checkpoint_dir=str(tmp_path),
+                            resume=True, **kw)
+    assert max_param_delta(resumed.params, uninterrupted.params) == 0.0
+    assert [r["epoch"] for r in resumed.history] == [0, 1, 2, 3]
+    for a, b in zip(uninterrupted.history, resumed.history):
+        for k in ("loss/total", "loss/graph", "lr"):
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-6, err_msg=k)
+    # rng and step counters were part of the restored state.
+    assert int(resumed.state.step) == int(uninterrupted.state.step)
+    np.testing.assert_array_equal(np.asarray(resumed.state.rng),
+                                  np.asarray(uninterrupted.state.rng))
+
+
+def test_resume_of_completed_run_skips_pipeline_replay(engine_setup,
+                                                       tmp_path):
+    """Resuming a job that already finished must return the saved result
+    without re-walking the data pipeline for the skipped epochs."""
+    kw = dict(cfg=CFG, hyper=HYPER, dropout=0.0, base_lr=5e-3, seed=0,
+              pairwise="ref", checkpoint_every=2,
+              checkpoint_dir=str(tmp_path))
+    train_dnn_ssl(fresh_pipeline(engine_setup), n_epochs=2, **kw)
+
+    def exploding_pipeline():
+        raise AssertionError("completed run must not touch the pipeline")
+
+    res = train_dnn_ssl(exploding_pipeline, n_epochs=2, resume=True, **kw)
+    assert [r["epoch"] for r in res.history] == [0, 1]
+
+
+def test_resume_without_checkpoint_starts_fresh(engine_setup, tmp_path):
+    res = train_dnn_ssl(fresh_pipeline(engine_setup), cfg=CFG, hyper=HYPER,
+                        n_epochs=1, dropout=0.0, base_lr=5e-3, seed=0,
+                        pairwise="ref", checkpoint_every=1,
+                        checkpoint_dir=str(tmp_path / "empty"), resume=True)
+    assert [r["epoch"] for r in res.history] == [0]
+
+
+def test_async_checkpoint_carries_snapshots(engine_setup, tmp_path):
+    """async_ps checkpoints the whole strategy carry (snapshots + ages), so
+    a resumed stale-gradient run is exact too."""
+    want = async_reference(fresh_pipeline(engine_setup), n_epochs=4,
+                           n_workers=3, max_staleness=2, base_lr=5e-3)
+    common = dict(cfg=CFG, hyper=HYPER, n_workers=3, max_staleness=2,
+                  base_lr=5e-3, dropout=0.0, seed=0, strategy="async_ps",
+                  lr_schedule=constant_lr(5e-3),
+                  params=init_dnn(CFG, jax.random.PRNGKey(0)))
+    uninterrupted = train_dnn_ssl(fresh_pipeline(engine_setup), n_epochs=4,
+                                  **common)
+    ckpt = dict(checkpoint_every=2, checkpoint_dir=str(tmp_path))
+    train_dnn_ssl(fresh_pipeline(engine_setup), n_epochs=2, **common, **ckpt)
+    resumed = train_dnn_ssl(fresh_pipeline(engine_setup), n_epochs=4,
+                            resume=True, **common, **ckpt)
+    # Exact vs the uninterrupted engine run (the carry roundtrip is
+    # lossless); tolerance vs the two-jit reference loop (XLA fuses the
+    # scan body differently — ulp-level drift over 4 epochs is expected).
+    assert max_param_delta(resumed.params, uninterrupted.params) == 0.0
+    for a, b in zip(jax.tree.leaves(resumed.params), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ------------------------------------------------------------- prefetch
+def test_prefetch_preserves_order_and_exhausts():
+    got = list(prefetch_to_device(range(20), lambda x: x * 2, depth=3))
+    assert got == [x * 2 for x in range(20)]
+
+
+def test_prefetch_propagates_producer_errors():
+    def bad_put(x):
+        if x == 3:
+            raise RuntimeError("boom at 3")
+        return x
+
+    it = prefetch_to_device(range(10), bad_put, depth=2)
+    with pytest.raises(RuntimeError, match="boom at 3"):
+        list(it)
+
+
+def test_prefetch_stops_producer_when_abandoned():
+    """An early-exiting consumer (step exception, closed generator) must not
+    strand the producer thread or keep staging chunks."""
+    import threading
+    import time as _time
+
+    produced = []
+    it = prefetch_to_device(iter(range(10_000)), lambda x: produced.append(x)
+                            or x, depth=2)
+    assert next(it) == 0
+    it.close()    # GeneratorExit at the yield → stop + drain + join
+    deadline = _time.monotonic() + 5.0
+    while _time.monotonic() < deadline and any(
+            t.name == "engine-prefetch" and t.is_alive()
+            for t in threading.enumerate()):
+        _time.sleep(0.02)
+    assert not any(t.name == "engine-prefetch" and t.is_alive()
+                   for t in threading.enumerate())
+    assert len(produced) < 10_000
+
+
+def test_async_ps_rejects_dropout():
+    with pytest.raises(ValueError, match="dropout"):
+        train_dnn_ssl(lambda: iter(()), cfg=CFG, hyper=HYPER, n_epochs=1,
+                      dropout=0.2, strategy="async_ps")
+
+
+# ----------------------------------------------------------- validation
+def test_engine_rejects_bad_configuration():
+    step = lambda s, b, lr: (s, {})  # noqa: E731
+    with pytest.raises(ValueError, match="scan_chunk"):
+        Engine(step, scan_chunk=-1)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        Engine(step, checkpoint_every=2)
+    with pytest.raises(ValueError, match="grad_fn"):
+        Engine(step, strategy="async_ps")       # no grad_fn/opt
+    with pytest.raises(ValueError, match="mesh"):
+        Engine(step, strategy="sync_mesh")      # no mesh
+    with pytest.raises(ValueError, match="step_fn"):
+        Engine(None, strategy="sequential")
+    with pytest.raises(KeyError, match="strategy"):
+        Engine(step, strategy="warp_drive")
+
+
+def test_empty_epoch_warns_and_skips_row():
+    state = TrainState.create({"w": jnp.ones(2)}, {}, jax.random.PRNGKey(0))
+    eng = Engine(lambda s, b, lr: (s, {"loss": jnp.float32(0)}))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        res = eng.run(lambda: iter(()), state=state, n_epochs=2,
+                      lr_schedule=constant_lr(1e-3))
+    assert res.history == []
+    assert any("no batches" in str(w.message) for w in caught)

@@ -63,6 +63,38 @@ def test_checkpoint_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_checkpoint_bare_path_normalized_once(tmp_path):
+    """A bare (no ``.npz``) path must produce ONE file that the same bare
+    path loads back — ``np.savez`` used to append a second extension behind
+    the caller's back and desync save/load."""
+    tree = {"w": jnp.arange(4, dtype=jnp.float32)}
+    bare = str(tmp_path / "ckpt")
+    save_checkpoint(bare, tree)
+    assert os.listdir(tmp_path) == ["ckpt.npz"]
+    for p in (bare, bare + ".npz"):
+        restored = load_checkpoint(p, jax.tree.map(jnp.zeros_like, tree))
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]))
+
+
+def test_checkpoint_restore_preserves_saved_dtypes(tmp_path):
+    """Restore keeps the dtype each leaf was SAVED with: a uint32 PRNG key
+    or int32 step counter must not be cast to the template leaf's dtype."""
+    tree = {"rng": jax.random.PRNGKey(7), "step": jnp.asarray(5, jnp.int32),
+            "w": jnp.ones(3, jnp.bfloat16)}
+    path = str(tmp_path / "state")
+    save_checkpoint(path, tree)
+    # Template with the right shapes but wrong dtypes everywhere.
+    like = {"rng": np.zeros(2, np.float64), "step": np.float32(0),
+            "w": np.zeros(3, np.float32)}
+    restored = load_checkpoint(path, like)
+    assert restored["rng"].dtype == np.uint32
+    assert restored["step"].dtype == np.int32
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(restored["rng"],
+                                  np.asarray(tree["rng"]))
+
+
 # --------------------------------------------------------------------- data
 def test_corpus_and_label_dropping():
     c = make_corpus(800, n_classes=13, input_dim=40, seed=3)

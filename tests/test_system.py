@@ -95,8 +95,10 @@ def test_parallel_decomposition_equals_sequential_average(ssl_setup):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
-def test_pallas_pairwise_impl_plugs_into_training(ssl_setup):
-    """The fused kernel is a drop-in pairwise_impl for the SSL objective."""
+def test_pallas_pairwise_callable_plugs_into_training(ssl_setup):
+    """The Pallas kernel is a drop-in ``pairwise=`` callable for the SSL
+    objective (raw callables travel through the same parameter as registry
+    names — the separate ``pairwise_impl`` shim is gone)."""
     from repro.kernels import graph_reg_pairwise
     labeled, graph, plan, test = ssl_setup
     pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=1, seed=0)
@@ -108,7 +110,7 @@ def test_pallas_pairwise_impl_plugs_into_training(ssl_setup):
     l_ref, _ = dnn_ssl_loss(params, jb, cfg, hyper)
     import functools
     impl = functools.partial(graph_reg_pairwise, use_pallas=True)
-    l_ker, _ = dnn_ssl_loss(params, jb, cfg, hyper, pairwise_impl=impl)
+    l_ker, _ = dnn_ssl_loss(params, jb, cfg, hyper, pairwise=impl)
     np.testing.assert_allclose(float(l_ker), float(l_ref), rtol=1e-4)
 
 
