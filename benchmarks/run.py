@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: quality,label,ablation,"
-                         "parallel,kernels,train,roofline")
+                         "parallel,kernels,train,partition,roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -49,6 +49,12 @@ def main() -> None:
         # scan-compiled engine, per strategy) — the loop-speed trajectory.
         sections.append(("train(engine)", lambda: bench_train.run(
             quick, json_path="BENCH_train.json")))
+    if only is None or "partition" in only:
+        from benchmarks import bench_partition
+        # Partition wall-clock lands in BENCH_partition.json (seed loop vs
+        # vectorized at matched seeds, cut ratios, per-epoch replan cost).
+        sections.append(("partition(loop_vs_vec)", lambda: bench_partition.run(
+            quick, json_path="BENCH_partition.json")))
     if only is None or "roofline" in only:
         from benchmarks import bench_roofline
 

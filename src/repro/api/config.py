@@ -23,6 +23,7 @@ __all__ = [
     "GraphConfig",
     "PartitionConfig",
     "BatchConfig",
+    "RepartitionConfig",
     "ObjectiveConfig",
     "TrainConfig",
     "ExecutionConfig",
@@ -118,9 +119,11 @@ class BatchConfig:
     """Meta-batch synthesis (paper §2) and the training-batch pipeline.
 
     ``pipeline`` names a PIPELINE registry entry: ``"meta_batch"`` (the
-    paper's method), ``"graph_batch"`` (pure partitioned batches — the §2
-    low-entropy baseline; pair with ``shuffle_blocks=False``), or
-    ``"random_batch"`` (the Fig.-1a regime).
+    paper's method, static plan), ``"metabatch_stream"`` (the same §2
+    stream as a first-class stage, required for ``RepartitionConfig``),
+    ``"graph_batch"`` (pure partitioned batches — the §2 low-entropy
+    baseline; pair with ``shuffle_blocks=False``), or ``"random_batch"``
+    (the Fig.-1a regime).
     """
 
     pipeline: str = "meta_batch"
@@ -128,16 +131,49 @@ class BatchConfig:
     with_neighbor: bool = True    # concatenate the Eq.-6 sampled neighbour
     shuffle_blocks: bool = True   # random mini-block grouping (§2.1 step 2)
     pad_factor: float = 2.4
+    pad_headroom: float = 1.25    # metabatch_stream: pinned-pad slack so
+                                  # re-partitioned plans fit jitted shapes
 
     def __post_init__(self):
         _require(self.batch_size > 0,
                  f"batch_size must be positive, got {self.batch_size}")
         _require(self.pad_factor >= 1.0,
                  f"pad_factor must be >= 1, got {self.pad_factor}")
+        _require(self.pad_headroom >= 1.0,
+                 f"pad_headroom must be >= 1, got {self.pad_headroom}")
         _require(not (self.pipeline == "graph_batch" and self.shuffle_blocks),
                  "pipeline='graph_batch' is the consecutive-mini-block "
                  "baseline; set shuffle_blocks=False (shuffled blocks would "
                  "silently turn it into neighbour-less meta-batches)")
+
+
+@dataclass(frozen=True)
+class RepartitionConfig:
+    """Stochastic re-partitioning of the §2 meta-batch plan between epochs.
+
+    Requires ``BatchConfig.pipeline="metabatch_stream"``.  Every
+    ``every_n_epochs`` epochs a background thread re-synthesizes the whole
+    plan — balanced partition with ``matching_temperature``-perturbed
+    (Gumbel) coarsening, fresh mini-block grouping, fresh Eq.-6 batch graph
+    — under a deterministic per-epoch seed stream derived from ``seed``, and
+    the engine's next epoch consumes it without a device sync.
+    ``every_n_epochs=0`` (default) keeps the plan static.
+    """
+
+    every_n_epochs: int = 0
+    matching_temperature: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        _require(self.every_n_epochs >= 0,
+                 f"every_n_epochs must be >= 0, got {self.every_n_epochs}")
+        _require(self.matching_temperature >= 0,
+                 f"matching_temperature must be >= 0, "
+                 f"got {self.matching_temperature}")
+
+    @property
+    def active(self) -> bool:
+        return self.every_n_epochs > 0
 
 
 @dataclass(frozen=True)
@@ -278,9 +314,20 @@ class ExperimentConfig:
     graph: GraphConfig = field(default_factory=GraphConfig)
     partition: PartitionConfig = field(default_factory=PartitionConfig)
     batch: BatchConfig = field(default_factory=BatchConfig)
+    repartition: RepartitionConfig = field(
+        default_factory=RepartitionConfig)
     objective: ObjectiveConfig = field(default_factory=ObjectiveConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
     execution: ExecutionConfig = field(default_factory=ExecutionConfig)
+
+    def __post_init__(self):
+        _require(not (self.repartition.active
+                      and self.batch.pipeline != "metabatch_stream"),
+                 f"repartition.every_n_epochs="
+                 f"{self.repartition.every_n_epochs} requires "
+                 f"batch.pipeline='metabatch_stream' (got "
+                 f"{self.batch.pipeline!r}); only the streaming pipeline "
+                 "can swap plans between epochs")
 
     @classmethod
     def _sections(cls) -> dict[str, type]:

@@ -115,13 +115,22 @@ class Experiment:
         # round-robin (k lives in the engine strategy, not the pipeline).
         pipeline_workers = (1 if self._strategy() == "async_ps"
                             else cfg.train.n_workers)
+        # Extra keys are swallowed by factories that don't need them (the
+        # uniform ``**_`` contract): the stream pipeline consumes the
+        # re-partitioning config and the partition settings it re-runs with.
         self.pipeline = factory(
             self.corpus, self.graph, self.plan,
             batch_size=cfg.batch.batch_size,
             n_workers=pipeline_workers,
             with_neighbor=cfg.batch.with_neighbor,
             pad_factor=cfg.batch.pad_factor,
-            seed=cfg.data.seed)
+            pad_headroom=cfg.batch.pad_headroom,
+            seed=cfg.data.seed,
+            repartition=cfg.repartition,
+            partitioner=PARTITIONER.get(cfg.partition.method),
+            tol=cfg.partition.tol,
+            coarsen_to=cfg.partition.coarsen_to,
+            shuffle_blocks=cfg.batch.shuffle_blocks)
         self._built = True
         return self
 

@@ -100,8 +100,14 @@ AFFINITY = Registry("affinity")
 AFFINITY.register("knn_rbf", "repro.core.affinity:build_affinity_graph")
 
 #: ``(W, n_parts, *, tol, coarsen_to, seed) -> PartitionResult``
+#:   * ``"multilevel"``      — the vectorized multilevel partitioner (also
+#:     accepts ``temperature=`` for stochastic re-partitioning);
+#:   * ``"multilevel_loop"`` — the seed per-node-loop implementation, kept
+#:     as the quality/semantics reference.
 PARTITIONER = Registry("partitioner")
 PARTITIONER.register("multilevel", "repro.core.partition:partition_graph")
+PARTITIONER.register("multilevel_loop",
+                     "repro.core.partition:partition_graph_loop")
 
 #: ``(corpus, graph, plan, *, n_workers, seed, ...) -> epoch_fn`` where
 #: ``epoch_fn()`` yields device-ready ``SSLBatch``es for one epoch.
@@ -111,6 +117,12 @@ PIPELINE.register("graph_batch",
                   "repro.data.pipeline:make_graph_batch_pipeline")
 PIPELINE.register("random_batch",
                   "repro.data.pipeline:make_random_batch_pipeline")
+#: ``"metabatch_stream"`` — the §2 stream as a first-class stage: meta-batch
+#: pairs assembled on demand, with optional between-epoch stochastic
+#: re-partitioning on a background thread (``RepartitionConfig``); its epoch
+#: factory takes ``epoch=`` so scheduling survives checkpoint resume.
+PIPELINE.register("metabatch_stream",
+                  "repro.data.pipeline:make_metabatch_stream_pipeline")
 
 #: ``(logp, W) -> scalar`` computing the Eq.-3/4 contraction
 #: ``Σ_ij W_ij · Hc(p_i, p_j)`` — or, for entries carrying the

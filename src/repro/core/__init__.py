@@ -7,17 +7,19 @@ graph-regularized objective.
 """
 from .affinity import AffinityGraph, build_affinity_graph
 from .metabatch import (MetaBatchPlan, NeighborSampler, concat_batch_indices,
-                        plan_meta_batches)
-from .partition import PartitionResult, edge_cut, partition_graph, partition_permutation
+                        epoch_plan_seed, plan_meta_batches, resynthesize_plan)
+from .partition import (PartitionResult, edge_cut, partition_graph,
+                        partition_graph_loop, partition_permutation)
 from .ssl_loss import (SSLHyper, entropy, graph_regularizer,
                        pairwise_cross_entropy_term, ssl_objective,
                        ssl_objective_kl_form)
 
 __all__ = [
     "AffinityGraph", "build_affinity_graph",
-    "PartitionResult", "partition_graph", "partition_permutation", "edge_cut",
-    "MetaBatchPlan", "plan_meta_batches", "NeighborSampler",
-    "concat_batch_indices",
+    "PartitionResult", "partition_graph", "partition_graph_loop",
+    "partition_permutation", "edge_cut",
+    "MetaBatchPlan", "plan_meta_batches", "resynthesize_plan",
+    "epoch_plan_seed", "NeighborSampler", "concat_batch_indices",
     "SSLHyper", "ssl_objective", "ssl_objective_kl_form",
     "graph_regularizer", "pairwise_cross_entropy_term", "entropy",
 ]

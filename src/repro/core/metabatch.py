@@ -22,11 +22,14 @@ import dataclasses
 import numpy as np
 import scipy.sparse as sp
 
+from repro.introspect import accepts_kwarg
+
 from .affinity import AffinityGraph
 from .partition import PartitionResult, partition_graph
 
 __all__ = ["MetaBatchPlan", "build_mini_blocks", "synthesize_meta_batches",
-           "batch_graph", "NeighborSampler", "concat_batch_indices"]
+           "batch_graph", "NeighborSampler", "concat_batch_indices",
+           "plan_meta_batches", "epoch_plan_seed", "resynthesize_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +64,16 @@ def build_mini_blocks(
     PartitionResult`` callable (PARTITIONER registry entries qualify);
     default is the built-in multilevel scheme.
     """
+    if batch_size < n_classes:
+        # n_blocks would exceed n and the clamp below would silently hand
+        # back single-node "blocks": no graph structure inside any block,
+        # meta-batches degenerate to random batches.
+        raise ValueError(
+            f"batch_size={batch_size} < n_classes={n_classes}: each "
+            f"meta-batch draws M=n_classes mini-blocks of ~B/M nodes, so "
+            f"B/M < 1 produces degenerate single-node mini-blocks. "
+            f"Increase batch_size to at least n_classes (ideally many "
+            f"times it) or reduce n_classes.")
     n = graph.n_nodes
     n_blocks = max(1, int(round(n * n_classes / batch_size)))
     n_blocks = min(n_blocks, n)  # can't have more blocks than nodes
@@ -144,6 +157,61 @@ def plan_meta_batches(
         batch_size=batch_size,
         n_classes=n_classes,
     )
+
+
+def epoch_plan_seed(base_seed: int, epoch: int) -> int:
+    """Deterministic per-epoch seed stream for stochastic re-partitioning.
+
+    Derived through ``np.random.SeedSequence([base_seed, epoch])`` so the
+    epoch seeds are decorrelated (not just ``base_seed + epoch``) while
+    identical ``(base_seed, epoch)`` pairs stay bit-reproducible across
+    processes and platforms.
+    """
+    ss = np.random.SeedSequence([int(base_seed), int(epoch)])
+    return int(ss.generate_state(1, dtype=np.uint32)[0])
+
+
+def resynthesize_plan(
+    graph: AffinityGraph,
+    batch_size: int,
+    n_classes: int,
+    *,
+    epoch: int,
+    base_seed: int = 0,
+    temperature: float = 0.0,
+    tol: float = 0.15,
+    shuffle_blocks: bool = True,
+    partitioner=None,
+    coarsen_to: int = 60,
+) -> MetaBatchPlan:
+    """Plan for one epoch of the stochastic re-partitioning stream (§2).
+
+    A pure function of ``(graph, config, base_seed, epoch)``: identical
+    inputs yield bit-identical plans (safe to compute on a background
+    thread), while different epochs draw a fresh partition from the
+    ``temperature``-perturbed matching distribution — batch composition
+    stays stochastic across epochs, as the abstract's "enough
+    stochasticity for SGD" requires.
+
+    ``temperature`` is forwarded to the partitioner only when its signature
+    accepts it (the built-in vectorized partitioner does); requesting
+    ``temperature > 0`` from a partitioner that cannot honor it raises.
+    """
+    part = partitioner or partition_graph
+    if temperature != 0.0:
+        if not accepts_kwarg(part, "temperature"):
+            raise ValueError(
+                f"matching_temperature={temperature} but partitioner "
+                f"{getattr(part, '__name__', part)!r} does not accept a "
+                f"temperature= argument; use the vectorized 'multilevel' "
+                f"partitioner or set matching_temperature=0")
+        import functools
+        part = functools.partial(part, temperature=temperature)
+    return plan_meta_batches(
+        graph, batch_size=batch_size, n_classes=n_classes,
+        seed=epoch_plan_seed(base_seed, epoch), tol=tol,
+        shuffle_blocks=shuffle_blocks, partitioner=part,
+        coarsen_to=coarsen_to)
 
 
 class NeighborSampler:

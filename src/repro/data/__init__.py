@@ -1,3 +1,4 @@
-from .pipeline import MetaBatchPipeline, SSLBatch, random_batch_pipeline
+from .pipeline import (MetaBatchPipeline, MetaBatchStream, SSLBatch,
+                       random_batch_pipeline)
 from .synthetic_timit import SyntheticCorpus, drop_labels, make_corpus
 from .tokens import lm_batches, make_token_corpus, sequence_features

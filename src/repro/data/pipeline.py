@@ -5,25 +5,42 @@ features, labels, label mask, and the dense affinity sub-block ``W`` for the
 concatenated index set.  For ``k``-worker data parallelism, each step packs
 ``k`` independent concatenated batches along a leading axis — the launcher
 shards that axis over the mesh's data dimension, which *is* the paper's
-parallel decomposition.
+Eq.-7 parallel decomposition.
 
 Batches are padded to a fixed size (2B) so shapes are static under jit;
 padding rows carry zero affinity and zero label mask.
+
+Two meta-batch pipelines share the assembly code:
+
+  * :class:`MetaBatchPipeline` — the static plan, fixed for the whole run;
+  * :class:`MetaBatchStream`  — the streaming stage ("metabatch_stream" in
+    the PIPELINE registry): between epochs a background thread re-runs the
+    §2 synthesis (partition → mini-blocks → meta-batches → batch graph)
+    with a fresh epoch seed and Gumbel-perturbed matching, and the new plan
+    is swapped in at the epoch boundary — host-side only, no device sync —
+    so batch composition stays stochastic across epochs as the paper's
+    SGD argument requires.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import warnings
 from typing import Iterator
 
 import numpy as np
 
 from repro.core.affinity import AffinityGraph
-from repro.core.metabatch import MetaBatchPlan, NeighborSampler
+from repro.core.metabatch import (MetaBatchPlan, NeighborSampler,
+                                  epoch_plan_seed, resynthesize_plan)
+from repro.core.partition import partition_graph as partition_graph_default
 from repro.data.synthetic_timit import SyntheticCorpus
+from repro.introspect import accepts_kwarg
 
-__all__ = ["SSLBatch", "MetaBatchPipeline", "random_batch_pipeline",
-           "make_meta_batch_pipeline", "make_graph_batch_pipeline",
-           "make_random_batch_pipeline"]
+__all__ = ["SSLBatch", "MetaBatchPipeline", "MetaBatchStream",
+           "random_batch_pipeline", "make_meta_batch_pipeline",
+           "make_graph_batch_pipeline", "make_random_batch_pipeline",
+           "make_metabatch_stream_pipeline"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +59,23 @@ def _pad_to(a: np.ndarray, size: int, axis: int = 0) -> np.ndarray:
     widths = [(0, 0)] * a.ndim
     widths[axis] = (0, pad)
     return np.pad(a, widths)
+
+
+def _assemble(corpus: SyntheticCorpus, graph: AffinityGraph,
+              idx: np.ndarray, P: int):
+    """Padded (x, y, label_mask, W, valid) arrays for one concat batch."""
+    return (_pad_to(corpus.X[idx], P),
+            _pad_to(corpus.y[idx], P),
+            _pad_to(corpus.label_mask[idx].astype(np.float32), P),
+            _pad_to(_pad_to(graph.dense_block(idx), P, 0), P, 1),
+            _pad_to(np.ones(len(idx), bool), P))
+
+
+def _stack_group(parts) -> SSLBatch:
+    xs, ys, ms, Ws, vs = zip(*parts)
+    return SSLBatch(x=np.stack(xs), y=np.stack(ys),
+                    label_mask=np.stack(ms), W=np.stack(Ws),
+                    valid=np.stack(vs))
 
 
 class MetaBatchPipeline:
@@ -75,20 +109,201 @@ class MetaBatchPipeline:
         order = self.rng.permutation(self.plan.n_meta)
         for s in range(0, len(order) - self.k + 1, self.k):
             group = order[s : s + self.k]
-            xs, ys, ms, Ws, vs = [], [], [], [], []
+            parts = []
             for i in group:
                 idx, _ = self._one(int(i))
-                P = self.pad
-                x = _pad_to(self.corpus.X[idx], P)
-                y = _pad_to(self.corpus.y[idx], P)
-                lm = _pad_to(
-                    self.corpus.label_mask[idx].astype(np.float32), P)
-                W = _pad_to(_pad_to(self.graph.dense_block(idx), P, 0), P, 1)
-                v = _pad_to(np.ones(len(idx), bool), P)
-                xs.append(x); ys.append(y); ms.append(lm); Ws.append(W); vs.append(v)
-            yield SSLBatch(x=np.stack(xs), y=np.stack(ys),
-                           label_mask=np.stack(ms), W=np.stack(Ws),
-                           valid=np.stack(vs))
+                parts.append(_assemble(self.corpus, self.graph, idx,
+                                       self.pad))
+            yield _stack_group(parts)
+
+
+class MetaBatchStream:
+    """First-class streaming meta-batch stage with stochastic
+    re-partitioning (PIPELINE registry name ``"metabatch_stream"``).
+
+    Per epoch it yields the same Eq.-6/§2.3 (meta-batch, sampled-neighbour)
+    concat batches as :class:`MetaBatchPipeline`, k workers wide (the Eq.-7
+    decomposition lives on the leading axis).  With an active
+    ``repartition`` config, while epoch ``e`` trains, a background thread
+    re-synthesizes the plan for the next re-partition epoch — vectorized
+    partition with ``matching_temperature``-perturbed coarsening, fresh
+    mini-block grouping, fresh batch graph — and the swap happens at the
+    epoch boundary on the host: the engine's prefetch iterator simply reads
+    the new plan, no device sync, no shape change (the pad is pinned with
+    ``pad_headroom`` so jitted shapes survive every swap; a plan that would
+    not fit is rejected with a warning and the previous plan is kept).
+
+    Determinism: the plan for epoch ``e`` is a pure function of
+    ``(graph, config, repartition.seed, e)`` and the per-epoch batch order
+    and neighbour draws derive from ``(seed, e)``, so identical seeds are
+    bit-reproducible — run to run, with or without the background thread.
+    """
+
+    def __init__(self, corpus: SyntheticCorpus, graph: AffinityGraph,
+                 plan: MetaBatchPlan, *, n_workers: int = 1,
+                 with_neighbor: bool = True, seed: int = 0,
+                 repartition=None, partitioner=None, tol: float = 0.15,
+                 coarsen_to: int = 60, shuffle_blocks: bool = True,
+                 pad_headroom: float = 1.25, record_indices: bool = False):
+        self.corpus = corpus
+        self.graph = graph
+        self.plan = plan
+        self.k = n_workers
+        self.with_neighbor = with_neighbor
+        self.seed = seed
+        self.repartition = repartition
+        self.partitioner = partitioner
+        self.tol = tol
+        self.coarsen_to = coarsen_to
+        self.shuffle_blocks = shuffle_blocks
+        self.record_indices = record_indices
+        self.last_epoch_indices: list[list[np.ndarray]] | None = None
+        self.swaps = 0                     # plans swapped in so far
+        every = getattr(repartition, "every_n_epochs", 0) if repartition \
+            else 0
+        self.every = int(every)
+        if self.every > 0:
+            # Fail at construction, not as a once-per-epoch warning from
+            # the background thread: an incapable partitioner would leave
+            # the plan silently static forever.
+            temp = getattr(repartition, "matching_temperature", 0.0)
+            if temp != 0.0 and not accepts_kwarg(
+                    partitioner or partition_graph_default, "temperature"):
+                raise ValueError(
+                    f"repartition.matching_temperature={temp} but the "
+                    f"configured partitioner does not accept temperature=; "
+                    f"use the vectorized 'multilevel' partitioner or set "
+                    f"matching_temperature=0")
+        mmax = max(len(m) for m in plan.meta_batches)
+        base = 2 * mmax if with_neighbor else mmax
+        headroom = pad_headroom if self.every > 0 else 1.0
+        self.pad = int(np.ceil(base * headroom / 64) * 64)
+        self._epoch_counter = 0
+        self._plan_epoch = 0               # epoch the current plan targets
+        self._failed: set[int] = set()     # targets that failed to swap
+        self._pending: tuple[int, threading.Thread, dict] | None = None
+
+    # ------------------------------------------------------------ internals
+    def _fits(self, plan: MetaBatchPlan) -> bool:
+        mmax = max(len(m) for m in plan.meta_batches)
+        return (2 * mmax if self.with_neighbor else mmax) <= self.pad
+
+    def _synthesize(self, epoch: int) -> MetaBatchPlan:
+        rep = self.repartition
+        return resynthesize_plan(
+            self.graph, self.plan.batch_size, self.plan.n_classes,
+            epoch=epoch, base_seed=getattr(rep, "seed", 0),
+            temperature=getattr(rep, "matching_temperature", 0.0),
+            tol=self.tol, shuffle_blocks=self.shuffle_blocks,
+            partitioner=self.partitioner, coarsen_to=self.coarsen_to)
+
+    def _launch(self, target_epoch: int) -> None:
+        box: dict = {}
+
+        def work():
+            try:
+                box["plan"] = self._synthesize(target_epoch)
+            except BaseException as e:  # noqa: BLE001 — surfaced at swap
+                box["error"] = e
+
+        t = threading.Thread(target=work, daemon=True,
+                             name="metabatch-repartition")
+        t.start()
+        self._pending = (target_epoch, t, box)
+
+    def _next_target(self, epoch: int) -> int:
+        """First re-partition epoch strictly after ``epoch``."""
+        return (epoch // self.every + 1) * self.every
+
+    def _swap_in(self, plan: MetaBatchPlan, target: int) -> bool:
+        if not self._fits(plan):
+            warnings.warn(
+                f"re-partitioned plan for epoch {target} exceeds the "
+                f"pinned pad {self.pad} (raise pad_headroom — "
+                f"BatchConfig.pad_headroom in the config API); keeping the "
+                "previous plan", stacklevel=4)
+            return False
+        self.plan = plan
+        self._plan_epoch = target
+        self.swaps += 1
+        return True
+
+    def _collect(self, epoch: int) -> None:
+        """Swap in the background plan scheduled for ``epoch``, if any."""
+        if self._pending is None or self._pending[0] != epoch:
+            return
+        _, t, box = self._pending
+        self._pending = None
+        t.join()
+        if "error" in box:
+            warnings.warn(
+                f"re-partitioning for epoch {epoch} failed "
+                f"({box['error']!r}); keeping the previous plan",
+                stacklevel=3)
+            self._failed.add(epoch)
+            return
+        if not self._swap_in(box["plan"], epoch):
+            self._failed.add(epoch)
+
+    # ----------------------------------------------------------------- epoch
+    def epoch(self, epoch: int | None = None,
+              n_epochs: int | None = None) -> Iterator[SSLBatch]:
+        """One pass over the *current* plan's meta-batches, k at a time.
+
+        Epoch-pure: ``epoch`` pins the epoch index (the engine passes it)
+        and any epoch's batches are reproducible from that index alone —
+        jumping straight to epoch ``e`` (checkpoint resume) synthesizes the
+        plan the uninterrupted run would have been using.  When omitted, an
+        internal counter advances by one per call.  ``n_epochs`` bounds the
+        run so no background plan is computed past the final epoch.
+        """
+        e = self._epoch_counter if epoch is None else int(epoch)
+        self._epoch_counter = e + 1
+        if self.every > 0:
+            self._collect(e)
+            target = (e // self.every) * self.every
+            if (target > 0 and self._plan_epoch != target
+                    and target not in self._failed):
+                # Jumped over the swap epoch (resume, or out-of-order
+                # call): synthesize the plan epoch ``e`` should be using,
+                # synchronously.
+                self._pending = None
+                try:
+                    plan = self._synthesize(target)
+                except Exception as err:  # noqa: BLE001 — degrade like bg
+                    warnings.warn(
+                        f"re-partitioning for epoch {target} failed "
+                        f"({err!r}); keeping the previous plan",
+                        stacklevel=2)
+                    self._failed.add(target)
+                else:
+                    if not self._swap_in(plan, target):
+                        self._failed.add(target)
+            nxt = self._next_target(e)
+            if self._pending is None and (n_epochs is None
+                                          or nxt < n_epochs):
+                self._launch(nxt)
+        sampler = NeighborSampler(
+            self.plan.batch_edges, seed=epoch_plan_seed(self.seed + 1, e))
+        order_rng = np.random.default_rng([self.seed, 2, e])
+        order = order_rng.permutation(self.plan.n_meta)
+        recorded: list[list[np.ndarray]] = []
+        for s in range(0, len(order) - self.k + 1, self.k):
+            group = order[s : s + self.k]
+            parts, idxs = [], []
+            for i in group:
+                j = sampler.sample(int(i)) if self.with_neighbor else None
+                main = self.plan.meta_batches[int(i)]
+                idx = (main if j is None else np.concatenate(
+                    [main, self.plan.meta_batches[j]]))
+                idxs.append(idx)
+                parts.append(_assemble(self.corpus, self.graph, idx,
+                                       self.pad))
+            if self.record_indices:
+                recorded.append(idxs)
+            yield _stack_group(parts)
+        if self.record_indices:
+            self.last_epoch_indices = recorded
 
 
 # ---------------------------------------------------------------------------
@@ -115,6 +330,40 @@ def make_graph_batch_pipeline(corpus, graph, plan, *, n_workers: int = 1,
     return MetaBatchPipeline(corpus, graph, plan, n_workers=n_workers,
                              pad_factor=pad_factor, with_neighbor=False,
                              seed=seed).epoch
+
+
+def make_metabatch_stream_pipeline(corpus, graph, plan, *,
+                                   n_workers: int = 1, seed: int = 0,
+                                   with_neighbor: bool = True,
+                                   repartition=None, partitioner=None,
+                                   tol: float = 0.15, coarsen_to: int = 60,
+                                   shuffle_blocks: bool = True,
+                                   pad_headroom: float = 1.25,
+                                   record_indices: bool = False, **_):
+    """The §2 stream as a first-class pipeline: NeighborSampler + meta-batch
+    assembly feeding the engine directly, with optional between-epoch
+    stochastic re-partitioning (``repartition`` = a ``RepartitionConfig``-
+    shaped object: every_n_epochs / matching_temperature / seed).
+
+    The returned epoch factory accepts optional ``epoch=`` / ``n_epochs=``
+    keywords — the engine passes the true epoch index (so re-partition
+    scheduling stays exact across checkpoint resume, with no replay drain)
+    and the horizon (so no plan is pre-computed past the final epoch) —
+    and exposes the underlying :class:`MetaBatchStream` as ``.stream``
+    (tests, introspection).
+    """
+    stream = MetaBatchStream(
+        corpus, graph, plan, n_workers=n_workers, seed=seed,
+        with_neighbor=with_neighbor, repartition=repartition,
+        partitioner=partitioner, tol=tol, coarsen_to=coarsen_to,
+        shuffle_blocks=shuffle_blocks, pad_headroom=pad_headroom,
+        record_indices=record_indices)
+
+    def epoch_fn(epoch: int | None = None, n_epochs: int | None = None):
+        return stream.epoch(epoch=epoch, n_epochs=n_epochs)
+
+    epoch_fn.stream = stream
+    return epoch_fn
 
 
 def make_random_batch_pipeline(corpus, graph, plan=None, *,

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.introspect import accepts_kwarg
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
 
 __all__ = [
@@ -446,13 +447,32 @@ class Engine:
 
         ``pipeline_epoch`` is called once per epoch and must yield host
         batches (dicts or dataclasses of equal-shaped numpy arrays).
+        Accepting an ``epoch=`` keyword declares the pipeline *epoch-pure*:
+        the true epoch index is passed, resume skips the host-side replay
+        of earlier epochs entirely (an epoch-pure pipeline reproduces any
+        epoch from its index alone — the re-partitioning stream does), and
+        an ``n_epochs=`` keyword additionally receives the horizon (so the
+        stream can skip pre-computing plans no epoch will consume).
         ``eval_fn(params) -> dict`` is merged into each epoch row.  With
         ``resume=True`` and a checkpoint present in ``checkpoint_dir``,
-        training restarts from the saved carry/epoch; the skipped epochs'
-        batch iterators are drained so host-side pipeline RNG replays the
-        exact stream an uninterrupted run would have seen.
+        training restarts from the saved carry/epoch; for epoch-blind
+        pipelines the skipped epochs' batch iterators are drained so
+        host-side pipeline RNG replays the exact stream an uninterrupted
+        run would have seen.
         """
         strategy = self.strategy
+        # Epoch purity is a semantic contract — only an explicitly named
+        # ``epoch`` parameter opts in (a **kwargs catch-all does not).
+        takes_epoch = accepts_kwarg(pipeline_epoch, "epoch", explicit=True)
+        extra = ({"n_epochs": n_epochs}
+                 if takes_epoch and accepts_kwarg(pipeline_epoch, "n_epochs",
+                                                  explicit=True)
+                 else {})
+
+        def epoch_batches(e: int):
+            return pipeline_epoch(epoch=e, **extra) if takes_epoch \
+                else pipeline_epoch()
+
         start, history = 0, []
         # Copy the initial leaves: the first chunk call DONATES the carry,
         # and caller-owned buffers (e.g. a params pytree reused across runs)
@@ -463,9 +483,12 @@ class Engine:
             loaded = self._load_latest(carry)
             if loaded is not None:
                 carry, start, history = loaded
-        if start < n_epochs:     # replay host pipeline RNG, no compute
-            for _ in range(start):
-                for _ in pipeline_epoch():
+        if start < n_epochs and not takes_epoch:
+            # Epoch-blind pipelines advance host RNG per call: replay the
+            # skipped epochs (data pass only, no compute).  Epoch-pure
+            # pipelines reproduce epoch ``start`` from its index directly.
+            for past in range(start):
+                for _ in epoch_batches(past):
                     pass
         for epoch in range(start, n_epochs):
             lr = jnp.float32(lr_schedule(epoch))
@@ -473,7 +496,7 @@ class Engine:
             carry = strategy.begin_epoch(carry)
             metric_chunks = []
             chunks = prefetch_to_device(
-                self._host_chunks(pipeline_epoch()),
+                self._host_chunks(epoch_batches(epoch)),
                 strategy.place_batch, self.prefetch)
             for placed in chunks:
                 carry, metrics = self._chunk_fn(carry, placed, lr)

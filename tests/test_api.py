@@ -307,7 +307,10 @@ def test_async_ps_strategy_via_config_runs_and_learns():
     from repro.api import ExecutionConfig
     cfg = dataclasses.replace(
         tiny_config(pairwise="ref"),
-        train=dataclasses.replace(tiny_config().train, n_workers=4),
+        # 4 epochs: stale gradients make single-epoch deltas noisy — the
+        # learning signal needs a slightly longer horizon to dominate.
+        train=dataclasses.replace(tiny_config().train, n_workers=4,
+                                  n_epochs=4),
         execution=ExecutionConfig(strategy="async_ps", max_staleness=2))
     res = Experiment(cfg).run()
     assert len(res.history) == cfg.train.n_epochs

@@ -1,0 +1,126 @@
+"""Property-based lockdown of the vectorized multilevel partitioner.
+
+For random graphs, the partition invariants must hold unconditionally
+(every node labeled, strict balance cap, cut arithmetic exact, cut
+invariant under node relabeling), and on the affinity-graph domain the
+vectorized partitioner's edge-cut must stay within 5% of the seed
+per-node-loop implementation on identical seeds.
+"""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_affinity_graph
+from repro.core.partition import (edge_cut, partition_graph,
+                                  partition_graph_loop,
+                                  partition_permutation)
+
+
+def random_sparse_graph(n: int, m: int, seed: int) -> sp.csr_matrix:
+    """Random symmetric weighted graph — possibly disconnected, possibly
+    with isolated nodes (the invariants must survive all of that)."""
+    rng = np.random.default_rng(seed)
+    r = rng.integers(0, n, size=m)
+    c = rng.integers(0, n, size=m)
+    keep = r != c
+    r, c = r[keep], c[keep]
+    w = rng.uniform(0.1, 1.0, size=len(r))
+    W = sp.csr_matrix((np.r_[w, w], (np.r_[r, c], np.r_[c, r])),
+                      shape=(n, n))
+    W.sum_duplicates()
+    return W
+
+
+def brute_force_cut(W: sp.csr_matrix, labels: np.ndarray) -> float:
+    """O(n^2) dense recount of the cut, independent of edge_cut's path."""
+    D = np.asarray(W.todense())
+    total = 0.0
+    n = len(labels)
+    for i in range(n):
+        for j in range(i + 1, n):
+            if labels[i] != labels[j]:
+                total += D[i, j]
+    return total
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(10, 90), mult=st.integers(1, 4),
+       k=st.integers(2, 8), seed=st.integers(0, 10))
+def test_partition_invariants_on_random_graphs(n, mult, k, seed):
+    W = random_sparse_graph(n, mult * n, seed)
+    tol = 0.3
+    res = partition_graph(W, k, tol=tol, seed=seed)
+    # Every node labeled, ids in range, sizes account for every node.
+    assert res.labels.shape == (n,)
+    assert res.labels.min() >= 0 and res.labels.max() < max(k, 1)
+    assert res.sizes.sum() == n
+    assert res.n_parts == k
+    # Strict balance: at most max(floor(n/k*(1+tol)), ceil(n/k)) per part.
+    cap = max(int(np.floor(n / k * (1 + tol))), int(np.ceil(n / k)))
+    assert res.sizes.max() <= cap
+    # The reported cut is the real cut.
+    np.testing.assert_allclose(res.cut, edge_cut(W, res.labels), rtol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(10, 60), mult=st.integers(1, 3),
+       k=st.integers(2, 5), seed=st.integers(0, 5))
+def test_edge_cut_matches_brute_force(n, mult, k, seed):
+    W = random_sparse_graph(n, mult * n, seed)
+    res = partition_graph(W, k, tol=0.3, seed=seed)
+    np.testing.assert_allclose(res.cut, brute_force_cut(W, res.labels),
+                               rtol=1e-8, atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(20, 120), k=st.integers(2, 6), seed=st.integers(0, 5))
+def test_vectorized_cut_within_5pct_of_seed_loop(n, k, seed):
+    """On identical seeds over the affinity-graph domain, the vectorized
+    partitioner's cut is never more than 5% worse than the seed loop's."""
+    X = np.random.default_rng(seed).normal(size=(n, 4))
+    g = build_affinity_graph(X, k=4)
+    lo = partition_graph_loop(g.W, k, tol=0.3, seed=seed)
+    ve = partition_graph(g.W, k, tol=0.3, seed=seed)
+    assert ve.cut <= 1.05 * lo.cut + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(10, 80), mult=st.integers(1, 3),
+       k=st.integers(2, 6), seed=st.integers(0, 8))
+def test_cut_is_invariant_under_node_relabeling(n, mult, k, seed):
+    W = random_sparse_graph(n, mult * n, seed)
+    res = partition_graph(W, k, tol=0.3, seed=seed)
+    perm = np.random.default_rng(seed + 1).permutation(n)
+    Wp = W[perm][:, perm].tocsr()
+    np.testing.assert_allclose(edge_cut(Wp, res.labels[perm]),
+                               edge_cut(W, res.labels), rtol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 100), mult=st.integers(1, 3),
+       k=st.integers(2, 6), seed=st.integers(0, 8))
+def test_partition_is_deterministic_per_seed(n, mult, k, seed):
+    W = random_sparse_graph(n, mult * n, seed)
+    a = partition_graph(W, k, tol=0.3, seed=seed)
+    b = partition_graph(W, k, tol=0.3, seed=seed)
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
+def test_partition_permutation_groups_labels():
+    labels = np.array([2, 0, 1, 0, 2, 1, 1])
+    perm = partition_permutation(labels)
+    assert sorted(perm) == list(range(7))
+    assert (np.diff(labels[perm]) >= 0).all()
+
+
+def test_partition_handles_degenerate_shapes():
+    W = random_sparse_graph(12, 30, 0)
+    one = partition_graph(W, 1)
+    assert one.n_parts == 1 and one.cut == 0.0 and one.sizes.sum() == 12
+    many = partition_graph(W, 20, seed=0)
+    assert many.labels.max() < 20 and many.sizes.sum() == 12
+    empty = partition_graph(sp.csr_matrix((8, 8)), 2, seed=0)
+    assert empty.sizes.sum() == 8
