@@ -9,10 +9,18 @@ to re-run *between epochs* (the stochastic re-partitioning stream).
 For each (N, B) point this benchmark partitions the same k-NN affinity
 graph into ``k = N·M/B`` mini-blocks (the §2.1 block count at n_classes
 M=16) with BOTH implementations on identical seeds and records median
-seconds, edge-cut and the cut ratio; it also times one full §2 plan
+seconds, edge-cut and the cut ratio.  It also times one full §2 plan
 re-synthesis (``resynthesize_plan`` — the per-epoch cost the streaming
-pipeline pays).  ``run(json_path=...)`` dumps machine-readable records plus
-the headline ``speedup_at_10k`` / ``cut_ratio_at_10k``.
+pipeline pays) **from scratch and with a cached coarsening hierarchy**
+(``reuse=HierarchyCache`` — the incremental-replan fast path), and verifies
+the reuse plans are bit-reproducible per ``(seed, epoch)``.
+
+``run(json_path=...)`` dumps machine-readable records plus the headline
+``speedup_at_10k`` / ``cut_ratio_at_10k`` (B=2048, the paper's §3 batch)
+and ``speedup_at_10k_B512`` / ``cut_ratio_at_10k_B512`` (the repo-default
+many-small-blocks regime).  Targets are **enforced**: the run raises if
+any ratio-based gate regresses, so CI fails instead of silently recording
+a regression — at BOTH batch sizes, and for the hierarchy-reuse replan.
 """
 from __future__ import annotations
 
@@ -23,11 +31,26 @@ import numpy as np
 
 from repro.core.affinity import build_affinity_graph
 from repro.core.metabatch import resynthesize_plan
-from repro.core.partition import partition_graph, partition_graph_loop
+from repro.core.partition import (HierarchyCache, partition_graph,
+                                  partition_graph_loop)
 
 M = 16           # n_classes in the §2.1 block-count formula k = N*M/B
 KNN = 10         # the paper's affinity graph degree
 TOL = 0.15       # build_mini_blocks default balance tolerance
+
+# Ratio-based gates (machine-speed independent); enforced by run().
+TARGET_SPEEDUP = 10.0            # headline: loop/vec at N=10k, B=2048
+TARGET_SPEEDUP_B512 = 6.0        # loop/vec at N=10k, B=512 (repo default)
+TARGET_CUT_RATIO = 1.05          # vec cut / loop cut, both regimes
+TARGET_REPLAN_REUSE_SPEEDUP = 3.0  # headline (committed runs hit 3.2x+)
+# Enforced floors sit below the headline targets where the committed
+# margin is thin: a different CPU generation / BLAS build can shave
+# 10-20% off a wall-clock ratio with no code change, and the hard gates
+# must catch real regressions without flaking on hardware.  B=512's 6x
+# target has >70% committed headroom, so it IS its own floor (and the
+# reuse replan must ALSO always be strictly faster than from-scratch).
+ENFORCED_SPEEDUP_FLOOR = 8.0       # B=2048 floor under the 10x headline
+ENFORCED_REPLAN_REUSE_FLOOR = 2.0  # reuse floor under the 3x headline
 
 
 def _graph(n: int, seed: int = 0):
@@ -45,32 +68,46 @@ def _median_seconds(fn, repeats: int) -> float:
     return float(np.median(times))
 
 
-def run(quick: bool = True, json_path: str | None = None) -> list[str]:
+def _plans_identical(a, b) -> bool:
+    if (a.mini_block_labels != b.mini_block_labels).any():
+        return False
+    if len(a.meta_batches) != len(b.meta_batches):
+        return False
+    return all((ma == mb).all()
+               for ma, mb in zip(a.meta_batches, b.meta_batches))
+
+
+def run(quick: bool = True, json_path: str | None = None,
+        replan_json_path: str | None = None) -> list[str]:
     # B=2048 is the paper's §3 protocol batch size (its headline row);
     # B=512 is this repo's BatchConfig default (many small blocks — the
     # adversarial regime for the vectorized path).
     points = [(2000, 512), (10000, 2048), (10000, 512)]
     if not quick:
         points += [(10000, 1024), (20000, 2048)]
-    loop_reps, vec_reps = (2, 3) if quick else (3, 5)
+    pair_reps = 3 if quick else 5
     records, rows = [], []
     for n, B in points:
         k = n * M // B
         g = _graph(n)
-        lo_box: dict = {}
-        ve_box: dict = {}
-
-        def run_loop():
-            lo_box["res"] = partition_graph_loop(g.W, k, tol=TOL, seed=0)
-
-        def run_vec():
-            ve_box["res"] = partition_graph(g.W, k, tol=TOL, seed=0)
-
-        t_loop = _median_seconds(run_loop, loop_reps)
-        t_vec = _median_seconds(run_vec, vec_reps)
-        lo, ve = lo_box["res"], ve_box["res"]
+        # Interleave loop/vec timing pairs and gate on the median of the
+        # PER-PAIR ratios: background load (CI neighbours, the rest of
+        # the bench) then hits both sides of every ratio equally, where
+        # separate measurement phases let a load swing fake a 2x
+        # speedup change.
+        loop_times, vec_times, pair_ratios = [], [], []
+        for _ in range(pair_reps):
+            t0 = time.perf_counter()
+            lo = partition_graph_loop(g.W, k, tol=TOL, seed=0)
+            loop_times.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            ve = partition_graph(g.W, k, tol=TOL, seed=0)
+            vec_times.append(time.perf_counter() - t0)
+            pair_ratios.append(loop_times[-1] / vec_times[-1])
+        t_loop = float(np.median(loop_times))
+        t_vec = float(np.median(vec_times))
         ratio = ve.cut / max(lo.cut, 1e-12)
-        speedup = t_loop / t_vec
+        speedup = float(np.median(pair_ratios))
         rec = {
             "n": n, "B": B, "k": k, "nnz": int(g.W.nnz),
             "loop_seconds": t_loop, "vec_seconds": t_vec,
@@ -86,23 +123,64 @@ def run(quick: bool = True, json_path: str | None = None) -> list[str]:
         rows.append(f"partition/vec_n{n}_B{B},{t_vec * 1e6:.0f},"
                     f"speedup={speedup:.1f}x cut_ratio={ratio:.3f}")
     # Per-epoch re-synthesis cost (what the streaming pipeline pays on its
-    # background thread each re-partition epoch).
+    # background thread each re-partition epoch): from scratch vs with the
+    # cached coarsening hierarchy.
     n_re, B_re = (10000, 512)
+    replan_reps = 5 if quick else 7
     g = _graph(n_re)
-    t_replan = _median_seconds(
-        lambda: resynthesize_plan(g, B_re, M, epoch=1, base_seed=0,
-                                  temperature=0.5, tol=TOL),
-        2 if quick else 3)
+    replan_kw = dict(base_seed=0, temperature=0.5, tol=TOL)
+    cache = HierarchyCache(g.W, tol=TOL, seed=0)
+    k_re = n_re * M // B_re
+    t_build = _median_seconds(lambda: cache.get(k_re), 1)  # built once
+    # Interleave the from-scratch and reuse timings so background load
+    # (CI neighbours, the rest of the bench) hits both sides equally —
+    # the gate below is on their *ratio*.
+    fresh_times, reuse_times = [], []
+    for _ in range(replan_reps):
+        t0 = time.perf_counter()
+        resynthesize_plan(g, B_re, M, epoch=1, **replan_kw)
+        fresh_times.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        resynthesize_plan(g, B_re, M, epoch=1, reuse=cache, **replan_kw)
+        reuse_times.append(time.perf_counter() - t0)
+    t_replan = float(np.median(fresh_times))
+    t_replan_reuse = float(np.median(reuse_times))
+    reuse_speedup = t_replan / t_replan_reuse
+    # Bit-reproducibility of reuse plans per (seed, epoch): same inputs →
+    # identical plans, including via a freshly built cache (purity).
+    p1 = resynthesize_plan(g, B_re, M, epoch=2, reuse=cache, **replan_kw)
+    p2 = resynthesize_plan(g, B_re, M, epoch=2, reuse=cache, **replan_kw)
+    p3 = resynthesize_plan(g, B_re, M, epoch=2,
+                           reuse=HierarchyCache(g.W, tol=TOL, seed=0),
+                           **replan_kw)
+    reproducible = _plans_identical(p1, p2) and _plans_identical(p1, p3)
     rows.append(f"partition/replan_n{n_re}_B{B_re},{t_replan * 1e6:.0f},"
                 f"per_epoch_resynthesis")
-    # Headline: the paper-protocol row (N=10k, B=2048); the repo-default
-    # B=512 row rides along so the many-small-blocks regime is tracked too.
+    rows.append(f"partition/replan_reuse_n{n_re}_B{B_re},"
+                f"{t_replan_reuse * 1e6:.0f},"
+                f"reuse_speedup={reuse_speedup:.1f}x "
+                f"hierarchy_build={t_build * 1e6:.0f}us "
+                f"bit_reproducible={reproducible}")
+    # Headline: the paper-protocol row (N=10k, B=2048) and the repo-default
+    # B=512 row — BOTH regimes are gated so neither can silently regress.
     at_10k = next(r for r in records if r["n"] == 10000 and r["B"] == 2048)
     at_10k_512 = next(r for r in records
                       if r["n"] == 10000 and r["B"] == 512)
     rows.append(f"partition/speedup_at_10k,,{at_10k['speedup']:.2f}x")
     rows.append(
         f"partition/speedup_at_10k_B512,,{at_10k_512['speedup']:.2f}x")
+    rows.append(
+        f"partition/replan_reuse_speedup_at_10k,,{reuse_speedup:.2f}x")
+    replan_summary = {
+        "n": n_re, "B": B_re, "k": k_re,
+        "replan_seconds_at_10k": t_replan,
+        "replan_reuse_seconds_at_10k": t_replan_reuse,
+        "replan_reuse_speedup": reuse_speedup,
+        "hierarchy_build_seconds": t_build,
+        "reuse_bit_reproducible": bool(reproducible),
+        "target_replan_reuse_speedup": TARGET_REPLAN_REUSE_SPEEDUP,
+        "enforced_replan_reuse_floor": ENFORCED_REPLAN_REUSE_FLOOR,
+    }
     if json_path:
         with open(json_path, "w") as f:
             json.dump({
@@ -111,8 +189,42 @@ def run(quick: bool = True, json_path: str | None = None) -> list[str]:
                 "cut_ratio_at_10k": at_10k["cut_ratio"],
                 "speedup_at_10k_B512": at_10k_512["speedup"],
                 "cut_ratio_at_10k_B512": at_10k_512["cut_ratio"],
-                "replan_seconds_at_10k": t_replan,
-                "target_speedup": 10.0,
-                "target_cut_ratio": 1.05,
+                **replan_summary,
+                "target_speedup": TARGET_SPEEDUP,
+                "target_speedup_B512": TARGET_SPEEDUP_B512,
+                "target_cut_ratio": TARGET_CUT_RATIO,
+                "enforced_speedup_floor": ENFORCED_SPEEDUP_FLOOR,
             }, f, indent=2)
+    if replan_json_path:
+        with open(replan_json_path, "w") as f:
+            json.dump(replan_summary, f, indent=2)
+    # --- gates (ratio-based, so they hold across machine speeds) ---------
+    failures = []
+    if at_10k["speedup"] < ENFORCED_SPEEDUP_FLOOR:
+        failures.append(
+            f"B=2048 speedup {at_10k['speedup']:.2f}x < enforced floor "
+            f"{ENFORCED_SPEEDUP_FLOOR}x (headline target {TARGET_SPEEDUP}x)")
+    if at_10k_512["speedup"] < TARGET_SPEEDUP_B512:
+        failures.append(
+            f"B=512 speedup {at_10k_512['speedup']:.2f}x < "
+            f"{TARGET_SPEEDUP_B512}x")
+    for rec in (at_10k, at_10k_512):
+        if rec["cut_ratio"] > TARGET_CUT_RATIO:
+            failures.append(
+                f"B={rec['B']} cut ratio {rec['cut_ratio']:.3f} > "
+                f"{TARGET_CUT_RATIO}")
+    if t_replan_reuse >= t_replan:
+        failures.append(
+            f"hierarchy-reuse replan ({t_replan_reuse:.3f}s) not faster "
+            f"than from-scratch ({t_replan:.3f}s)")
+    if reuse_speedup < ENFORCED_REPLAN_REUSE_FLOOR:
+        failures.append(
+            f"replan reuse speedup {reuse_speedup:.2f}x < enforced floor "
+            f"{ENFORCED_REPLAN_REUSE_FLOOR}x (headline target "
+            f"{TARGET_REPLAN_REUSE_SPEEDUP}x)")
+    if not reproducible:
+        failures.append("reuse plans not bit-reproducible per (seed, epoch)")
+    if failures:
+        raise RuntimeError(
+            "partition benchmark gates failed: " + "; ".join(failures))
     return rows

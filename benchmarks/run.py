@@ -52,9 +52,14 @@ def main() -> None:
     if only is None or "partition" in only:
         from benchmarks import bench_partition
         # Partition wall-clock lands in BENCH_partition.json (seed loop vs
-        # vectorized at matched seeds, cut ratios, per-epoch replan cost).
+        # vectorized at matched seeds, cut ratios, per-epoch replan cost
+        # from-scratch AND with hierarchy reuse); the replan summary also
+        # lands in BENCH_partition_replan.json.  Both B=2048 and B=512 run
+        # in smoke mode, and the ratio gates raise on regression (the
+        # section then fails the job).
         sections.append(("partition(loop_vs_vec)", lambda: bench_partition.run(
-            quick, json_path="BENCH_partition.json")))
+            quick, json_path="BENCH_partition.json",
+            replan_json_path="BENCH_partition_replan.json")))
     if only is None or "roofline" in only:
         from benchmarks import bench_roofline
 

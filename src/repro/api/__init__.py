@@ -15,14 +15,15 @@ there instead of forking the wiring.
 """
 from .config import (BatchConfig, DataConfig, ExecutionConfig,
                      ExperimentConfig, GraphConfig, ObjectiveConfig,
-                     PartitionConfig, TrainConfig)
+                     PartitionConfig, RepartitionConfig, TrainConfig)
 from .experiment import Experiment, ExperimentResult
 from .registry import (AFFINITY, OPTIMIZER, PAIRWISE, PARTITIONER, PIPELINE,
                        STRATEGY, Registry, resolve_pairwise)
 
 __all__ = [
     "ExperimentConfig", "DataConfig", "GraphConfig", "PartitionConfig",
-    "BatchConfig", "ObjectiveConfig", "TrainConfig", "ExecutionConfig",
+    "BatchConfig", "RepartitionConfig", "ObjectiveConfig", "TrainConfig",
+    "ExecutionConfig",
     "Experiment", "ExperimentResult",
     "Registry", "AFFINITY", "PARTITIONER", "PIPELINE", "PAIRWISE",
     "OPTIMIZER", "STRATEGY", "resolve_pairwise",

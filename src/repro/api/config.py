@@ -158,11 +158,22 @@ class RepartitionConfig:
     — under a deterministic per-epoch seed stream derived from ``seed``, and
     the engine's next epoch consumes it without a device sync.
     ``every_n_epochs=0`` (default) keeps the plan static.
+
+    ``reuse_hierarchy`` (default True) caches the partitioner's coarsening
+    hierarchy across epochs: each replan re-draws only the chain's top
+    levels plus a temperature-scaled perturbation and re-runs refinement
+    around the delta, instead of rebuilding the whole multilevel chain
+    from scratch.  Plans stay bit-reproducible per ``(seed, epoch)`` —
+    the hierarchy is a pure function of the graph and this config, never
+    of the epoch.  Set False to force from-scratch replans (also the
+    automatic fallback when the configured partitioner does not accept
+    ``reuse=``).
     """
 
     every_n_epochs: int = 0
     matching_temperature: float = 0.5
     seed: int = 0
+    reuse_hierarchy: bool = True
 
     def __post_init__(self):
         _require(self.every_n_epochs >= 0,
@@ -170,6 +181,9 @@ class RepartitionConfig:
         _require(self.matching_temperature >= 0,
                  f"matching_temperature must be >= 0, "
                  f"got {self.matching_temperature}")
+        _require(isinstance(self.reuse_hierarchy, bool),
+                 f"reuse_hierarchy must be a bool, "
+                 f"got {self.reuse_hierarchy!r}")
 
     @property
     def active(self) -> bool:

@@ -60,12 +60,14 @@ class Experiment:
         eval_data: tuple[np.ndarray, np.ndarray] | None = None,
         graph=None,
         plan=None,
+        hierarchy_cache=None,
     ):
         self.config = config
         self.corpus = corpus          # SyntheticCorpus (labels already dropped)
         self.eval_data = eval_data    # (X_test, y_test) or None
         self.graph = graph            # AffinityGraph
         self.plan = plan              # MetaBatchPlan
+        self.hierarchy_cache = hierarchy_cache  # shared HierarchyCache
         self.pipeline: Callable | None = None   # epoch-factory callable
         self._built = False
 
@@ -130,9 +132,32 @@ class Experiment:
             partitioner=PARTITIONER.get(cfg.partition.method),
             tol=cfg.partition.tol,
             coarsen_to=cfg.partition.coarsen_to,
-            shuffle_blocks=cfg.batch.shuffle_blocks)
+            shuffle_blocks=cfg.batch.shuffle_blocks,
+            hierarchy_cache=self._hierarchy_cache())
         self._built = True
         return self
+
+    def _hierarchy_cache(self):
+        """``HierarchyCache`` for hierarchy-reuse replans: the injected one
+        when the constructor got ``hierarchy_cache=`` (sweeps over one
+        shared graph pass the same cache so the coarsening chain is built
+        once across all points), otherwise built fresh for this
+        experiment.  ``None`` when re-partitioning is off, reuse is
+        disabled, or the configured partitioner can't honor it (the
+        stream then replans from scratch)."""
+        cfg = self.config
+        if not (cfg.repartition.active and cfg.repartition.reuse_hierarchy):
+            return None
+        from repro.introspect import accepts_kwarg
+        if not accepts_kwarg(PARTITIONER.get(cfg.partition.method), "reuse"):
+            return None
+        if self.hierarchy_cache is not None:
+            return self.hierarchy_cache
+        from repro.core.partition import HierarchyCache
+        return HierarchyCache(
+            self.graph.W, tol=cfg.partition.tol,
+            coarsen_to=cfg.partition.coarsen_to,
+            seed=cfg.repartition.seed)
 
     def _strategy(self) -> str:
         """Effective STRATEGY name: an explicit ``ExecutionConfig.strategy``

@@ -57,12 +57,15 @@ def build_mini_blocks(
     seed: int = 0,
     partitioner=None,
     coarsen_to: int = 60,
+    reuse=None,
 ) -> PartitionResult:
     """Step 1: partition into N*M/B balanced mini-blocks of ~B/M nodes.
 
     ``partitioner`` is any ``(W, n_parts, *, tol, coarsen_to, seed) ->
     PartitionResult`` callable (PARTITIONER registry entries qualify);
-    default is the built-in multilevel scheme.
+    default is the built-in multilevel scheme.  ``reuse`` (a
+    ``PartitionHierarchy`` or ``HierarchyCache``) is forwarded to
+    partitioners that accept it — the incremental-replan fast path.
     """
     if batch_size < n_classes:
         # n_blocks would exceed n and the clamp below would silently hand
@@ -78,7 +81,17 @@ def build_mini_blocks(
     n_blocks = max(1, int(round(n * n_classes / batch_size)))
     n_blocks = min(n_blocks, n)  # can't have more blocks than nodes
     part = partitioner or partition_graph
-    return part(graph.W, n_blocks, tol=tol, coarsen_to=coarsen_to, seed=seed)
+    kw = {}
+    if reuse is not None:
+        if not accepts_kwarg(part, "reuse"):
+            raise ValueError(
+                f"hierarchy reuse requested but partitioner "
+                f"{getattr(part, '__name__', part)!r} does not accept a "
+                f"reuse= argument; use the vectorized 'multilevel' "
+                f"partitioner or disable reuse_hierarchy")
+        kw["reuse"] = reuse
+    return part(graph.W, n_blocks, tol=tol, coarsen_to=coarsen_to, seed=seed,
+                **kw)
 
 
 def synthesize_meta_batches(
@@ -104,7 +117,13 @@ def synthesize_meta_batches(
     if len(groups) > 1 and len(groups[-1]) < max(2, n_classes // 2):
         groups[-2] = np.concatenate([groups[-2], groups[-1]])
         groups.pop()
-    members_of_block = [np.where(mini_blocks.labels == b)[0] for b in range(k)]
+    # One stable argsort groups every block's (ascending) members at once —
+    # the k-times-np.where scan this replaces was a visible slice of the
+    # per-epoch replan cost in the many-small-blocks regime.
+    by_block = np.argsort(mini_blocks.labels, kind="stable")
+    counts = np.bincount(mini_blocks.labels, minlength=k)
+    starts = np.concatenate(([0], np.cumsum(counts)))
+    members_of_block = [by_block[starts[b] : starts[b + 1]] for b in range(k)]
     meta_batches = [
         np.concatenate([members_of_block[b] for b in g]) for g in groups
     ]
@@ -122,10 +141,19 @@ def batch_graph(
     r = meta_of_node[coo.row]
     c = meta_of_node[coo.col]
     keep = r != c
+    if n_meta <= 2048:
+        # |C_ij| is a *count* of crossing affinity edges: one bincount over
+        # the flattened (i, j) key replaces the duplicate-summing CSR
+        # assembly (a visible slice of the per-epoch replan cost).
+        key = r[keep].astype(np.int64) * n_meta + c[keep]
+        counts = np.bincount(key, minlength=n_meta * n_meta)
+        # Each unique node pair was counted twice (W symmetric) -> halve.
+        E = sp.csr_matrix((counts / 2.0).reshape(n_meta, n_meta))
+        E.eliminate_zeros()
+        return E.tocsr()
     ones = np.ones(keep.sum())
     E = sp.csr_matrix((ones, (r[keep], c[keep])), shape=(n_meta, n_meta))
     E.sum_duplicates()
-    # Each unique node pair was counted twice (W symmetric) -> halve.
     E.data = E.data / 2.0
     return E.tocsr()
 
@@ -140,11 +168,13 @@ def plan_meta_batches(
     shuffle_blocks: bool = True,
     partitioner=None,
     coarsen_to: int = 60,
+    reuse=None,
 ) -> MetaBatchPlan:
     """One-shot preprocessing: mini-blocks -> meta-batches -> batch graph."""
     rng = np.random.default_rng(seed)
     mini = build_mini_blocks(graph, batch_size, n_classes, tol=tol, seed=seed,
-                             partitioner=partitioner, coarsen_to=coarsen_to)
+                             partitioner=partitioner, coarsen_to=coarsen_to,
+                             reuse=reuse)
     metas, meta_of_block = synthesize_meta_batches(
         mini, n_classes, rng=rng, shuffle_blocks=shuffle_blocks)
     meta_of_node = meta_of_block[mini.labels]
@@ -183,6 +213,7 @@ def resynthesize_plan(
     shuffle_blocks: bool = True,
     partitioner=None,
     coarsen_to: int = 60,
+    reuse=None,
 ) -> MetaBatchPlan:
     """Plan for one epoch of the stochastic re-partitioning stream (§2).
 
@@ -196,6 +227,15 @@ def resynthesize_plan(
     ``temperature`` is forwarded to the partitioner only when its signature
     accepts it (the built-in vectorized partitioner does); requesting
     ``temperature > 0`` from a partitioner that cannot honor it raises.
+
+    ``reuse`` hands the partitioner a cached coarsening hierarchy (a
+    ``PartitionHierarchy`` or ``HierarchyCache``): the replan skips the
+    frozen fine-level coarsening and re-draws only the top of the chain
+    plus the initial partition and refinement.  The hierarchy is itself a
+    pure function of ``(graph, k, config, seed)`` — never of the epoch —
+    so reuse keeps the bit-reproducibility contract: identical
+    ``(base_seed, epoch)`` pairs yield identical plans no matter when (or
+    whether) the hierarchy was built.
     """
     part = partitioner or partition_graph
     if temperature != 0.0:
@@ -211,7 +251,7 @@ def resynthesize_plan(
         graph, batch_size=batch_size, n_classes=n_classes,
         seed=epoch_plan_seed(base_seed, epoch), tol=tol,
         shuffle_blocks=shuffle_blocks, partitioner=part,
-        coarsen_to=coarsen_to)
+        coarsen_to=coarsen_to, reuse=reuse)
 
 
 class NeighborSampler:

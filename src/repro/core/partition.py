@@ -34,6 +34,7 @@ to run *between epochs* (see ``repro.data.pipeline.MetaBatchStream``).
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 import scipy.sparse as sp
@@ -41,8 +42,11 @@ from scipy.sparse.csgraph import connected_components
 
 __all__ = [
     "PartitionResult",
+    "PartitionHierarchy",
+    "HierarchyCache",
     "partition_graph",
     "partition_graph_loop",
+    "partition_hierarchy",
     "edge_cut",
     "partition_permutation",
 ]
@@ -451,15 +455,21 @@ def _region_grow_flood(
     """Simultaneous seeded growth: all k parts flood their frontiers at once
     (larger coarse graphs — rounds scale with diameter, not node count).
 
-    Each round every open part absorbs its strongest-connected frontier
-    nodes up to its remaining weight budget (per-part cumulative-weight
-    prefix).  Coarser than the sequential grower, but the coarse graph is
-    exactly where FM-style refinement can repair the difference.
+    The frontier is **sparse**: per-(node, part) connection weights live in
+    COO-style pending arrays (one entry per edge whose source got assigned,
+    ≤ E entries total) that are compacted and segment-summed each round —
+    no dense ``(n, k)`` matrix, so flood growth survives many-small-blocks
+    regimes (k ≳ 300) and stalled coarsenings without an O(nk) memory
+    blowup.  Each round every open part absorbs its strongest-connected
+    frontier nodes up to its remaining weight budget (per-part
+    cumulative-weight prefix).  Coarser than the sequential grower, but the
+    coarse graph is exactly where FM-style refinement can repair the
+    difference.
     """
     n = W.shape[0]
-    row, col, w = _sym_edges(W)
     labels = np.full(n, -1, dtype=np.int64)
     target = float(node_w.sum()) / k
+    row, _, w = _sym_edges(W)
     deg = np.zeros(n)
     np.add.at(deg, row, w)
     jit = rng.random(n)
@@ -467,61 +477,84 @@ def _region_grow_flood(
     seeds = np.argsort(-seed_score, kind="stable")[:k]
     labels[seeds] = np.arange(k)
     part_w = node_w[seeds].astype(np.float64).copy()
-    # conn is maintained IN PLACE: assigned rows and closed-part columns
-    # are sunk to -inf when they change, so each round's argmax is the only
-    # O(nk) op left.
-    conn = np.zeros((n, k))
-    conn[seeds] = -np.inf
-    open_cols = np.ones(k, dtype=bool)
+    open_parts = np.ones(k, dtype=bool)
+    n_left = n - k
+    indptr = W.indptr
+    # Pending frontier contributions (node, part, weight) — appended when a
+    # node is assigned, compacted against assignments/closed parts each
+    # round.  Every edge enters at most twice over the whole flood.
+    pn: list[np.ndarray] = []
+    pp: list[np.ndarray] = []
+    pw: list[np.ndarray] = []
     new = seeds
-    newf = np.zeros(n, dtype=bool)
-    arange_n = np.arange(n)
-    for _ in range(n):          # safety cap; terminates in ~diameter rounds
+    for _ in range(2 * n + k):  # safety cap; terminates in ~diameter rounds
         if len(new):
-            newf[:] = False
-            newf[new] = True
-            m = newf[col]
-            np.add.at(conn, (row[m], labels[col[m]]), w[m])
-            conn[new] = -np.inf
-        closing = open_cols & (part_w >= target)
-        if closing.any():
-            conn[:, closing] = -np.inf
-            open_cols &= ~closing
-        avail = labels == -1
-        if not avail.any():
+            nb, wt = _adjacency(W, new)
+            src_part = np.repeat(labels[new], indptr[new + 1] - indptr[new])
+            m = labels[nb] == -1
+            if m.any():
+                pn.append(nb[m])
+                pp.append(src_part[m])
+                pw.append(wt[m])
+        open_parts &= part_w < target
+        if n_left == 0 or not open_parts.any():
             break
-        if not open_cols.any():
-            break
-        best_p = conn.argmax(axis=1)
-        best_v = conn[arange_n, best_p]
-        cand = np.flatnonzero(avail & (best_v > 0))
-        if len(cand) == 0:
-            # Disconnected frontier: seed the lightest open part with the
-            # best-connected unassigned node.
-            ua = np.flatnonzero(avail)
-            u = int(ua[np.argmax(deg[ua])])
-            p = int(np.argmin(np.where(open_cols, part_w, np.inf)))
-            labels[u] = p
-            part_w[p] += node_w[u]
-            conn[u] = -np.inf
-            new = np.array([u])
+        # Compact: drop contributions to assigned nodes / from closed parts.
+        fn = np.concatenate(pn) if pn else np.empty(0, dtype=np.int64)
+        fp = np.concatenate(pp) if pp else np.empty(0, dtype=np.int64)
+        fw = np.concatenate(pw) if pw else np.empty(0)
+        live = (labels[fn] == -1) & open_parts[fp]
+        fn, fp, fw = fn[live], fp[live], fw[live]
+        pn, pp, pw = [fn], [fp], [fw]
+        if len(fn) == 0:
+            # Disconnected frontier: batch-seed the open parts (lightest
+            # first) with the best-connected unassigned nodes — one round,
+            # not one node per round.
+            ua = np.flatnonzero(labels == -1)
+            po = np.flatnonzero(open_parts)
+            po = po[np.argsort(part_w[po], kind="stable")]
+            m_seed = min(len(ua), len(po))
+            pick = ua[np.argsort(-deg[ua], kind="stable")[:m_seed]]
+            labels[pick] = po[:m_seed]
+            np.add.at(part_w, po[:m_seed], node_w[pick])
+            n_left -= m_seed
+            new = pick
             continue
-        p_c, v_c = best_p[cand], best_v[cand]
-        o = np.lexsort((-v_c, p_c))
-        ps, cs = p_c[o], cand[o]
-        wseg = node_w[cs].astype(np.float64)
-        cw = np.cumsum(wseg)
-        starts = np.flatnonzero(np.r_[True, ps[1:] != ps[:-1]])
-        base = np.repeat(cw[starts] - wseg[starts],
-                         np.diff(np.r_[starts, len(ps)]))
-        first = np.zeros(len(ps), dtype=bool)
-        first[starts] = True
+        # Aggregate duplicate (node, part) keys, then take each node's
+        # strongest part — sort-based segment reductions, deterministic.
+        # int64 BEFORE the multiply: fn carries the CSR index dtype
+        # (int32 below 2^31 nnz) and n*k overflows it at corpus scale.
+        key = fn.astype(np.int64) * k + fp
+        o = np.argsort(key, kind="stable")
+        ks, ws = key[o], fw[o]
+        starts = np.flatnonzero(
+            np.concatenate(([True], ks[1:] != ks[:-1])))
+        sums = np.add.reduceat(ws, starts)
+        uk = ks[starts]
+        un, up = uk // k, uk % k
+        o2 = np.lexsort((sums, un))
+        last = np.flatnonzero(
+            np.concatenate((un[o2][1:] != un[o2][:-1], [True])))
+        sel = o2[last]
+        cn, cp, cv = un[sel], up[sel], sums[sel]
         # Budget prefix per part; the single best candidate is always
         # admitted so a nearly-full part cannot stall the flood.
+        o3 = np.lexsort((-cv, cp))
+        ps, cs = cp[o3], cn[o3]
+        wseg = node_w[cs].astype(np.float64)
+        cw = np.cumsum(wseg)
+        starts2 = np.flatnonzero(
+            np.concatenate(([True], ps[1:] != ps[:-1])))
+        base = np.repeat(
+            cw[starts2] - wseg[starts2],
+            np.diff(np.concatenate((starts2, [len(ps)]))))
+        first = np.zeros(len(ps), dtype=bool)
+        first[starts2] = True
         ok = ((cw - base) <= (target - part_w)[ps]) | first
         acc, accp = cs[ok], ps[ok]
         labels[acc] = accp
         np.add.at(part_w, accp, node_w[acc])
+        n_left -= len(acc)
         new = acc
     rest = np.flatnonzero(labels == -1)
     if len(rest):
@@ -532,15 +565,38 @@ def _region_grow_flood(
 def _rcm_chop(W: sp.csr_matrix, node_w: np.ndarray, k: int) -> np.ndarray:
     """Chop the reverse-Cuthill–McKee order into k weight-balanced chunks —
     a C-level bandwidth-reducing traversal, so consecutive chunks are
-    spatially coherent.  Deterministic (no rng)."""
+    spatially coherent.  Deterministic (no rng).
+
+    Boundaries are placed *adaptively*: each chunk targets the remaining
+    weight over the remaining parts, so rounding drift is redistributed as
+    it accrues instead of the last chop absorbing the whole remainder
+    (which left badly unbalanced tails when n % k != 0 or node weights
+    vary).  Every part gets at least one node.
+    """
     from scipy.sparse.csgraph import reverse_cuthill_mckee
 
     n = W.shape[0]
     order = reverse_cuthill_mckee(W.astype(np.float64), symmetric_mode=True)
-    target = float(node_w.sum()) / k
-    cum = np.cumsum(node_w[order]) - 0.5 * node_w[order]
+    w_o = node_w[order].astype(np.float64)
+    cum = np.cumsum(w_o)
+    total = float(cum[-1])
     labels = np.empty(n, dtype=np.int64)
-    labels[order] = np.minimum((cum / target).astype(np.int64), k - 1)
+    start = 0
+    start_w = 0.0
+    for p in range(k):
+        if p == k - 1:
+            end = n
+        else:
+            tgt = start_w + (total - start_w) / (k - p)
+            e = int(np.searchsorted(cum, tgt))
+            # Midpoint rule: include the boundary node in this chunk when
+            # more than half its weight falls before the target.
+            if e < n and cum[e] - 0.5 * w_o[e] <= tgt:
+                e += 1
+            end = min(max(e, start + 1), n - (k - 1 - p))
+        labels[order[start:end]] = p
+        start_w = float(cum[end - 1])
+        start = end
     return labels
 
 
@@ -635,26 +691,60 @@ def _polish_vec(
     np.add.at(part_w, labels, node_w)
     fm = n <= _FM_LIMIT
     n_passes = 2 if fm else 1
+    ar = np.arange(n)
+    indptr = W.indptr
     for _ in range(n_passes):
+        # One dense conn table per pass, maintained incrementally per move
+        # (a move only changes its neighbours' rows) — the per-move spgemm
+        # rebuild this replaces was the small-graph polish bottleneck.
+        # ``masked`` mirrors it with own-column AND per-(node, part)
+        # capacity masking applied, so the argmax directly yields each
+        # node's best *fitting adjacent* destination (the conn-table pair
+        # semantics): a node whose strongest part is full still offers
+        # its best feasible move.  A move only changes two part weights,
+        # so the mask is maintained column-wise, O(n) per move.
+        conn = (W @ _one_hot(labels, k)).toarray()
+        fits = part_w[None, :] + node_w[:, None] <= max_w
+        masked = np.where(fits & (conn > 0), conn, -np.inf)
+        masked[ar, labels] = -np.inf
         locked = np.zeros(n, dtype=bool)
         cur_cut = 0.0                      # tracked as a delta from start
         best_cut, best_labels = 0.0, labels.copy()
         improved = False
+
+        def refresh_col(col):
+            feas = (part_w[col] + node_w <= max_w) & (conn[:, col] > 0)
+            feas &= labels != col
+            masked[:, col] = np.where(feas, conn[:, col], -np.inf)
+
         for _ in range(min(max_moves, n) if fm else max_moves):
-            cu, cp, gain, own, _internal = _conn_table(W, labels, k)
-            elig = ((~own) & (~locked[cu])
-                    & (part_w[cp] + node_w[cu] <= max_w)
-                    & (part_w[labels[cu]] - node_w[cu] >= min_w))
+            best_p = masked.argmax(axis=1)
+            best_v = masked[ar, best_p]
+            own = conn[ar, labels]
+            gain = best_v - own
+            # best_v > -inf (== adjacent, fitting, not own): hill-climb
+            # moves may be negative-gain but never to a part the node has
+            # no edge to, and never into a part that cannot take it.
+            elig = ((~locked) & np.isfinite(best_v)
+                    & (part_w[labels] - node_w >= min_w))
             if not fm:
                 elig &= gain > 1e-12
             if not elig.any():
                 break
-            i = np.flatnonzero(elig)[np.argmax(gain[elig])]
-            u, d, g = int(cu[i]), int(cp[i]), float(gain[i])
-            part_w[labels[u]] -= node_w[u]
+            cand = np.flatnonzero(elig)
+            u = int(cand[np.argmax(gain[cand])])
+            d, g = int(best_p[u]), float(gain[u])
+            old = labels[u]
+            part_w[old] -= node_w[u]
             part_w[d] += node_w[u]
             labels[u] = d
             locked[u] = True
+            nb = W.indices[indptr[u]: indptr[u + 1]]
+            wt = W.data[indptr[u]: indptr[u + 1]]
+            np.subtract.at(conn, (nb, np.broadcast_to(old, len(nb))), wt)
+            np.add.at(conn, (nb, np.broadcast_to(d, len(nb))), wt)
+            refresh_col(old)               # u left: may open + conn changed
+            refresh_col(d)                 # u arrived: may close + changed
             cur_cut -= g                   # moving u changes the cut by -g
             if cur_cut < best_cut - 1e-12:
                 best_cut, best_labels = cur_cut, labels.copy()
@@ -667,6 +757,107 @@ def _polish_vec(
     return labels
 
 
+_DENSE_ROUNDS_LIMIT = 8_000_000   # dense (n, k) conn table cap for refine
+
+
+def _refine_dense_rounds(
+    W: sp.csr_matrix,
+    node_w: np.ndarray,
+    labels: np.ndarray,
+    k: int,
+    max_w: float,
+    min_w: float,
+    passes: int,
+    seed_touched: np.ndarray | None = None,
+) -> np.ndarray:
+    """Batched FM rounds over a dense (n, k) conn table, built ONCE.
+
+    The spgemm path (:func:`_refine_vec`'s default) rebuilds the whole
+    ``W @ one_hot`` gain table every pass — for the many-small-blocks
+    regime (k ≳ 300, parts of a handful of nodes, near-dense coarse
+    graphs) that rebuild dominates partition wall-clock.  Here the table
+    is materialized once and each round only (a) takes a row-wise argmax,
+    (b) applies the capacity-limited batched moves, and (c) *incrementally*
+    updates the rows of the moved nodes' neighbours — O(moved-degree) per
+    round instead of O(E).  Bounded by ``_DENSE_ROUNDS_LIMIT`` entries so
+    corpus-scale fine levels fall back to the spgemm path.
+    """
+    n = W.shape[0]
+    W_sum = float(W.sum())
+    labels = labels.copy()
+    # float32 end to end: the table is a gain heuristic, not the cut
+    # report, and an f32 spgemm + toarray halves the build's memory
+    # traffic (the finest-level table is the big one).
+    W32 = sp.csr_matrix((W.data.astype(np.float32), W.indices, W.indptr),
+                        shape=W.shape)
+    oh32 = sp.csr_matrix(
+        (np.ones(n, dtype=np.float32), labels,
+         np.arange(n + 1, dtype=np.int64)), shape=(n, k))
+    flat = np.ascontiguousarray((W32 @ oh32).toarray()).ravel()
+    conn = flat.reshape(n, k)
+    part_w = np.zeros(k)
+    np.add.at(part_w, labels, node_w)
+    ar = np.arange(n)
+    indptr = W.indptr
+    best_cut, best_labels = np.inf, labels
+    best_p = np.zeros(n, dtype=np.int64)
+    gain = np.zeros(n)
+    # ``seed_touched`` restricts the first sweep to a neighbourhood (the
+    # incremental-replan delta); moves expand it round by round, so far
+    # regions stay untouched and the refine cost scales with the change.
+    touched = ar if seed_touched is None else seed_touched
+    stale = 0
+    for _ in range(passes + 1):            # +1: last round just scores
+        own = conn[ar, labels].astype(np.float64)
+        cut = (W_sum - float(own.sum())) / 2.0
+        if cut < best_cut * (1.0 - 1e-3) - 1e-12:
+            best_cut, best_labels, stale = cut, labels.copy(), 0
+        elif cut < best_cut - 1e-12:      # tiny gain: keep it but wind down
+            best_cut, best_labels = cut, labels.copy()
+            stale += 1
+        else:
+            stale += 1
+        if stale >= 2:
+            break
+        # Batched rounds: only rows the last round's moves touched can have
+        # a new best destination, so the argmax sweep shrinks from O(nk) to
+        # O(touched·k) after the first round — capacity eligibility is
+        # re-checked against current part weights for every row below.
+        if len(touched):
+            t_lab = labels[touched]
+            ownt = conn[touched, t_lab].copy()
+            conn[touched, t_lab] = -np.inf
+            best_p[touched] = conn[touched].argmax(axis=1)
+            conn[touched, t_lab] = ownt
+            gain[touched] = (conn[touched, best_p[touched]].astype(np.float64)
+                             - ownt.astype(np.float64))
+        elig = ((gain > 1e-6)
+                & (part_w[best_p] + node_w <= max_w)
+                & (part_w[labels] - node_w >= min_w))
+        if not elig.any():
+            break
+        u_m = np.flatnonzero(elig)
+        d_m, g_m = best_p[u_m], gain[u_m]
+        keep_m = (_budget_prefix(d_m, g_m, node_w[u_m], max_w - part_w)
+                  & _budget_prefix(labels[u_m], g_m, node_w[u_m],
+                                   part_w - min_w))
+        u_m, d_m = u_m[keep_m], d_m[keep_m]
+        if len(u_m) == 0:
+            break
+        old = labels[u_m]
+        np.add.at(part_w, old, -node_w[u_m])
+        np.add.at(part_w, d_m, node_w[u_m])
+        labels[u_m] = d_m
+        # Incremental table update: moving u only changes its neighbours'
+        # connection to u's old and new parts (flat 1-D scatter-adds).
+        nb, wt32 = _adjacency(W32, u_m)
+        cnt = indptr[u_m + 1] - indptr[u_m]
+        np.subtract.at(flat, nb * k + np.repeat(old, cnt), wt32)
+        np.add.at(flat, nb * k + np.repeat(d_m, cnt), wt32)
+        touched = np.unique(np.concatenate((nb, u_m)))
+    return best_labels
+
+
 def _refine_vec(
     W: sp.csr_matrix,
     node_w: np.ndarray,
@@ -676,15 +867,21 @@ def _refine_vec(
     passes: int = 8,
     max_w: float | None = None,
     polish: bool = True,
+    seed_touched: np.ndarray | None = None,
 ) -> np.ndarray:
     """Batched FM-style refinement: all positive-gain boundary moves at once.
 
-    Per pass: per-(node, adjacent-part) connection weights via one
-    CSR-segment reduction over boundary-incident edges, best move per node
-    by segment argmax, then capacity-limited batched application
-    (:func:`_budget_prefix` on both the receiving and the losing side, so a
-    balanced labeling stays balanced).  Greedy simultaneous moves can
-    overshoot, so the best labeling seen is tracked and returned.
+    Two table strategies share the same move policy (best destination per
+    node, :func:`_budget_prefix` capacity limits on both the receiving and
+    the losing side, best labeling seen wins):
+
+    * **dense rounds** (``k >= 32`` and ``n*k`` under
+      ``_DENSE_ROUNDS_LIMIT``): one dense conn table built once, then
+      incrementally maintained across rounds — the many-small-blocks fast
+      path (:func:`_refine_dense_rounds`);
+    * **spgemm passes** (everything else): per pass one
+      ``W @ one_hot(labels)`` CSR-segment reduction rebuilds the
+      per-(node, adjacent-part) table — memory stays O(E) at any k.
     """
     n = W.shape[0]
     if k <= 1 or W.nnz == 0:
@@ -694,6 +891,120 @@ def _refine_vec(
     if max_w is None:
         max_w = total / k * (1.0 + tol)
     min_w = min(total / k * (1.0 - tol), max_w)
+    if (k >= 32 or seed_touched is not None) \
+            and n * k <= _DENSE_ROUNDS_LIMIT:
+        best_labels = _refine_dense_rounds(W, node_w, labels, k,
+                                           max_w, min_w, passes,
+                                           seed_touched=seed_touched)
+    elif seed_touched is not None:
+        # Above the dense-table cap the delta restriction must survive —
+        # a full-graph spgemm pass would silently turn the incremental
+        # replan back into O(E) work per pass at exactly corpus scale.
+        best_labels = _refine_spgemm_rows(W, node_w, labels, k,
+                                          max_w, min_w, passes,
+                                          seed_touched)
+    else:
+        best_labels = _refine_spgemm(W, node_w, labels, k, W_sum,
+                                     max_w, min_w, passes)
+    # FM polish pays one full gain-table rebuild per move — affordable only
+    # while node AND edge counts are small (coarse star-contracted graphs
+    # can be near-dense, so n alone is not enough), and with a move budget
+    # that shrinks as the edge list grows.
+    if polish and n <= _FM_LIMIT and W.nnz <= 12_000:
+        moves = min(n, max(64, 1_500_000 // max(W.nnz, 1)))
+        best_labels = _polish_vec(W, node_w, best_labels, k, max_w, min_w,
+                                  max_moves=moves)
+    return best_labels
+
+
+def _refine_spgemm_rows(
+    W: sp.csr_matrix,
+    node_w: np.ndarray,
+    labels: np.ndarray,
+    k: int,
+    max_w: float,
+    min_w: float,
+    passes: int,
+    seed_touched: np.ndarray,
+) -> np.ndarray:
+    """Row-restricted spgemm refinement for delta-seeded refines above the
+    dense-table memory cap: each pass builds the gain table for the active
+    rows only (``W[rows] @ one_hot``), applies the capacity-limited
+    positive-gain batched moves, and the movers' neighbourhood becomes the
+    next pass's active set — per-pass cost tracks the delta, not E.
+    Simultaneous moves against one frozen table can overshoot (two
+    neighbours both leave their shared part), so the exact cut delta is
+    maintained incrementally from the movers' adjacency and the best
+    labeling seen is returned — same rollback contract as the siblings,
+    without any full-graph scoring pass.
+    """
+    labels = labels.copy()
+    part_w = np.zeros(k)
+    np.add.at(part_w, labels, node_w)
+    active = np.asarray(seed_touched, dtype=np.int64)
+    is_mover = np.zeros(W.shape[0], dtype=bool)
+    cut_delta = 0.0
+    best_delta, best_labels = 0.0, labels.copy()
+    for _ in range(passes):
+        if len(active) == 0:
+            break
+        conn = W[active] @ _one_hot(labels, k)      # (m, k) CSR
+        cl = np.repeat(np.arange(len(active)), np.diff(conn.indptr))
+        cp = conn.indices.astype(np.int64)
+        sums = conn.data
+        cu = active[cl]
+        own = cp == labels[cu]
+        internal = np.zeros(len(active))
+        internal[cl[own]] = sums[own]
+        gain = sums - internal[cl]
+        elig = ((~own) & (gain > 1e-12)
+                & (part_w[cp] + node_w[cu] <= max_w)
+                & (part_w[labels[cu]] - node_w[cu] >= min_w))
+        if not elig.any():
+            break
+        g_e, u_e, d_e = gain[elig], cu[elig], cp[elig]
+        o2 = np.lexsort((g_e, u_e))
+        last = np.flatnonzero(
+            np.concatenate((u_e[o2][1:] != u_e[o2][:-1], [True])))
+        mv = o2[last]
+        u_m, d_m, g_m = u_e[mv], d_e[mv], g_e[mv]
+        keep_m = (_budget_prefix(d_m, g_m, node_w[u_m], max_w - part_w)
+                  & _budget_prefix(labels[u_m], g_m, node_w[u_m],
+                                   part_w - min_w))
+        u_m, d_m = u_m[keep_m], d_m[keep_m]
+        if len(u_m) == 0:
+            break
+        nb, wt = _adjacency(W, u_m)
+        cnt = W.indptr[u_m + 1] - W.indptr[u_m]
+        src = np.repeat(u_m, cnt)
+        cross0 = labels[src] != labels[nb]
+        np.add.at(part_w, labels[u_m], -node_w[u_m])
+        np.add.at(part_w, d_m, node_w[u_m])
+        labels[u_m] = d_m
+        cross1 = labels[src] != labels[nb]
+        # Mover-mover edges appear in both endpoints' gathers: halve them.
+        is_mover[u_m] = True
+        half = np.where(is_mover[nb], 0.5, 1.0)
+        is_mover[u_m] = False
+        cut_delta += float((wt * half * (cross1.astype(np.float64)
+                                         - cross0)).sum())
+        if cut_delta < best_delta - 1e-12:
+            best_delta, best_labels = cut_delta, labels.copy()
+        active = np.unique(np.concatenate((u_m, nb)))
+    return best_labels
+
+
+def _refine_spgemm(
+    W: sp.csr_matrix,
+    node_w: np.ndarray,
+    labels: np.ndarray,
+    k: int,
+    W_sum: float,
+    max_w: float,
+    min_w: float,
+    passes: int,
+) -> np.ndarray:
+    """The O(E)-memory refinement table path (see :func:`_refine_vec`)."""
     labels = labels.copy()
     part_w = np.zeros(k)
     np.add.at(part_w, labels, node_w)
@@ -718,7 +1029,8 @@ def _refine_vec(
             break
         g_e, u_e, d_e = gain[elig], cu[elig], cp[elig]
         o2 = np.lexsort((g_e, u_e))
-        last = np.flatnonzero(np.r_[u_e[o2][1:] != u_e[o2][:-1], True])
+        last = np.flatnonzero(
+            np.concatenate((u_e[o2][1:] != u_e[o2][:-1], [True])))
         mv = o2[last]                      # best destination per node
         u_m, d_m, g_m = u_e[mv], d_e[mv], g_e[mv]
         keep_m = (_budget_prefix(d_m, g_m, node_w[u_m], max_w - part_w)
@@ -730,14 +1042,6 @@ def _refine_vec(
         np.add.at(part_w, labels[u_m], -node_w[u_m])
         np.add.at(part_w, d_m, node_w[u_m])
         labels[u_m] = d_m
-    # FM polish pays one full gain-table rebuild per move — affordable only
-    # while node AND edge counts are small (coarse star-contracted graphs
-    # can be near-dense, so n alone is not enough), and with a move budget
-    # that shrinks as the edge list grows.
-    if polish and n <= _FM_LIMIT and W.nnz <= 12_000:
-        moves = min(n, max(64, 1_500_000 // max(W.nnz, 1)))
-        best_labels = _polish_vec(W, node_w, best_labels, k, max_w, min_w,
-                                  max_moves=moves)
     return best_labels
 
 
@@ -746,22 +1050,265 @@ def _rebalance_vec(W: sp.csr_matrix, labels: np.ndarray, k: int,
     """Strict balance: every part ends with at most ``cap`` (unit-weight)
     members.  Evicts the lowest-internal-connectivity members of oversized
     parts into under-capacity slots in one batched round (feasible because
-    ``k * cap >= n``)."""
-    n = len(labels)
+    ``k * cap >= n``).  Internal connectivity is gathered for the
+    oversized parts' members only — no full gain-table spgemm."""
     counts = np.bincount(labels, minlength=k)
     excess = counts - cap
     if not (excess > 0).any():
         return labels
     labels = labels.copy()
-    internal = _conn_table(W, labels, k)[4]
-    o = np.lexsort((internal, labels))     # per part, weakest members first
-    ls = labels[o]
-    starts = np.flatnonzero(np.r_[True, ls[1:] != ls[:-1]])
-    rank = np.arange(n) - np.repeat(starts, np.diff(np.r_[starts, n]))
-    evict = o[rank < np.maximum(excess, 0)[ls]]
+    members = np.flatnonzero((excess > 0)[labels])
+    nb, wt = _adjacency(W, members)
+    cnt = W.indptr[members + 1] - W.indptr[members]
+    seg = np.repeat(np.arange(len(members)), cnt)
+    lm = labels[members]
+    same = labels[nb] == np.repeat(lm, cnt)
+    internal = np.zeros(len(members))
+    np.add.at(internal, seg[same], wt[same])
+    o = np.lexsort((internal, lm))         # per part, weakest members first
+    ms, ls = members[o], lm[o]
+    starts = np.flatnonzero(np.concatenate(([True], ls[1:] != ls[:-1])))
+    rank = np.arange(len(ms)) - np.repeat(
+        starts, np.diff(np.concatenate((starts, [len(ms)]))))
+    evict = ms[rank < excess[ls]]
     slots = np.repeat(np.arange(k), np.clip(cap - counts, 0, None))
     labels[evict] = slots[: len(evict)]
     return labels
+
+
+_PRUNE_DEG = 28           # mean-degree threshold before coarse-graph pruning
+_PRUNE_TARGET = 20        # mean degree a pruned coarse graph is cut down to
+
+
+def _prune_rows(W: sp.csr_matrix, mean_deg: int) -> sp.csr_matrix:
+    """Drop the globally weakest edges down to ``mean_deg`` per node, while
+    protecting every row's heaviest edge (union-symmetrized).
+
+    Star contraction densifies coarse graphs (mean degree grows every
+    level), so refinement and flood growth on them cost as much as the
+    finest level.  METIS truncates coarse adjacency for the same reason:
+    the dropped edges are the weakest similarities, and the finest level
+    still refines against the full graph, so cut quality is repaired
+    below.  A single global weight threshold (one ``np.partition``) beats
+    a per-row sort; the row-max protection keeps weakly-weighted regions
+    connected.  Deterministic (threshold + exact-value comparisons only).
+    """
+    n = W.shape[0]
+    nnz = W.nnz
+    target_nnz = mean_deg * n
+    if nnz <= target_nnz:
+        return W
+    data = W.data
+    thresh = np.partition(data, nnz - target_nnz)[nnz - target_nnz]
+    deg = np.diff(W.indptr)
+    rowmax = np.zeros(n, dtype=data.dtype)
+    nz = deg > 0
+    if nz.any():
+        rowmax[nz] = np.maximum.reduceat(data, W.indptr[:-1][nz])
+    rows = np.repeat(np.arange(n), deg)
+    keep = (data >= thresh) | (data == rowmax[rows])
+    P = sp.csr_matrix((data[keep], (rows[keep], W.indices[keep])),
+                      shape=W.shape)
+    # Union-symmetrize: an edge survives if either endpoint kept it (the
+    # input is symmetric, so elementwise max restores symmetry exactly).
+    return P.maximum(P.T).tocsr()
+
+
+def _coarsen_chain(
+    graphs: list[tuple[sp.csr_matrix, np.ndarray]],
+    maps: list[np.ndarray],
+    rng: np.random.Generator,
+    stop: int,
+    w_cap: float,
+    temperature: float,
+    max_levels: int | None = None,
+) -> None:
+    """Extend the multilevel chain in place down to ``stop`` nodes
+    (at most ``max_levels`` further contractions when given)."""
+    start = len(maps)
+    while graphs[-1][0].shape[0] > stop:
+        if max_levels is not None and len(maps) - start >= max_levels:
+            break
+        Wc0, nw0 = graphs[-1]
+        coarse = _heavy_edge_coarsen(Wc0, nw0, rng, temperature, w_cap)
+        if coarse.max() + 1 >= 0.97 * Wc0.shape[0]:   # coarsening stalled
+            break
+        Wc, nw = _contract(Wc0, nw0, coarse)
+        if Wc.shape[0] and Wc.nnz > _PRUNE_DEG * Wc.shape[0]:
+            Wc = _prune_rows(Wc, _PRUNE_TARGET)
+        graphs.append((Wc, nw))
+        maps.append(coarse)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PartitionHierarchy:
+    """Cached multilevel coarsening state for incremental replans (§2).
+
+    Built once per ``(graph, k)`` by :func:`partition_hierarchy` — with
+    *untempered* (temperature-0) matching, so it is a pure function of
+    ``(W, k, tol, coarsen_to, seed)`` and never depends on which epoch
+    built it.  Besides the contraction chain it caches the build's
+    *refined labels* at every level.  ``partition_graph(..., reuse=h)``
+    keeps every contraction except the last ``top_levels`` frozen and per
+    replan only (1) re-draws the top of the chain with fresh Gumbel noise,
+    (2) projects the cached labels through it, perturbs them
+    (temperature-scaled) and re-runs refinement around what changed: the
+    per-epoch replan of the stochastic re-partitioning stream skips both
+    the fine-level coarsening and the from-scratch initial partition while
+    staying bit-reproducible per ``(seed, epoch)``.
+    """
+
+    graphs: tuple[tuple[sp.csr_matrix, np.ndarray], ...]  # finest→coarsest
+    maps: tuple[np.ndarray, ...]       # contraction map per level
+    labels: tuple[np.ndarray, ...]     # build's refined labels per level
+    k: int
+    tol: float
+    coarsen_to: int
+    seed: int
+    top_levels: int = 1                # trailing levels a reuse re-draws
+
+    @property
+    def n_nodes(self) -> int:
+        return self.graphs[0][0].shape[0]
+
+    @property
+    def levels(self) -> int:
+        return len(self.maps)
+
+    @property
+    def frozen_levels(self) -> int:
+        """Index of the deepest level whose contraction is never re-drawn."""
+        return max(len(self.maps) - self.top_levels, 0)
+
+    def ancestors(self, level: int) -> np.ndarray:
+        """Finest-node → level-``level``-node composed contraction map."""
+        anc = np.arange(self.n_nodes, dtype=np.int64)
+        for m in self.maps[:level]:
+            anc = m[anc]
+        return anc
+
+
+class HierarchyCache:
+    """Thread-safe, lazily-built per-``k`` hierarchy store for one graph.
+
+    The streaming pipeline re-partitions with a fixed block count but may
+    be shared across plans with different ``k`` (tests, sweeps); the cache
+    builds each ``PartitionHierarchy`` on first use — safe to call from the
+    background replan thread and the synchronous jump-resume path alike.
+    ``partition_graph`` and :func:`repro.core.metabatch.resynthesize_plan`
+    accept either a cache or a bare hierarchy as ``reuse=``.
+    """
+
+    def __init__(self, W: sp.spmatrix, *, tol: float = 0.1,
+                 coarsen_to: int = 60, seed: int = 0, top_levels: int = 1):
+        self.W = W.tocsr()
+        self.tol = tol
+        self.coarsen_to = coarsen_to
+        self.seed = seed
+        self.top_levels = top_levels
+        self._lock = threading.Lock()
+        self._by_k: dict[int, PartitionHierarchy] = {}
+
+    def get(self, k: int) -> PartitionHierarchy:
+        with self._lock:
+            h = self._by_k.get(k)
+            if h is None:
+                h = partition_hierarchy(
+                    self.W, k, tol=self.tol, coarsen_to=self.coarsen_to,
+                    seed=self.seed, top_levels=self.top_levels)
+                self._by_k[k] = h
+            return h
+
+
+def partition_hierarchy(
+    W: sp.csr_matrix,
+    k: int,
+    *,
+    tol: float = 0.1,
+    coarsen_to: int = 60,
+    seed: int = 0,
+    top_levels: int = 1,
+) -> PartitionHierarchy:
+    """Build the frozen coarsening state ``partition_graph`` can reuse.
+
+    Runs one full untempered partition and captures the chain plus the
+    refined labels at every level.  Pure function of its arguments, so
+    replans that reuse the result stay bit-reproducible per
+    ``(seed, epoch)`` no matter when the hierarchy was built — a
+    jump-resumed stream and an uninterrupted one construct identical
+    state.
+    """
+    capture: dict = {}
+    partition_graph(W, k, tol=tol, coarsen_to=coarsen_to, seed=seed,
+                    temperature=0.0, _capture=capture)
+    graphs = capture.get("graphs") or [(W.tocsr(), np.ones(W.shape[0]))]
+    maps = capture.get("maps") or []
+    lab_by_level = capture.get("labels") or {
+        0: np.zeros(W.shape[0], dtype=np.int64)}
+    labels = tuple(lab_by_level[lvl] for lvl in range(len(maps) + 1))
+    return PartitionHierarchy(
+        graphs=tuple(graphs), maps=tuple(maps), labels=labels, k=k,
+        tol=tol, coarsen_to=coarsen_to, seed=seed, top_levels=top_levels)
+
+
+def _project_majority(
+    lab: np.ndarray, m: np.ndarray, node_w: np.ndarray, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Labels for the contracted graph: weight-majority vote per coarse
+    node.  Also returns the *impure* mask — coarse nodes whose members
+    disagreed, i.e. the only places the projection changed anything."""
+    nc = int(m.max()) + 1
+    total = np.bincount(m, weights=node_w, minlength=nc)
+    if nc * k <= _DENSE_ROUNDS_LIMIT:
+        votes = np.bincount(m * k + lab, weights=node_w,
+                            minlength=nc * k).reshape(nc, k)
+        out = votes.argmax(axis=1)
+        win = votes[np.arange(nc), out]
+    else:
+        # Sort-based fallback for huge (nc, k): heaviest (coarse, label)
+        # per coarse node wins.
+        key = m * k + lab
+        o = np.argsort(key, kind="stable")
+        ks, ws = key[o], node_w[o]
+        starts = np.flatnonzero(np.concatenate(([True], ks[1:] != ks[:-1])))
+        sums = np.add.reduceat(ws, starts)
+        uk = ks[starts]
+        uc, ul = uk // k, uk % k
+        o2 = np.lexsort((sums, uc))
+        last = np.flatnonzero(
+            np.concatenate((uc[o2][1:] != uc[o2][:-1], [True])))
+        out = np.zeros(nc, dtype=np.int64)
+        out[uc[o2][last]] = ul[o2][last]
+        win = np.zeros(nc)
+        win[uc[o2][last]] = sums[o2][last]
+    return out, win < total - 1e-12
+
+
+def _perturb_labels(
+    W: sp.csr_matrix, labels: np.ndarray, k: int,
+    rng: np.random.Generator, frac: float,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Move a random ``frac`` of nodes to a random neighbour's part.
+
+    The incremental-replan entropy source: a warm-started replan would
+    otherwise only vary through the re-drawn top-level contraction, and a
+    stalled re-coarsening would collapse every epoch onto the same
+    partition.  Refinement cleans up what the perturbation breaks; the
+    strict rebalance keeps the balance cap.  Deterministic per rng.
+    Returns ``(labels, picked)``.
+    """
+    n = len(labels)
+    m = int(frac * n)
+    deg = np.diff(W.indptr)
+    cand = np.flatnonzero(deg > 0)
+    if m == 0 or len(cand) == 0:
+        return labels, np.empty(0, dtype=np.int64)
+    pick = rng.choice(cand, size=min(m, len(cand)), replace=False)
+    off = (rng.random(len(pick)) * deg[pick]).astype(np.int64)
+    nb = W.indices[W.indptr[pick] + off]
+    labels = labels.copy()
+    labels[pick] = labels[nb]
+    return labels, pick
 
 
 def partition_graph(
@@ -774,6 +1321,8 @@ def partition_graph(
     temperature: float = 0.0,
     refine_passes: int = 8,
     restarts: int | None = None,
+    reuse: "PartitionHierarchy | HierarchyCache | None" = None,
+    _capture: dict | None = None,
 ) -> PartitionResult:
     """Vectorized multilevel balanced k-way min-cut partition (the default).
 
@@ -788,33 +1337,80 @@ def partition_graph(
     * ``temperature > 0`` Gumbel-perturbs the matching weights, giving a
       *stochastic* family of partitions over seeds — the re-partitioning
       stream's entropy source (identical seeds stay bit-reproducible);
+    * ``reuse`` (a :class:`PartitionHierarchy` or :class:`HierarchyCache`)
+      switches to the incremental-replan fast path: the frozen fine-level
+      coarsening is skipped, only the chain's top ``top_levels`` are
+      re-drawn (fresh Gumbel noise), the cached labels are projected
+      through them, perturbed (temperature-scaled) and refinement re-runs
+      around what changed;
     * the final labeling is strictly balanced: every part holds at most
       ``max(floor(n/k·(1+tol)), ceil(n/k))`` nodes.
     """
     n0 = W.shape[0]
     if k <= 1:
         labels = np.zeros(n0, dtype=np.int64)
+        if _capture is not None:
+            _capture.update(graphs=[(W.tocsr(), np.ones(n0))], maps=[],
+                            labels={0: labels.copy()})
         return PartitionResult(labels, 1, 0.0, np.array([n0]))
     if n0 <= k:
         labels = np.arange(n0, dtype=np.int64)
+        if _capture is not None:
+            _capture.update(graphs=[(W.tocsr(), np.ones(n0))], maps=[],
+                            labels={0: labels.copy()})
         return PartitionResult(labels, k, edge_cut(W, labels),
                                np.bincount(labels, minlength=k))
     rng = np.random.default_rng(seed)
-    graphs: list[tuple[sp.csr_matrix, np.ndarray]] = [(W.tocsr(),
-                                                       np.ones(n0))]
-    maps: list[np.ndarray] = []
     stop = max(2 * k, _COARSE_STOP)
     # METIS-style vertex-weight cap: coarse nodes stay small relative to
     # the balance target, so the coarsest partition can still be balanced
     # (and the final strict rebalance stays a trimming pass, not a rewrite).
     w_cap = n0 / k / 4.0
-    while graphs[-1][0].shape[0] > stop:
-        Wc0, nw0 = graphs[-1]
-        coarse = _heavy_edge_coarsen(Wc0, nw0, rng, temperature, w_cap)
-        if coarse.max() + 1 >= 0.97 * Wc0.shape[0]:   # coarsening stalled
-            break
-        graphs.append(_contract(Wc0, nw0, coarse))
-        maps.append(coarse)
+    target = n0 / k
+    cap = max(int(np.floor(target * (1.0 + tol))), int(np.ceil(target)))
+    if reuse is not None:
+        # The warm incremental path engages only where it pays: below
+        # ``_POLISH_LIMIT`` nodes a full partition is cheaper than the
+        # delta bookkeeping and the lavish small-graph search (restarts +
+        # FM polish) wins on cut — so small graphs fall through and the
+        # replan is simply the fresh computation (bit-identical to
+        # ``reuse=None``, so every reuse invariant holds trivially).  A
+        # HierarchyCache is not even resolved then (``get`` would *build*
+        # a hierarchy nobody uses); an already-built PartitionHierarchy is
+        # still validated so misuse surfaces regardless of graph size.
+        if isinstance(reuse, HierarchyCache):
+            if n0 <= _POLISH_LIMIT:
+                reuse = None
+            else:
+                reuse = reuse.get(k)
+    if reuse is not None:
+        if reuse.n_nodes != n0 or reuse.graphs[0][0].nnz != W.nnz:
+            raise ValueError(
+                f"reuse hierarchy was built for a different graph "
+                f"(n={reuse.n_nodes}, nnz={reuse.graphs[0][0].nnz}; "
+                f"got n={n0}, nnz={W.nnz})")
+        if reuse.k != k:
+            raise ValueError(
+                f"reuse hierarchy was built for k={reuse.k}, got k={k}; "
+                f"build one per block count (HierarchyCache does this)")
+        if reuse.tol != tol or reuse.coarsen_to != coarsen_to:
+            raise ValueError(
+                f"reuse hierarchy was built under tol={reuse.tol}, "
+                f"coarsen_to={reuse.coarsen_to} but this call uses "
+                f"tol={tol}, coarsen_to={coarsen_to}; mixing configs "
+                f"would silently break the pure-function contract")
+        if n0 > _POLISH_LIMIT:
+            return _replan_incremental(W, k, reuse, rng, stop, w_cap,
+                                       temperature, tol, cap)
+    graphs: list[tuple[sp.csr_matrix, np.ndarray]] = [(W.tocsr(),
+                                                       np.ones(n0))]
+    maps: list[np.ndarray] = []
+    # Coarsening — the only phase that draws the Gumbel matching noise.
+    _coarsen_chain(graphs, maps, rng, stop, w_cap, temperature)
+    lab_rec: dict[int, np.ndarray] = {}
+    if _capture is not None:
+        _capture.update(graphs=list(graphs), maps=list(maps),
+                        labels=lab_rec)
     Wc, nw = graphs[-1]
     # The lavish tier — sequential growth, many restarts, per-restart FM
     # polish — only where the coarsest graph is genuinely tiny; its cost
@@ -825,15 +1421,8 @@ def partition_graph(
         # they are nearly free and the FM polish can exploit a better
         # start; above that, refinement decides quality, not the start.
         restarts = 8 if small_coarsest else 2
-    # Dense flood growth allocates an (n, k) frontier matrix — if
-    # coarsening stalled and the "coarsest" graph is still huge, skip the
-    # grown candidates and rely on the RCM chop + refinement instead of
-    # risking an O(nk) memory blowup.
-    grow_ok = small_coarsest or Wc.shape[0] * k <= 20_000_000
     best: tuple[float, np.ndarray] | None = None
     for r in range(-1, max(1, restarts)):
-        if r >= 0 and not grow_ok:
-            break
         if r < 0:
             # Extra candidate: chop the reverse-Cuthill–McKee order into k
             # weight-balanced chunks — a layered start qualitatively unlike
@@ -858,6 +1447,8 @@ def partition_graph(
             best = (c, lab)
     labels = best[1] if small_coarsest else _refine_vec(
         Wc, nw, best[1], k, tol, passes=4)
+    if _capture is not None:
+        lab_rec[len(maps)] = labels.copy()
     for level in range(len(maps) - 1, -1, -1):
         labels = labels[maps[level]]
         Wl, nwl = graphs[level]
@@ -872,13 +1463,93 @@ def partition_graph(
             Wl, nwl, labels, k, tol,
             passes=refine_passes if nl <= _FM_LIMIT
             else min(refine_passes, 5 if nl <= _POLISH_LIMIT else 4))
+        if _capture is not None:
+            lab_rec[level] = labels.copy()
     Wf, nwf = graphs[0]
-    target = n0 / k
-    cap = max(int(np.floor(target * (1.0 + tol))), int(np.ceil(target)))
     labels = _rebalance_vec(Wf, labels, k, cap)
     labels = _refine_vec(Wf, nwf, labels, k, tol,
                          passes=refine_passes if n0 <= _POLISH_LIMIT else 5,
                          max_w=float(cap))
+    if _capture is not None:
+        lab_rec[0] = labels.copy()
+    sizes = np.bincount(labels, minlength=k)
+    return PartitionResult(labels, k, edge_cut(W, labels), sizes)
+
+
+def _replan_incremental(
+    W: sp.csr_matrix,
+    k: int,
+    h: PartitionHierarchy,
+    rng: np.random.Generator,
+    stop: int,
+    w_cap: float,
+    temperature: float,
+    tol: float,
+    cap: int,
+) -> PartitionResult:
+    """The hierarchy-reuse replan (see :func:`partition_graph`).
+
+    Re-draws only the top ``h.top_levels`` contractions with fresh Gumbel
+    noise, projects the cached level labels through them
+    (weight-majority), perturbs a temperature-scaled fraction of coarse
+    nodes, refines the coarsest graph, and pushes the *delta* against the
+    cached labeling down to the finest level — where refinement runs
+    seeded with only the changed neighbourhood.  Work scales with how much
+    the replan actually changed, not with n.
+    """
+    # Re-draw only top levels whose contraction was *gentle* (≤2× node
+    # reduction — the w_cap-bound many-small-blocks regime): the cached
+    # labels survive a weight-majority roundtrip through such a level.
+    # Deep star contractions (small k leaves w_cap loose) would relabel
+    # half the graph in projection, so those levels stay frozen and the
+    # per-epoch noise comes from the perturbation alone.
+    L = len(h.maps)
+    dropped = 0
+    while dropped < min(h.top_levels, L):
+        hi = h.graphs[L - dropped - 1][0].shape[0]
+        lo = h.graphs[L - dropped][0].shape[0]
+        if hi > 2.0 * max(lo, 1):
+            break
+        dropped += 1
+    F = L - dropped
+    graphs = list(h.graphs[: F + 1])
+    maps = list(h.maps[:F])
+    base_levels = len(maps)
+    _coarsen_chain(graphs, maps, rng, stop, w_cap, temperature,
+                   max_levels=dropped)
+    lab = h.labels[F]
+    for lvl in range(base_levels, len(maps)):
+        lab, _ = _project_majority(lab, maps[lvl], graphs[lvl][1], k)
+    Wc, _nw = graphs[-1]
+    # Perturbation keeps the replan stochastic even when the top-level
+    # re-coarsening stalls (w_cap-bound regimes); temperature stays the
+    # single entropy knob.  No coarse-level re-refinement: on the pruned
+    # near-dense coarse graphs it re-optimizes *globally* (the cached
+    # labeling is not a local optimum of the pruned view), relabeling most
+    # of the graph and defeating the incremental delta — the delta-seeded
+    # finest refine below repairs the perturbation against the true graph
+    # instead.
+    frac = min(0.25, 0.04 + 0.08 * temperature)
+    lab, _picked = _perturb_labels(Wc, lab, k, rng, frac)
+    for lvl in range(len(maps) - 1, base_levels - 1, -1):
+        lab = lab[maps[lvl]]
+    # ``lab`` now lives on level F: apply the delta to the cached finest
+    # labeling, so unchanged regions keep their fully-refined assignment.
+    changed = lab != h.labels[F]
+    anc = h.ancestors(F)
+    labels = h.labels[0].copy()
+    moved = changed[anc]
+    labels[moved] = lab[anc[moved]]
+    Wf, nwf = h.graphs[0]
+    pre = labels
+    labels = _rebalance_vec(Wf, labels, k, cap)
+    # Seed the refine with exactly what changed (perturbed chunks +
+    # rebalance evictions); moves pull adjacent rows in on their own, so
+    # no up-front neighbourhood expansion — the refine cost tracks the
+    # delta, not n.
+    touched = np.flatnonzero(moved | (labels != pre))
+    labels = _refine_vec(Wf, nwf, labels, k, tol, passes=2,
+                         max_w=float(cap), seed_touched=touched)
     sizes = np.bincount(labels, minlength=k)
     return PartitionResult(labels, k, edge_cut(W, labels), sizes)
 

@@ -33,6 +33,7 @@ import numpy as np
 from repro.core.affinity import AffinityGraph
 from repro.core.metabatch import (MetaBatchPlan, NeighborSampler,
                                   epoch_plan_seed, resynthesize_plan)
+from repro.core.partition import HierarchyCache
 from repro.core.partition import partition_graph as partition_graph_default
 from repro.data.synthetic_timit import SyntheticCorpus
 from repro.introspect import accepts_kwarg
@@ -132,6 +133,13 @@ class MetaBatchStream:
     the new plan, no device sync, no shape change (the pad is pinned with
     ``pad_headroom`` so jitted shapes survive every swap; a plan that would
     not fit is rejected with a warning and the previous plan is kept).
+    With ``repartition.reuse_hierarchy`` (the default) the partitioner's
+    coarsening hierarchy is cached across epochs (``HierarchyCache``) and
+    each replan runs incrementally — top-level Gumbel redraw + perturbed
+    cached labels + delta-seeded refinement — instead of from scratch.
+    A replan that raises warns with the exception type and text and keeps
+    the previous plan; a later successful swap re-arms the retry for
+    previously failed targets.
 
     Determinism: the plan for epoch ``e`` is a pure function of
     ``(graph, config, repartition.seed, e)`` and the per-epoch batch order
@@ -144,7 +152,8 @@ class MetaBatchStream:
                  with_neighbor: bool = True, seed: int = 0,
                  repartition=None, partitioner=None, tol: float = 0.15,
                  coarsen_to: int = 60, shuffle_blocks: bool = True,
-                 pad_headroom: float = 1.25, record_indices: bool = False):
+                 pad_headroom: float = 1.25, record_indices: bool = False,
+                 hierarchy_cache: HierarchyCache | None = None):
         self.corpus = corpus
         self.graph = graph
         self.plan = plan
@@ -162,6 +171,7 @@ class MetaBatchStream:
         every = getattr(repartition, "every_n_epochs", 0) if repartition \
             else 0
         self.every = int(every)
+        self._hierarchy: HierarchyCache | None = None
         if self.every > 0:
             # Fail at construction, not as a once-per-epoch warning from
             # the background thread: an incapable partitioner would leave
@@ -174,6 +184,24 @@ class MetaBatchStream:
                     f"configured partitioner does not accept temperature=; "
                     f"use the vectorized 'multilevel' partitioner or set "
                     f"matching_temperature=0")
+            if getattr(repartition, "reuse_hierarchy", True):
+                # Hierarchy-cached incremental replans (the default).  The
+                # cache is a pure function of (graph, partition config,
+                # repartition seed) — never of the epoch — so plans stay
+                # bit-reproducible per (seed, epoch) regardless of when it
+                # is first (lazily) built.  A partitioner without reuse=
+                # support degrades to from-scratch replans with a warning,
+                # not an error: reuse is an optimization, not semantics.
+                if accepts_kwarg(partitioner or partition_graph_default,
+                                 "reuse"):
+                    self._hierarchy = hierarchy_cache or HierarchyCache(
+                        graph.W, tol=tol, coarsen_to=coarsen_to,
+                        seed=int(getattr(repartition, "seed", 0)))
+                else:
+                    warnings.warn(
+                        "repartition.reuse_hierarchy=True but the "
+                        "configured partitioner does not accept reuse=; "
+                        "replans will run from scratch", stacklevel=2)
         mmax = max(len(m) for m in plan.meta_batches)
         base = 2 * mmax if with_neighbor else mmax
         headroom = pad_headroom if self.every > 0 else 1.0
@@ -195,7 +223,8 @@ class MetaBatchStream:
             epoch=epoch, base_seed=getattr(rep, "seed", 0),
             temperature=getattr(rep, "matching_temperature", 0.0),
             tol=self.tol, shuffle_blocks=self.shuffle_blocks,
-            partitioner=self.partitioner, coarsen_to=self.coarsen_to)
+            partitioner=self.partitioner, coarsen_to=self.coarsen_to,
+            reuse=self._hierarchy)
 
     def _launch(self, target_epoch: int) -> None:
         box: dict = {}
@@ -226,6 +255,11 @@ class MetaBatchStream:
         self.plan = plan
         self._plan_epoch = target
         self.swaps += 1
+        # A successful swap re-arms the retry for previously-failed
+        # targets: a transient failure (OOM on the background thread, a
+        # flaky data mount) must not pin those epochs to the stale plan
+        # forever once the stream has proven healthy again.
+        self._failed.clear()
         return True
 
     def _collect(self, epoch: int) -> None:
@@ -236,9 +270,10 @@ class MetaBatchStream:
         self._pending = None
         t.join()
         if "error" in box:
+            err = box["error"]
             warnings.warn(
-                f"re-partitioning for epoch {epoch} failed "
-                f"({box['error']!r}); keeping the previous plan",
+                f"re-partitioning for epoch {epoch} failed with "
+                f"{type(err).__name__}: {err}; keeping the previous plan",
                 stacklevel=3)
             self._failed.add(epoch)
             return
@@ -272,9 +307,9 @@ class MetaBatchStream:
                     plan = self._synthesize(target)
                 except Exception as err:  # noqa: BLE001 — degrade like bg
                     warnings.warn(
-                        f"re-partitioning for epoch {target} failed "
-                        f"({err!r}); keeping the previous plan",
-                        stacklevel=2)
+                        f"re-partitioning for epoch {target} failed with "
+                        f"{type(err).__name__}: {err}; keeping the "
+                        f"previous plan", stacklevel=2)
                     self._failed.add(target)
                 else:
                     if not self._swap_in(plan, target):
@@ -339,7 +374,8 @@ def make_metabatch_stream_pipeline(corpus, graph, plan, *,
                                    tol: float = 0.15, coarsen_to: int = 60,
                                    shuffle_blocks: bool = True,
                                    pad_headroom: float = 1.25,
-                                   record_indices: bool = False, **_):
+                                   record_indices: bool = False,
+                                   hierarchy_cache=None, **_):
     """The §2 stream as a first-class pipeline: NeighborSampler + meta-batch
     assembly feeding the engine directly, with optional between-epoch
     stochastic re-partitioning (``repartition`` = a ``RepartitionConfig``-
@@ -357,7 +393,7 @@ def make_metabatch_stream_pipeline(corpus, graph, plan, *,
         with_neighbor=with_neighbor, repartition=repartition,
         partitioner=partitioner, tol=tol, coarsen_to=coarsen_to,
         shuffle_blocks=shuffle_blocks, pad_headroom=pad_headroom,
-        record_indices=record_indices)
+        record_indices=record_indices, hierarchy_cache=hierarchy_cache)
 
     def epoch_fn(epoch: int | None = None, n_epochs: int | None = None):
         return stream.epoch(epoch=epoch, n_epochs=n_epochs)

@@ -50,10 +50,47 @@ def test_config_roundtrip_defaults_and_partial_dict():
     ("execution", {"prefetch": -1}),
     ("execution", {"checkpoint_every": 2}),   # requires checkpoint_dir
     ("execution", {"max_staleness": 0}),
+    ("repartition", {"reuse_hierarchy": "yes"}),   # must be a real bool
 ])
 def test_config_validation_rejects(section, bad):
     with pytest.raises(ValueError):
         ExperimentConfig.from_dict({section: bad})
+
+
+def test_repartition_reuse_hierarchy_knob_roundtrips():
+    from repro.api import RepartitionConfig
+    cfg = ExperimentConfig.from_dict({
+        "batch": {"pipeline": "metabatch_stream"},
+        "repartition": {"every_n_epochs": 2, "reuse_hierarchy": False}})
+    assert cfg.repartition == RepartitionConfig(every_n_epochs=2,
+                                                reuse_hierarchy=False)
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+    assert RepartitionConfig().reuse_hierarchy   # incremental by default
+
+
+def test_experiment_builds_shared_hierarchy_cache():
+    """With an active repartition config the Experiment hands the stream a
+    HierarchyCache; with reuse disabled (or no repartition) it does not."""
+    from repro.api import BatchConfig as BC, RepartitionConfig
+    from repro.core.partition import HierarchyCache
+    base = tiny_config(pairwise="ref")
+    cfg = dataclasses.replace(
+        base, batch=dataclasses.replace(base.batch,
+                                        pipeline="metabatch_stream"),
+        repartition=RepartitionConfig(every_n_epochs=1, seed=5))
+    exp = Experiment(cfg).build()
+    cache = exp.pipeline.stream._hierarchy
+    assert isinstance(cache, HierarchyCache)
+    assert cache.seed == 5 and cache.tol == cfg.partition.tol
+    # An injected cache (sweeps over one shared graph) is used as-is.
+    shared = Experiment(cfg, corpus=exp.corpus, eval_data=exp.eval_data,
+                        graph=exp.graph, plan=exp.plan,
+                        hierarchy_cache=cache).build()
+    assert shared.pipeline.stream._hierarchy is cache
+    off = dataclasses.replace(
+        cfg, repartition=RepartitionConfig(every_n_epochs=1,
+                                           reuse_hierarchy=False))
+    assert Experiment(off).build().pipeline.stream._hierarchy is None
 
 
 def test_execution_config_roundtrip_and_defaults():

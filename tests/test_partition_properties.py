@@ -4,7 +4,10 @@ For random graphs, the partition invariants must hold unconditionally
 (every node labeled, strict balance cap, cut arithmetic exact, cut
 invariant under node relabeling), and on the affinity-graph domain the
 vectorized partitioner's edge-cut must stay within 5% of the seed
-per-node-loop implementation on identical seeds.
+per-node-loop implementation on identical seeds.  Hierarchy-reuse
+replans (``partition_graph(..., reuse=h)``) must satisfy the same
+invariants — strict balance cap, determinism per seed, cut within 5% of
+a fresh same-seed partition — on arbitrary random graphs.
 """
 import numpy as np
 import pytest
@@ -14,8 +17,8 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import build_affinity_graph
-from repro.core.partition import (edge_cut, partition_graph,
-                                  partition_graph_loop,
+from repro.core.partition import (HierarchyCache, edge_cut, partition_graph,
+                                  partition_graph_loop, partition_hierarchy,
                                   partition_permutation)
 
 
@@ -107,6 +110,131 @@ def test_partition_is_deterministic_per_seed(n, mult, k, seed):
     a = partition_graph(W, k, tol=0.3, seed=seed)
     b = partition_graph(W, k, tol=0.3, seed=seed)
     np.testing.assert_array_equal(a.labels, b.labels)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(10, 120), mult=st.integers(1, 3),
+       k=st.integers(2, 8), seed=st.integers(0, 8))
+def test_hierarchy_reuse_satisfies_partition_invariants(n, mult, k, seed):
+    """A reuse replan obeys the same contract as a fresh partition: every
+    node labeled, strict balance cap, determinism per seed, and a cut no
+    more than 5% worse than the fresh same-seed partition.  (At these
+    sizes — below the warm-path threshold — reuse falls through to the
+    fresh computation; the warm path itself is covered by the affinity-
+    domain test below on n > 2048 graphs.)"""
+    W = random_sparse_graph(n, mult * n, seed)
+    tol = 0.3
+    h = partition_hierarchy(W, k, tol=tol, seed=seed)
+    res = partition_graph(W, k, tol=tol, seed=seed + 1, temperature=0.5,
+                          reuse=h)
+    again = partition_graph(W, k, tol=tol, seed=seed + 1, temperature=0.5,
+                            reuse=h)
+    np.testing.assert_array_equal(res.labels, again.labels)
+    assert res.labels.shape == (n,)
+    assert res.labels.min() >= 0 and res.labels.max() < k
+    assert res.sizes.sum() == n
+    cap = max(int(np.floor(n / k * (1 + tol))), int(np.ceil(n / k)))
+    assert res.sizes.max() <= cap
+    np.testing.assert_allclose(res.cut, edge_cut(W, res.labels), rtol=1e-9)
+    fresh = partition_graph(W, k, tol=tol, seed=seed + 1, temperature=0.5)
+    assert res.cut <= 1.05 * fresh.cut + 1e-9
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(2100, 2800), k=st.sampled_from([8, 40, 150]),
+       seed=st.integers(0, 5))
+def test_warm_path_reuse_invariants_on_affinity_graphs(n, k, seed):
+    """The *incremental* replan path (n above the warm threshold, so no
+    fall-through) keeps the full contract on the affinity-graph domain:
+    strict balance cap, determinism per seed, exact cut arithmetic, and
+    cut within 5% of the fresh same-seed tempered partition — across both
+    the gentle-top-redraw (large k) and frozen-chain/perturbation-only
+    (small k) fidelity regimes."""
+    X = np.random.default_rng(seed).normal(size=(n, 6))
+    g = build_affinity_graph(X, k=6)
+    tol = 0.2
+    h = partition_hierarchy(g.W, k, tol=tol, seed=seed)
+    res = partition_graph(g.W, k, tol=tol, seed=seed + 1, temperature=0.5,
+                          reuse=h)
+    again = partition_graph(g.W, k, tol=tol, seed=seed + 1,
+                            temperature=0.5, reuse=h)
+    np.testing.assert_array_equal(res.labels, again.labels)
+    assert res.sizes.sum() == n
+    cap = max(int(np.floor(n / k * (1 + tol))), int(np.ceil(n / k)))
+    assert res.sizes.max() <= cap
+    np.testing.assert_allclose(res.cut, edge_cut(g.W, res.labels),
+                               rtol=1e-9)
+    fresh = partition_graph(g.W, k, tol=tol, seed=seed + 1,
+                            temperature=0.5)
+    assert res.cut <= 1.05 * fresh.cut + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 100), k=st.integers(2, 6), seed=st.integers(0, 6))
+def test_hierarchy_is_pure_of_build_time(n, k, seed):
+    """Two independently built hierarchies (same args) drive bit-identical
+    reuse replans — the purity that keeps jump-resume exact."""
+    X = np.random.default_rng(seed).normal(size=(n, 4))
+    g = build_affinity_graph(X, k=4)
+    h1 = partition_hierarchy(g.W, k, tol=0.3, seed=seed)
+    h2 = partition_hierarchy(g.W, k, tol=0.3, seed=seed)
+    a = partition_graph(g.W, k, tol=0.3, seed=seed + 3, temperature=0.5,
+                        reuse=h1)
+    b = partition_graph(g.W, k, tol=0.3, seed=seed + 3, temperature=0.5,
+                        reuse=h2)
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
+def test_reuse_rejects_mismatched_hierarchy():
+    W = random_sparse_graph(60, 180, 0)
+    h = partition_hierarchy(W, 4, tol=0.3, seed=0)
+    with pytest.raises(ValueError, match="k=4"):
+        partition_graph(W, 5, tol=0.3, seed=0, reuse=h)
+    other = random_sparse_graph(61, 180, 1)
+    with pytest.raises(ValueError, match="different graph"):
+        partition_graph(other, 4, tol=0.3, seed=0, reuse=h)
+    with pytest.raises(ValueError, match="tol"):
+        partition_graph(W, 4, tol=0.1, seed=0, reuse=h)
+    # A HierarchyCache transparently builds the right hierarchy per k.
+    cache = HierarchyCache(W, tol=0.3, seed=0)
+    res = partition_graph(W, 5, tol=0.3, seed=0, reuse=cache)
+    assert res.sizes.sum() == 60
+
+
+@pytest.mark.parametrize("k", [2, 313])
+def test_rcm_chop_distributes_remainder(k):
+    """Regression: the RCM chop must not let the last part absorb the
+    remainder when n % k != 0 (unit weights: sizes differ by at most 1)
+    or when node weights vary (every part within one heaviest-node weight
+    of the ideal)."""
+    from repro.core.partition import _rcm_chop
+
+    n = 1291 if k == 313 else 11           # both indivisible by k
+    rng = np.random.default_rng(0)
+    r = rng.integers(0, n, size=4 * n)
+    c = rng.integers(0, n, size=4 * n)
+    keep = r != c
+    r, c = r[keep], c[keep]
+    w = rng.uniform(0.1, 1.0, size=len(r))
+    W = sp.csr_matrix((np.r_[w, w], (np.r_[r, c], np.r_[c, r])),
+                      shape=(n, n))
+    W.sum_duplicates()
+    labels = _rcm_chop(W, np.ones(n), k)
+    sizes = np.bincount(labels, minlength=k)
+    assert sizes.min() >= 1
+    assert sizes.max() - sizes.min() <= 1, \
+        f"unit-weight chop unbalanced: {sizes.min()}..{sizes.max()}"
+    node_w = rng.uniform(1.0, 8.0, size=n)
+    labels = _rcm_chop(W, node_w, k)
+    weights = np.bincount(labels, weights=node_w, minlength=k)
+    ideal = node_w.sum() / k
+    assert np.bincount(labels, minlength=k).min() >= 1
+    # Adaptive boundaries: every chunk lands within half a heaviest-node
+    # weight of the (remaining-weight) ideal — the greedy fixed-target
+    # chop drifted to ~1.4x ideal here.
+    assert weights.max() <= ideal + 0.5 * node_w.max() + 1e-9, \
+        f"weighted chop tail-heavy: max {weights.max():.2f} vs ideal " \
+        f"{ideal:.2f}"
 
 
 def test_partition_permutation_groups_labels():

@@ -181,6 +181,94 @@ def test_stream_skips_replans_past_the_horizon(stream_setup):
     assert pipeline.stream.swaps == 2
 
 
+# ---------------------------------------- replan failure & retry re-arm
+def test_replan_failure_surfaces_exception_and_rearms(stream_setup):
+    """A failing replan warns with the exception type AND text, the epoch
+    keeps the old plan, and a later successful swap re-arms the retry so
+    a transient failure cannot pin the stream to a stale plan forever."""
+    rep = RepartitionConfig(every_n_epochs=1, matching_temperature=0.5,
+                            seed=5)
+    pipeline = stream_factory(stream_setup, with_neighbor=False,
+                              repartition=rep)
+    stream = pipeline.stream
+    real = stream._synthesize
+    boom = {"active": True}
+
+    def flaky(epoch):
+        if boom["active"]:
+            raise RuntimeError("disk on fire")
+        return real(epoch)
+
+    stream._synthesize = flaky
+    for _ in pipeline(epoch=0):        # launches bg replan for epoch 1
+        pass
+    with pytest.warns(UserWarning, match="RuntimeError: disk on fire"):
+        for _ in pipeline(epoch=1):
+            pass
+    assert stream.swaps == 0           # old plan kept
+    assert 1 in stream._failed
+    boom["active"] = False             # the transient failure clears
+    with pytest.warns(UserWarning, match="disk on fire"):
+        # Epoch 2 still collects the failed background attempt launched
+        # while the failure was active; it relaunches healthy for epoch 3.
+        for _ in pipeline(epoch=2):
+            pass
+    for _ in pipeline(epoch=3):
+        pass
+    assert stream.swaps >= 1
+    assert stream._failed == set()     # successful swap re-armed the retry
+
+
+def test_stream_reuse_degrades_with_warning_on_incapable_partitioner(
+        stream_setup):
+    from repro.core.partition import partition_graph_loop
+    rep = RepartitionConfig(every_n_epochs=1, matching_temperature=0.0,
+                            seed=0, reuse_hierarchy=True)
+    with pytest.warns(UserWarning, match="reuse"):
+        pipeline = stream_factory(stream_setup, repartition=rep,
+                                  partitioner=partition_graph_loop)
+    assert pipeline.stream._hierarchy is None     # degraded, not broken
+    for _ in pipeline(epoch=0):
+        pass
+
+
+def test_stream_reuse_hierarchy_cache_is_built_and_injectable(stream_setup):
+    from repro.core.partition import HierarchyCache
+    _, graph, _ = stream_setup
+    rep = RepartitionConfig(every_n_epochs=1, matching_temperature=0.5,
+                            seed=3)
+    pipeline = stream_factory(stream_setup, repartition=rep)
+    assert isinstance(pipeline.stream._hierarchy, HierarchyCache)
+    # An injected cache (e.g. the Experiment's shared one) is used as-is.
+    cache = HierarchyCache(graph.W, tol=0.15, seed=3)
+    pipeline2 = stream_factory(stream_setup, repartition=rep,
+                               hierarchy_cache=cache)
+    assert pipeline2.stream._hierarchy is cache
+    # Off switch: no cache is built.
+    rep_off = RepartitionConfig(every_n_epochs=1, matching_temperature=0.5,
+                                seed=3, reuse_hierarchy=False)
+    pipeline3 = stream_factory(stream_setup, repartition=rep_off)
+    assert pipeline3.stream._hierarchy is None
+
+
+def test_stream_with_reuse_stays_epoch_pure(stream_setup):
+    """Jump-resume equals sequential with hierarchy reuse enabled — the
+    cache is pure of when it was built."""
+    rep = RepartitionConfig(every_n_epochs=2, matching_temperature=0.5,
+                            seed=8, reuse_hierarchy=True)
+    seq = stream_factory(stream_setup, repartition=rep,
+                         record_indices=True)
+    for e in range(4):
+        seq_idx = _drain(seq, e)
+    jump = stream_factory(stream_setup, repartition=rep,
+                          record_indices=True)
+    jump_idx = _drain(jump, 3)
+    assert len(jump_idx) == len(seq_idx)
+    for a, b in zip(seq_idx, jump_idx):
+        for wa, wb in zip(a, b):
+            np.testing.assert_array_equal(wa, wb)
+
+
 # ------------------------------------------------ degenerate-plan guard
 def test_build_mini_blocks_rejects_batch_smaller_than_classes(stream_setup):
     _, graph, _ = stream_setup

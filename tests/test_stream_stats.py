@@ -15,7 +15,7 @@ from scipy import stats as sps
 from repro.core import build_affinity_graph, plan_meta_batches
 from repro.core.metabatch import (NeighborSampler, epoch_plan_seed,
                                   resynthesize_plan)
-from repro.core.partition import partition_graph_loop
+from repro.core.partition import HierarchyCache, partition_graph_loop
 from repro.core.stats import batch_label_entropy, entropy_distribution
 from repro.data import make_corpus
 
@@ -120,3 +120,163 @@ def test_resynthesis_rejects_temperature_on_loop_partitioner(stream_setup):
     plan = resynthesize_plan(graph, 192, 8, epoch=1, temperature=0.0,
                              partitioner=partition_graph_loop)
     assert plan.n_meta > 0
+
+
+# ------------------------------------------- hierarchy-reuse replans
+@pytest.fixture(scope="module")
+def reuse_setup():
+    """Large enough (n > 2048) that the warm incremental replan path
+    engages rather than falling back to a fresh partition."""
+    corpus = make_corpus(3000, n_classes=8, input_dim=32, manifold_dim=6,
+                         seed=1)
+    graph = build_affinity_graph(corpus.X, k=10)
+    cache = HierarchyCache(graph.W, tol=0.15, seed=0)
+    return corpus, graph, cache
+
+
+def _plans_equal(a, b) -> bool:
+    if (a.mini_block_labels != b.mini_block_labels).any():
+        return False
+    if len(a.meta_batches) != len(b.meta_batches):
+        return False
+    return all((ma == mb).all()
+               for ma, mb in zip(a.meta_batches, b.meta_batches))
+
+
+def test_reuse_resynthesis_bit_reproducible_and_pure(reuse_setup):
+    _, graph, cache = reuse_setup
+    kw = dict(epoch=3, base_seed=11, temperature=0.5)
+    a = resynthesize_plan(graph, 192, 8, reuse=cache, **kw)
+    b = resynthesize_plan(graph, 192, 8, reuse=cache, **kw)
+    assert _plans_equal(a, b)
+    # Purity: a freshly built cache (as a jump-resumed stream would hold)
+    # yields the exact same plan — reuse never depends on build history.
+    fresh_cache = HierarchyCache(graph.W, tol=0.15, seed=0)
+    c = resynthesize_plan(graph, 192, 8, reuse=fresh_cache, **kw)
+    assert _plans_equal(a, c)
+    np.testing.assert_array_equal(a.batch_edges.indices,
+                                  c.batch_edges.indices)
+    np.testing.assert_array_equal(a.batch_edges.data, c.batch_edges.data)
+
+
+def test_reuse_resynthesis_distinct_across_epochs_and_covers(reuse_setup):
+    _, graph, cache = reuse_setup
+    plans = [resynthesize_plan(graph, 192, 8, epoch=e, base_seed=0,
+                               temperature=0.5, reuse=cache)
+             for e in (1, 2, 3)]
+    for a, b in ((0, 1), (0, 2), (1, 2)):
+        # Gumbel-perturbed top-level redraw + warm-path perturbation:
+        # the partition itself differs every epoch, not just the grouping.
+        assert (plans[a].mini_block_labels
+                != plans[b].mini_block_labels).any()
+    for p in plans:    # each plan still covers the dataset exactly once
+        allidx = np.concatenate(p.meta_batches)
+        assert sorted(allidx) == list(range(graph.n_nodes))
+
+
+def _eq6_mean_entropy(plan) -> float:
+    """Mean Shannon entropy of the Eq.-6 neighbour distribution per row."""
+    E = plan.batch_edges
+    hs = []
+    for i in range(plan.n_meta):
+        w = E.data[E.indptr[i]: E.indptr[i + 1]]
+        tot = w.sum()
+        if tot > 0:
+            p = w / tot
+            p = p[p > 0]
+            hs.append(float(-(p * np.log(p)).sum()))
+    return float(np.mean(hs))
+
+
+def test_reuse_and_fresh_block_sampling_entropy_indistinguishable(
+        reuse_setup):
+    """The incremental replan must not collapse the Eq.-6 neighbour
+    distribution: across epochs, reuse plans and from-scratch plans carry
+    statistically indistinguishable block-sampling entropy."""
+    _, graph, cache = reuse_setup
+    epochs = range(1, 7)
+    h_fresh = np.array([_eq6_mean_entropy(
+        resynthesize_plan(graph, 192, 8, epoch=e, base_seed=0,
+                          temperature=0.5)) for e in epochs])
+    h_reuse = np.array([_eq6_mean_entropy(
+        resynthesize_plan(graph, 192, 8, epoch=e, base_seed=0,
+                          temperature=0.5, reuse=cache)) for e in epochs])
+    # Means within 10% of each other and both well inside the other's
+    # observed range (same distribution up to sampling noise).
+    assert abs(h_fresh.mean() - h_reuse.mean()) <= 0.1 * h_fresh.mean()
+    spread = 3 * max(h_fresh.std(), h_reuse.std()) + 0.05 * h_fresh.mean()
+    assert abs(h_fresh.mean() - h_reuse.mean()) <= spread
+
+
+def test_warm_replan_partition_invariants(reuse_setup):
+    """The *incremental* replan path (n > 2048, so no fresh-path fallback)
+    satisfies the partition contract: every node labeled, strict balance
+    cap, exact cut arithmetic, determinism per seed, and cut within 5% of
+    a fresh same-seed tempered partition."""
+    from repro.core.partition import edge_cut, partition_graph
+
+    _, graph, cache = reuse_setup
+    n = graph.n_nodes
+    assert n > 2048                    # warm path engages
+    k, tol = 125, 0.15
+    h = cache.get(k)
+    assert h.levels >= 1               # a real multilevel chain is cached
+    for seed in (1, 5):
+        res = partition_graph(graph.W, k, tol=tol, seed=seed,
+                              temperature=0.5, reuse=h)
+        again = partition_graph(graph.W, k, tol=tol, seed=seed,
+                                temperature=0.5, reuse=h)
+        np.testing.assert_array_equal(res.labels, again.labels)
+        assert res.labels.shape == (n,)
+        assert res.sizes.sum() == n
+        cap = max(int(np.floor(n / k * (1 + tol))), int(np.ceil(n / k)))
+        assert res.sizes.max() <= cap
+        np.testing.assert_allclose(res.cut, edge_cut(graph.W, res.labels),
+                                   rtol=1e-9)
+        fresh = partition_graph(graph.W, k, tol=tol, seed=seed,
+                                temperature=0.5)
+        assert res.cut <= 1.05 * fresh.cut + 1e-9
+
+
+def test_delta_refine_survives_dense_table_cap():
+    """Above the dense conn-table cap (n*k > 8M) a delta-seeded refine
+    must stay restricted to the active rows, not fall back to full-graph
+    passes — and still respect the capacity cap it is given."""
+    import scipy.sparse as sp
+
+    from repro.core.partition import _refine_vec, edge_cut
+
+    rng = np.random.default_rng(0)
+    n, k = 9000, 1000                  # n*k = 9M > _DENSE_ROUNDS_LIMIT
+    m = 6 * n
+    r = rng.integers(0, n, size=m)
+    c = rng.integers(0, n, size=m)
+    keep = r != c
+    w = rng.uniform(0.1, 1.0, size=keep.sum())
+    W = sp.csr_matrix((np.r_[w, w], (np.r_[r[keep], c[keep]],
+                                     np.r_[c[keep], r[keep]])), shape=(n, n))
+    W.sum_duplicates()
+    labels = rng.integers(0, k, size=n)
+    node_w = np.ones(n)
+    cap = float(int(np.ceil(n / k)) + 3)
+    touched = rng.choice(n, size=200, replace=False)
+    before = edge_cut(W, labels)
+    out = _refine_vec(W, node_w, labels.copy(), k, tol=0.15, passes=2,
+                      max_w=cap, seed_touched=touched)
+    assert out.shape == (n,)
+    assert out.min() >= 0 and out.max() < k
+    sizes = np.bincount(out, minlength=k)
+    grew = sizes > np.bincount(labels, minlength=k)
+    assert sizes[grew].max(initial=0) <= cap   # moves respected the cap
+    assert edge_cut(W, out) <= before + 1e-9   # monotone improvement
+    # Determinism of the restricted path.
+    out2 = _refine_vec(W, node_w, labels.copy(), k, tol=0.15, passes=2,
+                       max_w=cap, seed_touched=touched)
+    np.testing.assert_array_equal(out, out2)
+
+
+def test_reuse_rejects_incapable_partitioner(reuse_setup):
+    _, graph, cache = reuse_setup
+    with pytest.raises(ValueError, match="reuse"):
+        resynthesize_plan(graph, 192, 8, epoch=1, temperature=0.0,
+                          partitioner=partition_graph_loop, reuse=cache)
