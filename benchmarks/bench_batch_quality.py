@@ -27,7 +27,6 @@ def run(quick: bool = True) -> list[str]:
     c_rand = connectivity_distribution(graph, rand)
     c_mini = connectivity_distribution(graph, blocks)
     c_meta = connectivity_distribution(graph, plan.meta_batches)
-    e_rand = entropy_distribution(corpus.y, rand, corpus.n_classes)
     e_mini = entropy_distribution(corpus.y, blocks, corpus.n_classes)
     e_meta = entropy_distribution(corpus.y, plan.meta_batches,
                                   corpus.n_classes)

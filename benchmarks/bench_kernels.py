@@ -22,46 +22,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import count_bxb_intermediates
 from repro.api import PAIRWISE
 from repro.kernels import ref
 
 from .common import timeit
 
-
-def count_bxb_intermediates(fn, *args, B: int) -> int:
-    """Number of (B, B)-shaped values produced outside Pallas kernels in
-    ``fn``'s jaxpr (descending through pjit/custom_vjp calls; a value coming
-    straight out of a ``pallas_call`` does not count — the kernel produced
-    it tile by tile)."""
-    closed = jax.make_jaxpr(fn)(*args)
-
-    drop_var = getattr(jax.core, "DropVar", ())
-
-    def walk(jaxpr) -> int:
-        n = 0
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                continue
-            if eqn.primitive.name == "broadcast_in_dim":
-                continue   # constant splat (e.g. a zero cotangent), not a product
-            if all(isinstance(v, drop_var) for v in eqn.outvars):
-                continue   # dead output — DCE removes it before it exists
-            sub = []
-            for p in eqn.params.values():
-                if hasattr(p, "eqns"):               # open Jaxpr
-                    sub.append(p)
-                elif hasattr(p, "jaxpr"):            # ClosedJaxpr
-                    sub.append(p.jaxpr)
-            if sub:
-                # Call-like eqn (pjit/custom_vjp/scan): its own outvars just
-                # re-bind inner productions — count only the inner eqns.
-                n += sum(walk(s) for s in sub)
-                continue
-            n += sum(1 for v in eqn.outvars
-                     if getattr(v.aval, "shape", None) == (B, B))
-        return n
-
-    return walk(closed.jaxpr)
+__all__ = ["count_bxb_intermediates", "run"]   # re-export: counter lives in
+#                                                repro.analysis now
 
 
 def _graph_reg_records(quick: bool) -> list[dict]:

@@ -14,7 +14,6 @@ selected by name (``--pairwise auto`` uses the fused Pallas kernel on TPU).
     PYTHONPATH=src python examples/train_lm_ssl.py --scale large --steps 300
 """
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -25,8 +24,8 @@ from repro.api import AFFINITY
 from repro.core import SSLHyper, plan_meta_batches
 from repro.core.metabatch import NeighborSampler
 from repro.data import make_token_corpus, sequence_features
-from repro.models.config import ATTN, ModelConfig
 from repro.models import transformer as tf
+from repro.models.config import ATTN, ModelConfig
 from repro.optim import adagrad
 from repro.train.train_step import lm_train_step
 

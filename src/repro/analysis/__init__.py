@@ -1,0 +1,59 @@
+"""Static audit toolkit: jaxpr contracts, Pallas VMEM/tiling, concurrency.
+
+Three pass families prove the paper's efficiency invariants on every
+commit (see the module docstrings for the full rule tables):
+
+  * :mod:`repro.analysis.jaxpr_audit` — traced-jaxpr proofs over the AUDIT
+    registry's entry points (no dense B×B outside Pallas, no silent dtype
+    promotion, no host callbacks in scan bodies, donated engine carry, no
+    captured weight constants);
+  * :mod:`repro.analysis.vmem_audit` — static VMEM/tiling models of every
+    kernel launch, validating the whole ``kernels/tuning.py`` table;
+  * :mod:`repro.analysis.concurrency_audit` — AST lock-discipline /
+    thread-lifecycle / publication lint over the threaded modules.
+
+Run ``python -m repro.analysis --ci`` for the gated CI entry point.
+"""
+from repro.analysis.concurrency_audit import (DEFAULT_TARGETS, audit_file,
+                                              audit_paths)
+from repro.analysis.findings import (RULES, AuditReport, Finding,
+                                     load_baseline, save_baseline,
+                                     unbaselined)
+from repro.analysis.jaxpr_audit import (EntryPoint, audit_entry,
+                                        count_bxb_intermediates, iter_eqns)
+from repro.analysis.vmem_audit import (VMEM_BUDGET_BYTES, Block, Launch,
+                                       check_launch, check_tiles,
+                                       kernel_launches, validate_tuning_table,
+                                       vmem_footprint_bytes)
+
+__all__ = [
+    "RULES",
+    "Finding",
+    "AuditReport",
+    "load_baseline",
+    "save_baseline",
+    "unbaselined",
+    "EntryPoint",
+    "audit_entry",
+    "count_bxb_intermediates",
+    "iter_eqns",
+    "Block",
+    "Launch",
+    "VMEM_BUDGET_BYTES",
+    "kernel_launches",
+    "check_launch",
+    "check_tiles",
+    "validate_tuning_table",
+    "vmem_footprint_bytes",
+    "DEFAULT_TARGETS",
+    "audit_file",
+    "audit_paths",
+    "build_report",
+]
+
+
+def build_report(*args, **kwargs):
+    """Lazy alias for :func:`repro.analysis.cli.build_report`."""
+    from repro.analysis.cli import build_report as _build
+
+    return _build(*args, **kwargs)

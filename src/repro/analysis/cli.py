@@ -1,0 +1,165 @@
+"""``python -m repro.analysis`` — run the audit passes and gate on the
+committed baseline.
+
+Usage::
+
+    python -m repro.analysis                 # all passes, write report
+    python -m repro.analysis --ci            # same + nonzero exit on any
+                                             # finding not in the baseline
+    python -m repro.analysis --passes vmem   # one pass family
+    python -m repro.analysis --update-baseline   # accept current findings
+
+The report (``AUDIT_report.json``) always records every finding plus the
+per-pass metrics; the *gate* only fails on error-severity findings whose
+stable fingerprint is absent from ``AUDIT_baseline.json``.  Accepting a
+finding is therefore an explicit, reviewable commit to the baseline file —
+never a side effect of running the tool.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis.concurrency_audit import DEFAULT_TARGETS, audit_paths
+from repro.analysis.findings import (AuditReport, load_baseline,
+                                     save_baseline, unbaselined)
+from repro.analysis.jaxpr_audit import audit_entry
+from repro.analysis.vmem_audit import validate_tuning_table
+
+__all__ = ["build_report", "main", "PASSES"]
+
+PASSES = ("jaxpr", "vmem", "concurrency")
+
+
+def _repo_root(start: str = ".") -> str:
+    """Nearest ancestor holding pyproject.toml (the audit targets are
+    repo-relative); falls back to ``start``."""
+    d = os.path.abspath(start)
+    while True:
+        if os.path.exists(os.path.join(d, "pyproject.toml")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return os.path.abspath(start)
+        d = parent
+
+
+def _run_jaxpr(report: AuditReport) -> None:
+    from repro.api.registry import AUDIT
+
+    metrics: dict = {}
+    findings = []
+    for name in AUDIT:
+        entry = AUDIT.get(name)
+        entry_findings, entry_metrics = audit_entry(entry)
+        findings.extend(entry_findings)
+        metrics[name] = entry_metrics
+    report.extend("jaxpr", findings, {"entries": metrics})
+
+
+def _run_vmem(report: AuditReport) -> None:
+    findings, metrics = validate_tuning_table()
+    report.extend("vmem", findings, metrics)
+
+
+def _run_concurrency(report: AuditReport, root: str) -> None:
+    findings, metrics = audit_paths(DEFAULT_TARGETS, root=root)
+    report.extend("concurrency", findings, metrics)
+
+
+def build_report(passes=PASSES, *, root: str = ".") -> AuditReport:
+    """Run the requested pass families and aggregate one report."""
+    report = AuditReport()
+    if "jaxpr" in passes:
+        _run_jaxpr(report)
+    if "vmem" in passes:
+        _run_vmem(report)
+    if "concurrency" in passes:
+        _run_concurrency(report, root)
+    return report
+
+
+def _summary_lines(report: AuditReport) -> list[str]:
+    lines = []
+    entries = report.metrics.get("jaxpr/entries", {})
+    for name, m in entries.items():
+        bits = []
+        if "bxb_outside_kernels" in m:
+            bits.append(f"BxB outside kernels: {m['bxb_outside_kernels']}")
+        if "carry_donated" in m:
+            bits.append(f"carry donated: {m['carry_donated']}")
+        if bits:
+            lines.append(f"  jaxpr/{name}: " + ", ".join(bits))
+    rows = report.metrics.get("vmem/rows_checked")
+    if rows is not None:
+        worst = report.metrics.get("vmem/worst_footprint_bytes", {})
+        budget = report.metrics.get("vmem/budget_bytes", 0)
+        peak = ", ".join(f"{k}={v / 2**20:.2f}MiB"
+                         for k, v in sorted(worst.items()))
+        lines.append(f"  vmem: {rows} tuning rows vs "
+                     f"{budget / 2**20:.0f}MiB budget ({peak})")
+    files = report.metrics.get("concurrency/files", {})
+    if files:
+        n_threads = sum(m.get("threads_seen", 0) for m in files.values())
+        lines.append(f"  concurrency: {len(files)} files, "
+                     f"{n_threads} thread sites audited")
+    return lines
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static audits: jaxpr contracts, Pallas VMEM/tiling, "
+                    "concurrency lint.")
+    parser.add_argument("--passes", default=",".join(PASSES),
+                        help="comma-separated subset of: "
+                             + ", ".join(PASSES))
+    parser.add_argument("--report", default="AUDIT_report.json",
+                        help="report output path (default: %(default)s)")
+    parser.add_argument("--baseline", default=None,
+                        help="baseline path (default: AUDIT_baseline.json "
+                             "at the repo root)")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="accept all current findings into the baseline"
+                             " and exit 0")
+    parser.add_argument("--ci", action="store_true",
+                        help="CI mode: run everything, write the report, "
+                             "exit nonzero on unbaselined findings "
+                             "(the default gate — this flag just makes the "
+                             "intent explicit in workflows)")
+    args = parser.parse_args(argv)
+
+    passes = tuple(p.strip() for p in args.passes.split(",") if p.strip())
+    unknown = [p for p in passes if p not in PASSES]
+    if unknown:
+        parser.error(f"unknown pass(es) {unknown}; choose from {PASSES}")
+
+    root = _repo_root()
+    baseline_path = args.baseline or os.path.join(root,
+                                                  "AUDIT_baseline.json")
+    report = build_report(passes, root=root)
+
+    if args.update_baseline:
+        save_baseline(baseline_path, report.gating)
+        print(f"baseline updated: {baseline_path} "
+              f"({len(report.gating)} accepted findings)")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new = unbaselined(report.gating, baseline)
+    report.write(args.report, baseline=baseline)
+
+    for line in _summary_lines(report):
+        print(line)
+    for f in report.findings:
+        tag = "NEW " if f in new else ("info " if f.severity != "error"
+                                       else "base ")
+        print(f"{tag}{f.format()}")
+    print(f"{len(report.findings)} finding(s), {len(new)} not in baseline "
+          f"-> {args.report}")
+    if new:
+        print("FAIL: new findings above; fix them or (if accepted) run "
+              "--update-baseline and commit the baseline", file=sys.stderr)
+        return 1
+    return 0

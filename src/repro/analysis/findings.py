@@ -1,0 +1,158 @@
+"""Structured findings, report serialization, and the CI baseline gate.
+
+Every analysis pass (jaxpr / vmem / concurrency) emits :class:`Finding`
+rows.  A finding's :attr:`Finding.fingerprint` is deliberately *stable* —
+``pass:rule:where:detail`` with no line numbers or timestamps — so a
+committed baseline (``AUDIT_baseline.json``) keeps accepting a known
+finding across unrelated edits, while any *new* finding (or a known one
+moving to a new site) fails the gate.
+
+The report (``AUDIT_report.json``) carries the findings plus per-pass
+metrics ("guarantees": the fused-kernel B×B count, the tuning-table rows
+validated, ...) so CI artifacts record the proven invariants, not just
+pass/fail.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Iterable
+
+__all__ = [
+    "Finding",
+    "AuditReport",
+    "load_baseline",
+    "save_baseline",
+    "unbaselined",
+]
+
+#: Rule ids, one table for the whole toolkit (docs + tests key off these).
+RULES = {
+    # jaxpr auditor
+    "J000": "auditor self-check failed (reference canary did not trip)",
+    "J001": "dense intermediate above the size threshold outside a Pallas "
+            "kernel",
+    "J002": "(B, B) intermediate materialized outside a Pallas kernel",
+    "J003": "silent dtype promotion (f64 leak / widening in a declared "
+            "low-precision path)",
+    "J004": "host callback or sync primitive inside a scan/while body",
+    "J005": "non-donated carry leaf in a jit that must donate its carry",
+    "J006": "large array captured as a jaxpr constant instead of an "
+            "argument",
+    # Pallas VMEM / tiling checker
+    "V001": "per-grid-step VMEM footprint exceeds the backend budget",
+    "V002": "tile dimension violates TPU lane/sublane alignment",
+    "V003": "block index map addresses memory outside the padded array",
+    "V004": "tuning-table row shadowed by an earlier first-match row",
+    "V005": "tuning-table kernel has no VMEM model (table and models out "
+            "of sync)",
+    # concurrency lint
+    "C001": "lock-guarded attribute accessed outside the lock",
+    "C002": "non-daemon thread started but never joined",
+    "C003": "value published by a thread body read without a "
+            "happens-before edge (join/wait/get/lock)",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One structured audit finding.
+
+    ``where`` names the audited unit (an AUDIT entry-point name, a
+    ``kernel[row]`` tuning-table coordinate, or ``file::Class.attr``);
+    ``detail`` is a short stable discriminator so two findings of the same
+    rule at the same site fingerprint apart.  ``line`` is display-only and
+    never part of the fingerprint.
+    """
+
+    pass_name: str           # "jaxpr" | "vmem" | "concurrency"
+    rule: str                # e.g. "J001"
+    where: str
+    message: str
+    detail: str = ""
+    severity: str = "error"  # "error" gates; "info" is report-only
+    line: int | None = None
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.pass_name}:{self.rule}:{self.where}:{self.detail}"
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        d["rule_doc"] = RULES.get(self.rule, "")
+        return d
+
+    def format(self) -> str:
+        loc = f"{self.where}:{self.line}" if self.line else self.where
+        return f"[{self.rule}] {loc}: {self.message}"
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Aggregated result of one audit run, JSON-serializable for CI."""
+
+    findings: list[Finding] = dataclasses.field(default_factory=list)
+    metrics: dict[str, Any] = dataclasses.field(default_factory=dict)
+    passes: dict[str, dict] = dataclasses.field(default_factory=dict)
+
+    def extend(self, pass_name: str, findings: Iterable[Finding],
+               metrics: dict | None = None) -> None:
+        findings = list(findings)
+        self.findings.extend(findings)
+        entry = self.passes.setdefault(pass_name, {"findings": 0})
+        entry["findings"] += sum(1 for f in findings
+                                 if f.severity == "error")
+        if metrics:
+            entry.update(metrics)
+            self.metrics.update(
+                {f"{pass_name}/{k}": v for k, v in metrics.items()})
+
+    @property
+    def gating(self) -> list[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    def to_dict(self, *, baseline: set[str] | None = None) -> dict:
+        new = unbaselined(self.gating, baseline or set())
+        return {
+            "version": 1,
+            "passes": self.passes,
+            "metrics": self.metrics,
+            "findings": [f.to_dict() for f in self.findings],
+            "baseline_fingerprints": sorted(baseline or ()),
+            "new_findings": sorted(f.fingerprint for f in new),
+        }
+
+    def write(self, path: str, *, baseline: set[str] | None = None) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_dict(baseline=baseline), fh, indent=2)
+            fh.write("\n")
+
+
+def load_baseline(path: str) -> set[str]:
+    """Accepted-finding fingerprints from a committed baseline file.
+
+    A missing file is an empty baseline (the common healthy state), not an
+    error — the gate then fails on *any* finding.
+    """
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except FileNotFoundError:
+        return set()
+    return set(data.get("fingerprints", []))
+
+
+def save_baseline(path: str, findings: Iterable[Finding]) -> None:
+    fingerprints = sorted({f.fingerprint for f in findings
+                           if f.severity == "error"})
+    with open(path, "w") as fh:
+        json.dump({"fingerprints": fingerprints}, fh, indent=2)
+        fh.write("\n")
+
+
+def unbaselined(findings: Iterable[Finding],
+                baseline: set[str]) -> list[Finding]:
+    """Findings whose fingerprint the committed baseline does not accept."""
+    return [f for f in findings
+            if f.severity == "error" and f.fingerprint not in baseline]

@@ -31,6 +31,7 @@ from typing import Any, Callable, Iterable
 __all__ = [
     "Registry",
     "AFFINITY",
+    "AUDIT",
     "PARTITIONER",
     "PIPELINE",
     "PAIRWISE",
@@ -153,6 +154,24 @@ STRATEGY = Registry("strategy")
 STRATEGY.register("sequential", "repro.train.engine:SequentialStrategy")
 STRATEGY.register("sync_mesh", "repro.train.engine:SyncMeshStrategy")
 STRATEGY.register("async_ps", "repro.train.engine:AsyncPSStrategy")
+
+#: Audited entry points of the static-analysis toolkit
+#: (:mod:`repro.analysis`): each name resolves to a
+#: ``repro.analysis.jaxpr_audit.EntryPoint`` — how to trace one compiled
+#: surface and what contracts its jaxpr must satisfy.  The CLI
+#: (``python -m repro.analysis``) audits every registered name; register a
+#: new entry here to put a new compiled path under the CI gate.
+AUDIT = Registry("audit")
+AUDIT.register("graph_reg_fused", "repro.analysis.entrypoints:graph_reg_fused")
+AUDIT.register("graph_reg_ref", "repro.analysis.entrypoints:graph_reg_ref")
+AUDIT.register("knn_topk", "repro.analysis.entrypoints:knn_topk")
+AUDIT.register("ssl_objective", "repro.analysis.entrypoints:ssl_objective")
+AUDIT.register("engine_sequential",
+               "repro.analysis.entrypoints:engine_sequential")
+AUDIT.register("engine_sync_mesh",
+               "repro.analysis.entrypoints:engine_sync_mesh")
+AUDIT.register("engine_async_ps",
+               "repro.analysis.entrypoints:engine_async_ps")
 
 #: ``(**hyper) -> repro.optim.Optimizer``
 OPTIMIZER = Registry("optimizer")

@@ -124,7 +124,7 @@ def graph_regularizer(
 
 def l2_penalty(params) -> Array:
     leaves = jax.tree_util.tree_leaves(params)
-    return sum(jnp.sum(jnp.square(l)) for l in leaves) if leaves else jnp.float32(0)
+    return sum(jnp.sum(jnp.square(x)) for x in leaves) if leaves else jnp.float32(0)
 
 
 def ssl_objective(

@@ -145,6 +145,16 @@ class MetaBatchStream:
     ``(graph, config, repartition.seed, e)`` and the per-epoch batch order
     and neighbour draws derive from ``(seed, e)``, so identical seeds are
     bit-reproducible — run to run, with or without the background thread.
+
+    Thread-safety: each epoch's generator body runs on whatever thread
+    consumes it (under the engine that is the *prefetch producer* thread,
+    a different one every epoch), while the replan builder runs on its own
+    thread.  All mutable stream state — ``plan``, ``_pending``,
+    ``_plan_epoch``, ``swaps``, ``_failed``, ``_epoch_counter``,
+    ``last_epoch_indices`` — is therefore published under ``_lock``; the
+    builder thread itself only reads construction-time immutables (the
+    batch size and class count are snapshotted in ``__init__`` so it never
+    touches the swappable ``plan``).
     """
 
     def __init__(self, corpus: SyntheticCorpus, graph: AffinityGraph,
@@ -206,6 +216,11 @@ class MetaBatchStream:
         base = 2 * mmax if with_neighbor else mmax
         headroom = pad_headroom if self.every > 0 else 1.0
         self.pad = int(np.ceil(base * headroom / 64) * 64)
+        # Snapshots for the builder thread: replans preserve batch size and
+        # class count, so the thread never reads the swappable ``plan``.
+        self._batch_size = plan.batch_size
+        self._n_classes = plan.n_classes
+        self._lock = threading.Lock()
         self._epoch_counter = 0
         self._plan_epoch = 0               # epoch the current plan targets
         self._failed: set[int] = set()     # targets that failed to swap
@@ -217,9 +232,12 @@ class MetaBatchStream:
         return (2 * mmax if self.with_neighbor else mmax) <= self.pad
 
     def _synthesize(self, epoch: int) -> MetaBatchPlan:
+        # Runs on the builder thread: reads only construction-time
+        # immutables (the batch-size/class-count snapshots, never the
+        # swappable ``plan``), so it needs no lock.
         rep = self.repartition
         return resynthesize_plan(
-            self.graph, self.plan.batch_size, self.plan.n_classes,
+            self.graph, self._batch_size, self._n_classes,
             epoch=epoch, base_seed=getattr(rep, "seed", 0),
             temperature=getattr(rep, "matching_temperature", 0.0),
             tol=self.tol, shuffle_blocks=self.shuffle_blocks,
@@ -238,7 +256,12 @@ class MetaBatchStream:
         t = threading.Thread(target=work, daemon=True,
                              name="metabatch-repartition")
         t.start()
-        self._pending = (target_epoch, t, box)
+        # Lock-publish the handoff: the epoch that collects this pending
+        # tuple runs on a *different* prefetch-producer thread, so the
+        # write must be visible there (the join in ``_collect`` then
+        # orders the builder's box contents).
+        with self._lock:
+            self._pending = (target_epoch, t, box)
 
     def _next_target(self, epoch: int) -> int:
         """First re-partition epoch strictly after ``epoch``."""
@@ -252,33 +275,38 @@ class MetaBatchStream:
                 f"BatchConfig.pad_headroom in the config API); keeping the "
                 "previous plan", stacklevel=4)
             return False
-        self.plan = plan
-        self._plan_epoch = target
-        self.swaps += 1
-        # A successful swap re-arms the retry for previously-failed
-        # targets: a transient failure (OOM on the background thread, a
-        # flaky data mount) must not pin those epochs to the stale plan
-        # forever once the stream has proven healthy again.
-        self._failed.clear()
+        with self._lock:
+            self.plan = plan
+            self._plan_epoch = target
+            self.swaps += 1
+            # A successful swap re-arms the retry for previously-failed
+            # targets: a transient failure (OOM on the background thread, a
+            # flaky data mount) must not pin those epochs to the stale plan
+            # forever once the stream has proven healthy again.
+            self._failed.clear()
         return True
 
     def _collect(self, epoch: int) -> None:
         """Swap in the background plan scheduled for ``epoch``, if any."""
-        if self._pending is None or self._pending[0] != epoch:
-            return
-        _, t, box = self._pending
-        self._pending = None
-        t.join()
+        with self._lock:
+            pending = self._pending
+            if pending is None or pending[0] != epoch:
+                return
+            self._pending = None
+        _, t, box = pending
+        t.join()   # happens-before: orders the builder's writes to box
         if "error" in box:
             err = box["error"]
             warnings.warn(
                 f"re-partitioning for epoch {epoch} failed with "
                 f"{type(err).__name__}: {err}; keeping the previous plan",
                 stacklevel=3)
-            self._failed.add(epoch)
+            with self._lock:
+                self._failed.add(epoch)
             return
         if not self._swap_in(box["plan"], epoch):
-            self._failed.add(epoch)
+            with self._lock:
+                self._failed.add(epoch)
 
     # ----------------------------------------------------------------- epoch
     def epoch(self, epoch: int | None = None,
@@ -292,17 +320,21 @@ class MetaBatchStream:
         internal counter advances by one per call.  ``n_epochs`` bounds the
         run so no background plan is computed past the final epoch.
         """
-        e = self._epoch_counter if epoch is None else int(epoch)
-        self._epoch_counter = e + 1
+        with self._lock:
+            e = self._epoch_counter if epoch is None else int(epoch)
+            self._epoch_counter = e + 1
         if self.every > 0:
             self._collect(e)
             target = (e // self.every) * self.every
-            if (target > 0 and self._plan_epoch != target
-                    and target not in self._failed):
+            with self._lock:
+                need_sync = (target > 0 and self._plan_epoch != target
+                             and target not in self._failed)
+                if need_sync:
+                    self._pending = None
+            if need_sync:
                 # Jumped over the swap epoch (resume, or out-of-order
                 # call): synthesize the plan epoch ``e`` should be using,
                 # synchronously.
-                self._pending = None
                 try:
                     plan = self._synthesize(target)
                 except Exception as err:  # noqa: BLE001 — degrade like bg
@@ -310,27 +342,35 @@ class MetaBatchStream:
                         f"re-partitioning for epoch {target} failed with "
                         f"{type(err).__name__}: {err}; keeping the "
                         f"previous plan", stacklevel=2)
-                    self._failed.add(target)
+                    with self._lock:
+                        self._failed.add(target)
                 else:
                     if not self._swap_in(plan, target):
-                        self._failed.add(target)
+                        with self._lock:
+                            self._failed.add(target)
             nxt = self._next_target(e)
-            if self._pending is None and (n_epochs is None
-                                          or nxt < n_epochs):
+            with self._lock:
+                may_launch = self._pending is None and (n_epochs is None
+                                                        or nxt < n_epochs)
+            # Epochs are consumed one at a time, so only this generator
+            # launches — the lock above is for visibility, not exclusion.
+            if may_launch:
                 self._launch(nxt)
+        with self._lock:
+            plan = self.plan   # snapshot: the whole epoch uses one plan
         sampler = NeighborSampler(
-            self.plan.batch_edges, seed=epoch_plan_seed(self.seed + 1, e))
+            plan.batch_edges, seed=epoch_plan_seed(self.seed + 1, e))
         order_rng = np.random.default_rng([self.seed, 2, e])
-        order = order_rng.permutation(self.plan.n_meta)
+        order = order_rng.permutation(plan.n_meta)
         recorded: list[list[np.ndarray]] = []
         for s in range(0, len(order) - self.k + 1, self.k):
             group = order[s : s + self.k]
             parts, idxs = [], []
             for i in group:
                 j = sampler.sample(int(i)) if self.with_neighbor else None
-                main = self.plan.meta_batches[int(i)]
+                main = plan.meta_batches[int(i)]
                 idx = (main if j is None else np.concatenate(
-                    [main, self.plan.meta_batches[j]]))
+                    [main, plan.meta_batches[j]]))
                 idxs.append(idx)
                 parts.append(_assemble(self.corpus, self.graph, idx,
                                        self.pad))
@@ -338,7 +378,8 @@ class MetaBatchStream:
                 recorded.append(idxs)
             yield _stack_group(parts)
         if self.record_indices:
-            self.last_epoch_indices = recorded
+            with self._lock:
+                self.last_epoch_indices = recorded
 
 
 # ---------------------------------------------------------------------------

@@ -47,8 +47,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .tuning import TileSpec, default_interpret as _default_interpret, \
-    select_tiles
+from .tuning import TileSpec, select_tiles
+from .tuning import default_interpret as _default_interpret
 
 DEFAULT_BI = 128
 DEFAULT_BJ = 128

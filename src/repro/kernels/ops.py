@@ -33,7 +33,6 @@ import os
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .graph_reg import (graph_reg_bwd_pallas, graph_reg_cross_pallas,

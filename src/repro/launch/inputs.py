@@ -7,8 +7,6 @@ allocated.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

@@ -10,8 +10,6 @@ over super-blocks (small HLO even for 100-layer models).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Sequence
 
 # Layer kinds usable inside a block pattern.
 ATTN = "attn"            # causal self-attention + FFN

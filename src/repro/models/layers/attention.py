@@ -130,7 +130,7 @@ def _flash_fwd_tiles(q, k, v, q_positions, kv_positions, kv_valid,
          for a in range(len(tiles))])
 
     def step(carry, inp):
-        acc, m, l, out_buf, lse_buf = carry
+        acc, m, lsum, out_buf, lse_buf = carry
         i, j, is_first, is_last = inp
         qi = jax.lax.dynamic_index_in_dim(qt, i, 0, keepdims=False)
         qposi = jax.lax.dynamic_index_in_dim(qpt, i, 0, keepdims=False)
@@ -141,7 +141,7 @@ def _flash_fwd_tiles(q, k, v, q_positions, kv_positions, kv_valid,
         # Reset the online-softmax state at the start of each q row.
         acc = jnp.where(is_first, 0.0, acc)
         m = jnp.where(is_first, NEG_INF, m)
-        l = jnp.where(is_first, 0.0, l)
+        lsum = jnp.where(is_first, 0.0, lsum)
         s = jnp.einsum("bqkgd,bskd->bqkgs", qi, ki,
                        preferred_element_type=jnp.float32)
         mask = _mask_tile(qposi, kposi, kvali, causal=causal, window=window)
@@ -149,12 +149,13 @@ def _flash_fwd_tiles(q, k, v, q_positions, kv_positions, kv_valid,
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
-        l = l * alpha + jnp.sum(p, axis=-1)
+        lsum = lsum * alpha + jnp.sum(p, axis=-1)
         pv = jnp.einsum("bqkgs,bskd->bqkgd", p, vi.astype(jnp.float32))
         acc = acc * alpha[..., None] + pv
         # Emit the finished row.
-        out_row = acc / jnp.maximum(l, 1e-30)[..., None]
-        lse_row = jnp.where(l > 0, m_new + jnp.log(jnp.maximum(l, 1e-30)),
+        out_row = acc / jnp.maximum(lsum, 1e-30)[..., None]
+        lse_row = jnp.where(lsum > 0,
+                            m_new + jnp.log(jnp.maximum(lsum, 1e-30)),
                             0.0)
         out_buf = jnp.where(
             is_last,
@@ -165,7 +166,7 @@ def _flash_fwd_tiles(q, k, v, q_positions, kv_positions, kv_valid,
             is_last,
             jax.lax.dynamic_update_index_in_dim(lse_buf, lse_row[None], i, 0),
             lse_buf)
-        return (acc, m_new, l, out_buf, lse_buf), None
+        return (acc, m_new, lsum, out_buf, lse_buf), None
 
     acc0 = jnp.zeros((B, qb, KV, G, hd), jnp.float32)
     m0 = jnp.full((B, qb, KV, G), NEG_INF, jnp.float32)

@@ -120,7 +120,6 @@ def mamba_forward(p, x: Array, *, return_state: bool = False):
 
 def mamba_decode(p, x: Array, state: MambaState) -> tuple[Array, MambaState]:
     """One-token step. x: (B, 1, d_model)."""
-    d_conv = p["conv_w"].shape[0]
     xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
     xi, z = jnp.split(xz[:, 0], 2, axis=-1)                      # (B, di)
     conv_in = jnp.concatenate([state.conv, xi[:, None, :]], axis=1)  # (B, k, di)

@@ -11,7 +11,6 @@ remat trade, and the TPU-native analogue of Mamba's fused-SRAM scan).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def chunked_scan(step, init, xs, *, chunk: int = 128, unroll: int = 1):

@@ -15,7 +15,6 @@ Three entry points:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

@@ -9,7 +9,7 @@ import pytest
 
 from repro.api import (AFFINITY, PAIRWISE, PARTITIONER, PIPELINE,
                        BatchConfig, DataConfig, Experiment, ExperimentConfig,
-                       GraphConfig, ObjectiveConfig, Registry, TrainConfig,
+                       ObjectiveConfig, Registry, TrainConfig,
                        resolve_pairwise)
 from repro.core.ssl_loss import SSLHyper
 

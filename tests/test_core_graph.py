@@ -1,18 +1,16 @@
 """Affinity graph, partitioner, meta-batch synthesis — unit + property tests."""
 import numpy as np
 import pytest
-import scipy.sparse as sp
 
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (build_affinity_graph, edge_cut, partition_graph,
-                        partition_permutation, plan_meta_batches)
+                        partition_permutation)
 from repro.core.affinity import knn_edges, pairwise_sq_dists
 from repro.core.metabatch import NeighborSampler, batch_graph
 from repro.core.stats import (batch_label_entropy, connectivity_distribution,
-                              entropy_distribution, random_batches,
-                              within_batch_connectivity)
+                              entropy_distribution, random_batches)
 
 
 # ----------------------------------------------------------------- affinity

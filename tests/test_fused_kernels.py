@@ -4,8 +4,6 @@ No hypothesis dependency — unlike tests/test_kernels.py this module must run
 in the minimal container, because it guards the fused kernels' gradient
 semantics on non-tile-aligned shapes.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -234,7 +232,7 @@ def test_fused_grad_materializes_no_bxb_outside_kernels(rng):
     """The fwd+bwd jaxpr of the fused path must contain no (B, B)-shaped
     intermediate produced by anything but a pallas kernel (the historical
     fallback rebuilt P·logPᵀ with full-size jnp matmuls)."""
-    from benchmarks.bench_kernels import count_bxb_intermediates
+    from repro.analysis import count_bxb_intermediates
     B = 64   # tile-aligned: padding adds no (B, B) reshapes either way
     logp, W = _problem(rng, B, 39)
     fused = lambda lp: graph_regularizer_fused(lp, W, 0.5, 1e-3)  # noqa: E731

@@ -5,9 +5,7 @@ import subprocess
 import sys
 
 import jax
-import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.launch import hlo_analysis
 from repro.sharding.specs import spec_for_cache, spec_for_param

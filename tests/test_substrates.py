@@ -1,5 +1,4 @@
 """Optimizers, schedules, checkpointing, data pipeline, MoE routing, serving."""
-import dataclasses
 import os
 
 import jax
@@ -7,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SSLHyper, build_affinity_graph, plan_meta_batches
 from repro.data import (MetaBatchPipeline, drop_labels, lm_batches,
                         make_corpus, make_token_corpus, random_batch_pipeline,
                         sequence_features)

@@ -14,10 +14,9 @@ import pytest
 
 from repro.core import SSLHyper, build_affinity_graph, plan_meta_batches
 from repro.data import MetaBatchPipeline, drop_labels, make_corpus
-from repro.models.dnn import DNNConfig, dnn_forward, init_dnn
-from repro.optim import adagrad
+from repro.models.dnn import DNNConfig, init_dnn
 from repro.train import train_dnn_ssl
-from repro.train.train_step import dnn_ssl_loss, dnn_ssl_step
+from repro.train.train_step import dnn_ssl_loss
 
 
 @pytest.fixture(scope="module")
