@@ -10,11 +10,21 @@ the step — exactly the regime the paper's 4×2000 DNN occupies on CPU) for:
   * ``engine_scan``       — sequential strategy, whole-epoch scan;
   * ``engine_scan_chunk`` — sequential strategy, 10-step chunks;
   * ``engine_sync_mesh``  — the mesh strategy (1-device mesh here: measures
-    placement overhead, not parallel speedup).
+    placement overhead, not parallel speedup);
+  * ``engine_scan_chunk10_guarded`` — chunk-10 with the resilience layer's
+    non-finite guard compiled in (halt policy off).
+
+The guard is sold as near-free (the hot scan body is unchanged; one
+finiteness reduction per chunk, one scalar fetch per window of chunks,
+and poisoned windows replay from a backup), so the bench *gates* it:
+unguarded/guarded single-epoch runs are timed in interleaved pairs,
+``guard_overhead_frac`` is the median per-pair ratio minus one, and the
+section raises if it exceeds ``GUARD_OVERHEAD_LIMIT`` (5% steps/sec).
 
 ``run(json_path=...)`` dumps machine-readable records (plus the headline
-``speedup_scan_vs_python``) so the training-throughput trajectory is
-tracked across PRs the same way BENCH_kernels.json tracks kernels.
+``speedup_scan_vs_python`` and ``guard_overhead_frac``) so the
+training-throughput trajectory is tracked across PRs the same way
+BENCH_kernels.json tracks kernels.
 """
 from __future__ import annotations
 
@@ -36,6 +46,7 @@ CFG = DNNConfig(input_dim=64, hidden_dim=128, n_hidden=2, n_classes=10,
 HYPER = SSLHyper(1.0, 1e-4, 1e-5)
 B = 128          # concatenated meta-batch rows
 LR = 1e-3
+GUARD_OVERHEAD_LIMIT = 0.05      # non-finite guard must stay under 5%
 
 
 def _make_batches(n_steps: int, seed: int = 0) -> list[dict]:
@@ -81,7 +92,7 @@ def _time_python_loop(batches: list[dict], n_epochs: int) -> float:
 
 
 def _time_engine(batches: list[dict], n_epochs: int, *, strategy: str,
-                 scan_chunk: int) -> float:
+                 scan_chunk: int, resilience=None) -> float:
     opt = adagrad()
     params = init_dnn(CFG, jax.random.PRNGKey(0))
     state = TrainState.create(params, opt.init(params), jax.random.PRNGKey(0))
@@ -93,10 +104,53 @@ def _time_engine(batches: list[dict], n_epochs: int, *, strategy: str,
 
     mesh = data_mesh(1) if strategy == "sync_mesh" else None
     engine = Engine(step_fn, strategy=strategy, mesh=mesh,
-                    scan_chunk=scan_chunk, prefetch=2)
+                    scan_chunk=scan_chunk, prefetch=2,
+                    resilience=resilience)
     res = engine.run(lambda: iter(batches), state=state,
                      n_epochs=n_epochs + 1, lr_schedule=constant_lr(LR))
     return _median_epoch_seconds([r["seconds"] for r in res.history[1:]])
+
+
+def _guard_overhead(batches: list[dict], n_epochs: int,
+                    pairs: int = 8) -> tuple[float, float, float]:
+    """Interleaved unguarded/guarded timing pairs at the chunk-10 shape.
+
+    Both engines are built once (compiled code reused across samples),
+    then single-epoch runs alternate off/on; the gate statistic is the
+    **median per-pair ratio** minus one.  Adjacent-in-time pairing cancels
+    slow machine drift and the median tames transient spikes — a real
+    regression shows up in most pairs, one noisy neighbor does not.
+    """
+    from repro.api.config import ResilienceConfig
+
+    opt = adagrad()
+    step_fn = lift_step(
+        lambda p, o, batch, lr: dnn_ssl_step(p, o, batch, cfg=CFG,
+                                             hyper=HYPER, opt=opt, lr=lr,
+                                             pairwise=None))
+    engines = {
+        "off": Engine(step_fn, strategy="sequential", scan_chunk=10,
+                      prefetch=2),
+        "on": Engine(step_fn, strategy="sequential", scan_chunk=10,
+                     prefetch=2,
+                     resilience=ResilienceConfig(nonfinite_guard=True)),
+    }
+
+    def epoch_seconds(which: str) -> float:
+        params = init_dnn(CFG, jax.random.PRNGKey(0))
+        state = TrainState.create(params, opt.init(params),
+                                  jax.random.PRNGKey(0))
+        res = engines[which].run(lambda: iter(batches), state=state,
+                                 n_epochs=1, lr_schedule=constant_lr(LR))
+        return res.history[0]["seconds"]
+
+    for which in engines:               # compile warmup, not timed
+        epoch_seconds(which)
+    samples = [(epoch_seconds("off"), epoch_seconds("on"))
+               for _ in range(pairs)]
+    overhead = float(np.median([on / off for off, on in samples])) - 1.0
+    return (min(off for off, _ in samples),
+            min(on for _, on in samples), overhead)
 
 
 def run(quick: bool = True, json_path: str | None = None) -> list[str]:
@@ -125,6 +179,16 @@ def run(quick: bool = True, json_path: str | None = None) -> list[str]:
                         "backend": jax.default_backend()})
         rows.append(f"train/{name},{secs / n_steps * 1e6:.1f},"
                     f"steps_per_sec={sps:.1f}")
+    _, guarded_secs, overhead = _guard_overhead(batches, n_epochs)
+    records.append({"name": "engine_scan_chunk10_guarded",
+                    "epoch_seconds": guarded_secs,
+                    "steps_per_sec": n_steps / guarded_secs,
+                    "n_steps": n_steps, "batch_rows": B,
+                    "hidden_dim": CFG.hidden_dim,
+                    "backend": jax.default_backend()})
+    rows.append(f"train/engine_scan_chunk10_guarded,"
+                f"{guarded_secs / n_steps * 1e6:.1f},"
+                f"guard_overhead={overhead * 100:.1f}%")
     by_name = {r["name"]: r for r in records}
     speedup = (by_name["engine_scan"]["steps_per_sec"]
                / by_name["python_loop"]["steps_per_sec"])
@@ -132,5 +196,11 @@ def run(quick: bool = True, json_path: str | None = None) -> list[str]:
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"records": records,
-                       "speedup_scan_vs_python": speedup}, f, indent=2)
+                       "speedup_scan_vs_python": speedup,
+                       "guard_overhead_frac": overhead}, f, indent=2)
+    if overhead > GUARD_OVERHEAD_LIMIT:
+        raise RuntimeError(
+            f"non-finite guard costs {overhead * 100:.1f}% steps/sec at the "
+            f"chunk-10 shape (limit {GUARD_OVERHEAD_LIMIT * 100:.0f}%) — "
+            "the guard must stay effectively free")
     return rows

@@ -21,7 +21,7 @@ import argparse
 import os
 import sys
 
-from repro.analysis.concurrency_audit import DEFAULT_TARGETS, audit_paths
+from repro.analysis.concurrency_audit import audit_paths
 from repro.analysis.findings import (AuditReport, load_baseline,
                                      save_baseline, unbaselined)
 from repro.analysis.jaxpr_audit import audit_entry
@@ -64,7 +64,9 @@ def _run_vmem(report: AuditReport) -> None:
 
 
 def _run_concurrency(report: AuditReport, root: str) -> None:
-    findings, metrics = audit_paths(DEFAULT_TARGETS, root=root)
+    # None = the live THREADED_MODULES registry (supervisor/faults and any
+    # later-registered threaded module included) — not a frozen tuple.
+    findings, metrics = audit_paths(None, root=root)
     report.extend("concurrency", findings, metrics)
 
 

@@ -32,6 +32,12 @@ flagged line or the line above::
 
 The marker names the rule it waives, so a suppression never silently
 covers a different future finding.
+
+The audited-file list is a registry (:data:`THREADED_MODULES` /
+:func:`register_threaded_module`): any module that spawns or coordinates
+threads registers itself here and is linted by ``python -m repro.analysis
+--ci`` from then on — adding a threaded subsystem without audit coverage
+should be a one-line diff review question, not a silent gap.
 """
 from __future__ import annotations
 
@@ -41,14 +47,35 @@ from typing import Iterable, Iterator
 
 from repro.analysis.findings import Finding
 
-__all__ = ["audit_file", "audit_paths", "DEFAULT_TARGETS"]
+__all__ = ["audit_file", "audit_paths", "default_targets",
+           "register_threaded_module", "DEFAULT_TARGETS", "THREADED_MODULES"]
 
-#: Repo-relative modules the pass covers (the three threaded subsystems).
-DEFAULT_TARGETS = (
-    "src/repro/train/engine.py",
-    "src/repro/data/pipeline.py",
-    "src/repro/core/partition.py",
-)
+#: Registry of threaded modules: name -> repo-relative path.  Names give
+#: diffs and reports a stable identity; paths are what the pass parses.
+THREADED_MODULES: dict[str, str] = {
+    "engine": "src/repro/train/engine.py",
+    "pipeline": "src/repro/data/pipeline.py",
+    "partition": "src/repro/core/partition.py",
+    "supervisor": "src/repro/resilience/supervisor.py",
+    "faults": "src/repro/resilience/faults.py",
+}
+
+
+def register_threaded_module(name: str, relpath: str) -> None:
+    """Add (or re-point) a module in the concurrency-audit registry."""
+    if not name or not relpath:
+        raise ValueError("register_threaded_module needs a name and a path")
+    THREADED_MODULES[name] = relpath
+
+
+def default_targets() -> tuple[str, ...]:
+    """The registry's current path list (insertion-ordered)."""
+    return tuple(THREADED_MODULES.values())
+
+
+#: Back-compat alias: the registry contents at import time.  Prefer
+#: :func:`default_targets`, which sees later registrations.
+DEFAULT_TARGETS = default_targets()
 
 _SUPPRESS_RE = re.compile(r"#\s*audit:\s*safe\((C\d{3})\)")
 _HB_CALLS = frozenset({"join", "wait", "get", "acquire", "result"})
@@ -328,14 +355,16 @@ def audit_file(path: str, *, where: str | None = None
     return kept, metrics
 
 
-def audit_paths(paths: Iterable[str] = DEFAULT_TARGETS, *, root: str = "."
+def audit_paths(paths: Iterable[str] | None = None, *, root: str = "."
                 ) -> tuple[list[Finding], dict]:
-    """The concurrency pass entry point: audit every target file."""
+    """The concurrency pass entry point: audit every target file.
+    ``paths=None`` (default) audits the live :data:`THREADED_MODULES`
+    registry, including modules registered after import."""
     import os
 
     findings: list[Finding] = []
     metrics: dict = {"files": {}}
-    for rel in paths:
+    for rel in (default_targets() if paths is None else paths):
         path = os.path.join(root, rel)
         file_findings, file_metrics = audit_file(path, where=rel)
         findings.extend(file_findings)

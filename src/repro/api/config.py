@@ -27,6 +27,7 @@ __all__ = [
     "ObjectiveConfig",
     "TrainConfig",
     "ExecutionConfig",
+    "ResilienceConfig",
     "ExperimentConfig",
 ]
 
@@ -320,6 +321,86 @@ class ExecutionConfig:
 
 
 @dataclass(frozen=True)
+class ResilienceConfig:
+    """Failure semantics for the engine/stream/checkpoint layers
+    (see ``repro.resilience`` and README "Failure semantics").
+
+    ``nonfinite_guard`` arms a two-speed non-finite guard: the hot scan
+    body is unchanged, each chunk ends with one finiteness reduction, and
+    the engine resolves windows of ``guard_window`` chunks with a single
+    guard-scalar fetch.  A window that saw NaN/inf is replayed from its
+    start with a strict body that skips exactly the poisoned updates
+    (params/opt_state/rng/step untouched, as if the batch had never been
+    drawn), counting into ``guard/skipped_total`` in the history; with
+    ``halt_after_consecutive=K > 0`` a ``NonFiniteHaltError`` is raised
+    on host once K steps in a row were skipped (checked at window edges).
+    Larger ``guard_window`` amortizes the fetch further but retains that
+    many placed chunks (device batches) for a possible replay.
+
+    ``checkpoint_checksums`` writes/verifies a ``.sha256`` sidecar per
+    checkpoint; a corrupt LATEST target then falls back to the newest
+    valid checkpoint on resume.  ``keep_last=N > 0`` prunes all but the
+    newest N checkpoints after each save.
+
+    ``max_retries``/``backoff_base``/``backoff_max`` parameterize the
+    thread supervisor for the prefetch producer and the replan builder
+    (deterministic jitter derives from ``seed``).  ``hang_timeout`` is the
+    per-attempt watchdog for the prefetch producer's device-put (a fast
+    operation — a fraction of a second is generous); the replan builder
+    gets its own ``replan_hang_timeout`` budget, since a legitimate
+    re-synthesis takes orders of magnitude longer than a device-put.
+    ``max_replan_failures`` consecutive failed replan targets disable
+    background re-partitioning (plan stays static) instead of spinning a
+    warning+thread per epoch.
+
+    ``drop_overstale`` makes ``async_ps`` drop gradients from workers
+    whose snapshot age exceeds ``max_staleness`` (dead/straggler) and
+    renormalize the survivors' contribution.
+    """
+
+    nonfinite_guard: bool = False
+    guard_window: int = 4
+    halt_after_consecutive: int = 0
+    checkpoint_checksums: bool = True
+    keep_last: int = 0
+    max_retries: int = 3
+    backoff_base: float = 0.05
+    backoff_max: float = 2.0
+    hang_timeout: float | None = None
+    replan_hang_timeout: float | None = None
+    drop_overstale: bool = False
+    max_replan_failures: int = 3
+    seed: int = 0
+
+    def __post_init__(self):
+        _require(self.guard_window >= 1,
+                 f"guard_window must be >= 1, got {self.guard_window}")
+        _require(self.halt_after_consecutive >= 0,
+                 f"halt_after_consecutive must be >= 0, "
+                 f"got {self.halt_after_consecutive}")
+        _require(self.halt_after_consecutive == 0 or self.nonfinite_guard,
+                 "halt_after_consecutive > 0 requires nonfinite_guard=True "
+                 "(the halt policy counts guard-skipped steps)")
+        _require(self.keep_last >= 0,
+                 f"keep_last must be >= 0, got {self.keep_last}")
+        _require(self.max_retries >= 0,
+                 f"max_retries must be >= 0, got {self.max_retries}")
+        _require(0 <= self.backoff_base <= self.backoff_max,
+                 f"need 0 <= backoff_base <= backoff_max, got "
+                 f"({self.backoff_base}, {self.backoff_max})")
+        _require(self.hang_timeout is None or self.hang_timeout > 0,
+                 f"hang_timeout must be positive or None, "
+                 f"got {self.hang_timeout}")
+        _require(self.replan_hang_timeout is None
+                 or self.replan_hang_timeout > 0,
+                 f"replan_hang_timeout must be positive or None, "
+                 f"got {self.replan_hang_timeout}")
+        _require(self.max_replan_failures >= 0,
+                 f"max_replan_failures must be >= 0, "
+                 f"got {self.max_replan_failures}")
+
+
+@dataclass(frozen=True)
 class ExperimentConfig:
     """The single config object an ``Experiment`` runs from."""
 
@@ -333,6 +414,7 @@ class ExperimentConfig:
     objective: ObjectiveConfig = field(default_factory=ObjectiveConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
     execution: ExecutionConfig = field(default_factory=ExecutionConfig)
+    resilience: ResilienceConfig = field(default_factory=ResilienceConfig)
 
     def __post_init__(self):
         _require(not (self.repartition.active

@@ -61,6 +61,7 @@ class Experiment:
         graph=None,
         plan=None,
         hierarchy_cache=None,
+        injector=None,
     ):
         self.config = config
         self.corpus = corpus          # SyntheticCorpus (labels already dropped)
@@ -68,6 +69,7 @@ class Experiment:
         self.graph = graph            # AffinityGraph
         self.plan = plan              # MetaBatchPlan
         self.hierarchy_cache = hierarchy_cache  # shared HierarchyCache
+        self.injector = injector      # repro.resilience.FaultInjector (chaos)
         self.pipeline: Callable | None = None   # epoch-factory callable
         self._built = False
 
@@ -133,9 +135,25 @@ class Experiment:
             tol=cfg.partition.tol,
             coarsen_to=cfg.partition.coarsen_to,
             shuffle_blocks=cfg.batch.shuffle_blocks,
-            hierarchy_cache=self._hierarchy_cache())
+            hierarchy_cache=self._hierarchy_cache(),
+            supervisor=self._replan_supervisor(),
+            fault_injector=self.injector)
         self._built = True
         return self
+
+    def _replan_supervisor(self):
+        """Supervisor for the stream's replan builder (None when retries
+        are configured off — the stream then degrades on first failure).
+        Uses ``replan_hang_timeout``, not the prefetch ``hang_timeout``:
+        a real re-synthesis takes far longer than a device-put."""
+        r = self.config.resilience
+        if r.max_retries <= 0:
+            return None
+        from repro.resilience.supervisor import RetryPolicy, Supervisor
+        return Supervisor(RetryPolicy(
+            max_retries=r.max_retries, backoff_base=r.backoff_base,
+            backoff_max=r.backoff_max, hang_timeout=r.replan_hang_timeout,
+            seed=r.seed), name="replan")
 
     def _hierarchy_cache(self):
         """``HierarchyCache`` for hierarchy-reuse replans: the injected one
@@ -229,7 +247,9 @@ class Experiment:
             max_staleness=ex.max_staleness,
             checkpoint_every=ex.checkpoint_every,
             checkpoint_dir=ex.checkpoint_dir,
-            resume=ex.resume)
+            resume=ex.resume,
+            resilience=cfg.resilience,
+            injector=self.injector)
         seconds = time.time() - t0
         final = res.history[-1] if res.history else {}
         return ExperimentResult(config=cfg, history=res.history,

@@ -139,7 +139,11 @@ class MetaBatchStream:
     cached labels + delta-seeded refinement — instead of from scratch.
     A replan that raises warns with the exception type and text and keeps
     the previous plan; a later successful swap re-arms the retry for
-    previously failed targets.
+    previously failed targets.  With a ``supervisor`` each synthesis gets
+    bounded retries with backoff first, and ``max_replan_failures``
+    consecutive failed targets disable background replans for the rest of
+    the run (one final warning, plan static) instead of spinning a thread
+    and repeating the same warning every retry window.
 
     Determinism: the plan for epoch ``e`` is a pure function of
     ``(graph, config, repartition.seed, e)`` and the per-epoch batch order
@@ -163,7 +167,9 @@ class MetaBatchStream:
                  repartition=None, partitioner=None, tol: float = 0.15,
                  coarsen_to: int = 60, shuffle_blocks: bool = True,
                  pad_headroom: float = 1.25, record_indices: bool = False,
-                 hierarchy_cache: HierarchyCache | None = None):
+                 hierarchy_cache: HierarchyCache | None = None,
+                 supervisor=None, fault_injector=None,
+                 max_replan_failures: int = 3):
         self.corpus = corpus
         self.graph = graph
         self.plan = plan
@@ -172,6 +178,16 @@ class MetaBatchStream:
         self.seed = seed
         self.repartition = repartition
         self.partitioner = partitioner
+        # Resilience collaborators (construction-time immutables): the
+        # supervisor retries/backs off each synthesis attempt, the fault
+        # injector arms deterministic replan failures for chaos tests, and
+        # ``max_replan_failures`` consecutive failed *targets* disable
+        # background re-partitioning entirely (one final warning) so a
+        # persistently broken partitioner stops spinning a thread — and
+        # emitting an identical warning — every retry window.
+        self.supervisor = supervisor
+        self.fault_injector = fault_injector
+        self.max_replan_failures = int(max_replan_failures)
         self.tol = tol
         self.coarsen_to = coarsen_to
         self.shuffle_blocks = shuffle_blocks
@@ -225,6 +241,8 @@ class MetaBatchStream:
         self._plan_epoch = 0               # epoch the current plan targets
         self._failed: set[int] = set()     # targets that failed to swap
         self._pending: tuple[int, threading.Thread, dict] | None = None
+        self._consec_failures = 0          # distinct targets failed in a row
+        self._replan_disabled = False      # tripped at max_replan_failures
 
     # ------------------------------------------------------------ internals
     def _fits(self, plan: MetaBatchPlan) -> bool:
@@ -235,6 +253,8 @@ class MetaBatchStream:
         # Runs on the builder thread: reads only construction-time
         # immutables (the batch-size/class-count snapshots, never the
         # swappable ``plan``), so it needs no lock.
+        if self.fault_injector is not None:
+            self.fault_injector.maybe_fail("replan", epoch=epoch)
         rep = self.repartition
         return resynthesize_plan(
             self.graph, self._batch_size, self._n_classes,
@@ -244,12 +264,44 @@ class MetaBatchStream:
             partitioner=self.partitioner, coarsen_to=self.coarsen_to,
             reuse=self._hierarchy)
 
+    def _call_synthesize(self, epoch: int) -> MetaBatchPlan:
+        """One supervised synthesis: with a supervisor, transient failures
+        are retried with backoff before the degrade path ever fires."""
+        if self.supervisor is not None:
+            return self.supervisor.call(self._synthesize, epoch,
+                                        key=f"replan@{epoch}")
+        return self._synthesize(epoch)
+
+    def _note_failure(self, target: int, err: BaseException, *,
+                      stacklevel: int) -> None:
+        """Degrade: keep the previous plan, count the failure, and trip the
+        disable switch after ``max_replan_failures`` consecutive ones."""
+        with self._lock:
+            self._failed.add(target)
+            self._consec_failures += 1
+            n = self._consec_failures
+            tripped = (self.max_replan_failures > 0
+                       and n >= self.max_replan_failures
+                       and not self._replan_disabled)
+            if tripped:
+                self._replan_disabled = True
+        warnings.warn(
+            f"re-partitioning for epoch {target} failed with "
+            f"{type(err).__name__}: {err}; keeping the previous plan "
+            f"(consecutive failure {n})", stacklevel=stacklevel + 1)
+        if tripped:
+            warnings.warn(
+                f"{n} consecutive re-partitioning failures: disabling "
+                "background replans for the rest of the run (the current "
+                "plan stays static); fix the partitioner and restart to "
+                "re-enable", stacklevel=stacklevel + 1)
+
     def _launch(self, target_epoch: int) -> None:
         box: dict = {}
 
         def work():
             try:
-                box["plan"] = self._synthesize(target_epoch)
+                box["plan"] = self._call_synthesize(target_epoch)
             except BaseException as e:  # noqa: BLE001 — surfaced at swap
                 box["error"] = e
 
@@ -282,8 +334,11 @@ class MetaBatchStream:
             # A successful swap re-arms the retry for previously-failed
             # targets: a transient failure (OOM on the background thread, a
             # flaky data mount) must not pin those epochs to the stale plan
-            # forever once the stream has proven healthy again.
+            # forever once the stream has proven healthy again.  It also
+            # resets the consecutive-failure count feeding the disable
+            # threshold — only an *unbroken* run of failures disables.
             self._failed.clear()
+            self._consec_failures = 0
         return True
 
     def _collect(self, epoch: int) -> None:
@@ -296,13 +351,7 @@ class MetaBatchStream:
         _, t, box = pending
         t.join()   # happens-before: orders the builder's writes to box
         if "error" in box:
-            err = box["error"]
-            warnings.warn(
-                f"re-partitioning for epoch {epoch} failed with "
-                f"{type(err).__name__}: {err}; keeping the previous plan",
-                stacklevel=3)
-            with self._lock:
-                self._failed.add(epoch)
+            self._note_failure(epoch, box["error"], stacklevel=3)
             return
         if not self._swap_in(box["plan"], epoch):
             with self._lock:
@@ -328,7 +377,8 @@ class MetaBatchStream:
             target = (e // self.every) * self.every
             with self._lock:
                 need_sync = (target > 0 and self._plan_epoch != target
-                             and target not in self._failed)
+                             and target not in self._failed
+                             and not self._replan_disabled)
                 if need_sync:
                     self._pending = None
             if need_sync:
@@ -336,22 +386,18 @@ class MetaBatchStream:
                 # call): synthesize the plan epoch ``e`` should be using,
                 # synchronously.
                 try:
-                    plan = self._synthesize(target)
+                    plan = self._call_synthesize(target)
                 except Exception as err:  # noqa: BLE001 — degrade like bg
-                    warnings.warn(
-                        f"re-partitioning for epoch {target} failed with "
-                        f"{type(err).__name__}: {err}; keeping the "
-                        f"previous plan", stacklevel=2)
-                    with self._lock:
-                        self._failed.add(target)
+                    self._note_failure(target, err, stacklevel=2)
                 else:
                     if not self._swap_in(plan, target):
                         with self._lock:
                             self._failed.add(target)
             nxt = self._next_target(e)
             with self._lock:
-                may_launch = self._pending is None and (n_epochs is None
-                                                        or nxt < n_epochs)
+                may_launch = (self._pending is None
+                              and not self._replan_disabled
+                              and (n_epochs is None or nxt < n_epochs))
             # Epochs are consumed one at a time, so only this generator
             # launches — the lock above is for visibility, not exclusion.
             if may_launch:
@@ -416,7 +462,9 @@ def make_metabatch_stream_pipeline(corpus, graph, plan, *,
                                    shuffle_blocks: bool = True,
                                    pad_headroom: float = 1.25,
                                    record_indices: bool = False,
-                                   hierarchy_cache=None, **_):
+                                   hierarchy_cache=None, supervisor=None,
+                                   fault_injector=None,
+                                   max_replan_failures: int = 3, **_):
     """The §2 stream as a first-class pipeline: NeighborSampler + meta-batch
     assembly feeding the engine directly, with optional between-epoch
     stochastic re-partitioning (``repartition`` = a ``RepartitionConfig``-
@@ -434,7 +482,9 @@ def make_metabatch_stream_pipeline(corpus, graph, plan, *,
         with_neighbor=with_neighbor, repartition=repartition,
         partitioner=partitioner, tol=tol, coarsen_to=coarsen_to,
         shuffle_blocks=shuffle_blocks, pad_headroom=pad_headroom,
-        record_indices=record_indices, hierarchy_cache=hierarchy_cache)
+        record_indices=record_indices, hierarchy_cache=hierarchy_cache,
+        supervisor=supervisor, fault_injector=fault_injector,
+        max_replan_failures=max_replan_failures)
 
     def epoch_fn(epoch: int | None = None, n_epochs: int | None = None):
         return stream.epoch(epoch=epoch, n_epochs=n_epochs)

@@ -1,0 +1,33 @@
+"""Fault injection + recovery for the distributed training stack.
+
+``faults``     — seeded, deterministic :class:`FaultPlan`/:class:`FaultInjector`
+                 covering all five injection sites (poisoned batch, prefetch
+                 crash/hang, replan failure, corrupt checkpoint, over-stale
+                 async worker).
+``guard``      — the in-scan non-finite guard primitives the engine uses to
+                 skip poisoned updates (and halt after K consecutive skips).
+``supervisor`` — bounded-retry/backoff/hang-timeout wrapper for host-side
+                 background work (prefetch producer, replan builder).
+``chaos``      — the end-to-end chaos driver behind the CI smoke step
+                 (``python -m repro.resilience.chaos``); imported lazily to
+                 keep this package free of ``repro.api`` import cycles.
+"""
+from repro.resilience.faults import (FaultEvent, FaultInjector, FaultPlan,
+                                     InjectedFault, SITES)
+from repro.resilience.guard import NonFiniteHaltError, all_finite, guard_init
+from repro.resilience.supervisor import (RetryPolicy, Supervisor,
+                                         SupervisorTimeout)
+
+__all__ = [
+    "SITES",
+    "FaultEvent",
+    "FaultPlan",
+    "FaultInjector",
+    "InjectedFault",
+    "NonFiniteHaltError",
+    "all_finite",
+    "guard_init",
+    "RetryPolicy",
+    "Supervisor",
+    "SupervisorTimeout",
+]

@@ -1,0 +1,245 @@
+"""End-to-end chaos driver: one seeded run, faults at every site.
+
+``run_chaos`` builds a small but real experiment — async_ps parameter
+server (k=3 workers), streaming meta-batch pipeline with per-epoch
+re-partitioning, non-finite guard, per-epoch checkpoints — and drives it
+through a fault plan that hits **all five** injection sites:
+
+  * a NaN- and an inf-poisoned batch (guard must skip exactly those steps),
+  * a prefetch-producer crash and a hang (supervisor retry + watchdog),
+  * a replan failure (supervisor retry; degrade path stays bit-stable),
+  * a corrupted checkpoint — the one LATEST points at (resume must fall
+    back to the newest valid checkpoint),
+  * a dead async worker (snapshot aged past max_staleness; drop_overstale
+    must zero its gradient and renormalize survivors).
+
+Three phases prove the recovery contract:
+
+  A. *uninterrupted* — the full plan, epochs 0..n-1 straight through;
+  B. *interrupted*   — a fresh injector with the SAME plan, stopped right
+     after the corrupted checkpoint is written;
+  C. *resume*        — a fresh injector with the SAME plan again,
+     ``resume=True``: LATEST's target is corrupt, the engine falls back
+     one checkpoint and replays — re-firing the replayed epochs' events —
+     to the same final epoch.
+
+The acceptance assertions (also in ``tests/test_resilience.py``):
+every phase completes without intervention, the guard's skipped-step
+count equals the planned poisoned-batch count exactly, and phase C's
+final parameters are **bit-identical** to phase A's.
+
+CLI (the CI chaos-smoke step)::
+
+    python -m repro.resilience.chaos --seed 7 --report CHAOS_report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.resilience.faults import FaultEvent, FaultInjector, FaultPlan
+
+__all__ = ["chaos_config", "chaos_plan", "run_chaos", "main"]
+
+N_EPOCHS = 4
+CORRUPT_AT = 2          # checkpoint (completed-epoch count) to corrupt
+
+
+def chaos_config(workdir: str, *, seed: int = 7):
+    """The chaos experiment: small corpus, async_ps k=3, streaming
+    re-partitioning every epoch, guard + checksums + drop_overstale on,
+    a checkpoint every epoch, supervised retries with a hang watchdog."""
+    from repro.api import (BatchConfig, DataConfig, ExecutionConfig,
+                           ExperimentConfig, ObjectiveConfig,
+                           RepartitionConfig, ResilienceConfig, TrainConfig)
+    return ExperimentConfig(
+        name="chaos",
+        data=DataConfig(n=400, n_classes=8, input_dim=32, manifold_dim=6,
+                        label_ratio=0.2, test_fraction=0.0, seed=seed),
+        batch=BatchConfig(pipeline="metabatch_stream", batch_size=64),
+        repartition=RepartitionConfig(every_n_epochs=1, seed=seed),
+        objective=ObjectiveConfig(pairwise="ref"),
+        train=TrainConfig(n_epochs=N_EPOCHS, n_workers=3, dropout=0.0,
+                          seed=seed),
+        execution=ExecutionConfig(strategy="async_ps", scan_chunk=2,
+                                  prefetch=2, max_staleness=2,
+                                  checkpoint_every=1,
+                                  checkpoint_dir=workdir),
+        resilience=ResilienceConfig(nonfinite_guard=True,
+                                    checkpoint_checksums=True,
+                                    max_retries=2, backoff_base=0.0,
+                                    backoff_max=0.0, hang_timeout=0.25,
+                                    drop_overstale=True, seed=seed))
+
+
+def chaos_plan(seed: int, *, steps_per_epoch: int,
+               chunks_per_epoch: int) -> FaultPlan:
+    """≥1 event per site, coordinates a pure function of ``seed``.  The
+    corrupted checkpoint is pinned at ``CORRUPT_AT`` (so the resume phase
+    has both a corrupt LATEST target and epochs left to replay); other
+    coordinates are drawn from the run grid."""
+    import dataclasses
+
+    rng = np.random.default_rng([int(seed), 0xC4A05])
+
+    def ep(lo=0):   # an epoch with training still ahead of it
+        return int(rng.integers(lo, N_EPOCHS))
+
+    candidates = (
+        FaultEvent("batch", epoch=ep(), step=int(
+            rng.integers(0, steps_per_epoch)), mode="nan"),
+        FaultEvent("batch", epoch=ep(), step=int(
+            rng.integers(0, steps_per_epoch)), mode="inf"),
+        FaultEvent("prefetch", epoch=ep(), step=int(
+            rng.integers(0, chunks_per_epoch)), mode="crash"),
+        FaultEvent("prefetch", epoch=ep(), step=int(
+            rng.integers(0, chunks_per_epoch)), mode="hang", arg=0.6),
+        FaultEvent("replan", epoch=ep(lo=1), mode="fail"),
+        FaultEvent("checkpoint", epoch=CORRUPT_AT, mode="truncate"),
+        FaultEvent("worker", epoch=ep(), step=int(
+            rng.integers(0, chunks_per_epoch)), mode="dead",
+            worker=int(rng.integers(0, 3))),
+    )
+    # Same-site draws can collide on (epoch, step) — shift deterministically
+    # to the next free step so any seed yields a valid (unique-key) plan.
+    grids = {"batch": steps_per_epoch, "prefetch": chunks_per_epoch}
+    seen, events = set(), []
+    for e in candidates:
+        while e.key() in seen:
+            g = grids.get(e.site, 1)
+            e = dataclasses.replace(
+                e, step=(e.step + 1) % g,
+                epoch=e.epoch if g > 1 else e.epoch % N_EPOCHS + 1)
+        seen.add(e.key())
+        events.append(e)
+    return FaultPlan(events=tuple(events))
+
+
+def _run_phase(cfg, plan, *, shared, n_epochs=None, resume=False):
+    """One experiment run with a FRESH injector armed from ``plan`` (so
+    resume replays re-fire the replayed epochs' events identically)."""
+    import dataclasses
+
+    from repro.api import Experiment
+    if n_epochs is not None or resume:
+        cfg = dataclasses.replace(
+            cfg,
+            train=dataclasses.replace(
+                cfg.train, n_epochs=n_epochs or cfg.train.n_epochs),
+            execution=dataclasses.replace(cfg.execution, resume=resume))
+    injector = FaultInjector(plan)
+    exp = Experiment(cfg, injector=injector, **shared)
+    result = exp.run()
+    return result, injector
+
+
+def _params_equal(a, b) -> bool:
+    leaves_a = jax.tree_util.tree_leaves(jax.device_get(a))
+    leaves_b = jax.tree_util.tree_leaves(jax.device_get(b))
+    return len(leaves_a) == len(leaves_b) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(leaves_a, leaves_b))
+
+
+def run_chaos(seed: int = 7, *, workdir: str | None = None) -> dict:
+    """Run the three phases; return the machine-readable chaos report."""
+    import os
+
+    from repro.api import Experiment
+
+    tmp = None
+    if workdir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="chaos-")
+        workdir = tmp.name
+    try:
+        dir_a = os.path.join(workdir, "uninterrupted")
+        dir_b = os.path.join(workdir, "interrupted")
+        cfg_a = chaos_config(dir_a, seed=seed)
+        # Build data/graph/plan once and share across phases: phase
+        # equality must come from determinism of the *training* stack, not
+        # from accidentally comparing different corpora.
+        base = Experiment(cfg_a).build()
+        shared = {"corpus": base.corpus, "eval_data": base.eval_data,
+                  "graph": base.graph, "plan": base.plan,
+                  "hierarchy_cache": base.hierarchy_cache}
+        steps = base.plan.n_meta            # async_ps: 1-worker batches
+        chunks = -(-steps // cfg_a.execution.scan_chunk)
+        plan = chaos_plan(seed, steps_per_epoch=steps,
+                          chunks_per_epoch=chunks)
+
+        res_a, inj_a = _run_phase(cfg_a, plan, shared=shared)
+        cfg_b = chaos_config(dir_b, seed=seed)
+        res_b, inj_b = _run_phase(cfg_b, plan, shared=shared,
+                                  n_epochs=CORRUPT_AT)
+        res_c, inj_c = _run_phase(cfg_b, plan, shared=shared, resume=True)
+
+        planned_skips = sum(
+            1 for e in plan.events if e.site == "batch")
+        skipped_a = int(res_a.history[-1]["guard/skipped_total"])
+        skipped_c = int(res_c.history[-1]["guard/skipped_total"])
+        bit_identical = _params_equal(res_a.params, res_c.params)
+        all_sites_fired = set(
+            f["site"] for f in inj_a.fired()) == set(
+            e.site for e in plan.events)
+        report = {
+            "seed": seed,
+            "plan": plan.to_json(),
+            "phases": {
+                "uninterrupted": {"epochs": len(res_a.history),
+                                  "fired": inj_a.fired(),
+                                  "skipped_total": skipped_a},
+                "interrupted": {"epochs": len(res_b.history),
+                                "fired": inj_b.fired()},
+                "resume": {"epochs": len(res_c.history),
+                           "fired": inj_c.fired(),
+                           "skipped_total": skipped_c},
+            },
+            "planned_poisoned_batches": planned_skips,
+            "all_sites_fired": all_sites_fired,
+            "skip_counts_match": (skipped_a == planned_skips
+                                  and skipped_c == planned_skips),
+            "resume_bit_identical": bit_identical,
+        }
+        report["ok"] = bool(all_sites_fired
+                            and report["skip_counts_match"]
+                            and bit_identical
+                            and len(res_a.history) == N_EPOCHS
+                            and len(res_c.history) == N_EPOCHS)
+        return report
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.resilience.chaos",
+        description="Seeded chaos run: inject faults at every site, "
+                    "assert recovery + bit-identical corrupt-resume.")
+    parser.add_argument("--seed", type=int, default=7)
+    parser.add_argument("--report", default="CHAOS_report.json")
+    parser.add_argument("--workdir", default=None,
+                        help="checkpoint scratch dir (default: a tempdir)")
+    args = parser.parse_args(argv)
+    report = run_chaos(args.seed, workdir=args.workdir)
+    with open(args.report, "w") as f:
+        json.dump(report, f, indent=2)
+    fired = sum(len(p["fired"]) for p in report["phases"].values())
+    print(f"chaos seed={args.seed}: {fired} faults fired across "
+          f"{len(report['plan'])} planned sites; "
+          f"skip_counts_match={report['skip_counts_match']} "
+          f"resume_bit_identical={report['resume_bit_identical']} "
+          f"-> {args.report}")
+    if not report["ok"]:
+        print("chaos run FAILED acceptance checks", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

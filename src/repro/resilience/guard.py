@@ -1,0 +1,59 @@
+"""In-scan non-finite guard primitives.
+
+The engine runs a two-speed guard.  The hot path scans the *plain* step
+body — zero per-step additions — and runs :func:`all_finite` once per
+chunk over the final carry and the stacked per-step metrics (the stacking
+gives per-step visibility, so a transient non-finite the carry later
+masks still trips it), folding the result into a ``tainted`` flag.  The
+run loop fetches the guard scalars once per *window* of chunks; only a
+tainted window (the rare case) is replayed from its window-start backup
+with the *strict* body, which keeps the previous carry (params,
+opt_state, rng, step — all of it) on each poisoned step, as if the batch
+had never been drawn, and recomputes the exact skip accounting.  Clean
+windows therefore pay one finiteness reduction per chunk and one scalar
+fetch per window.  The guard state threaded through the carry is::
+
+    (skipped_total, consecutive, worst_consecutive, tainted)
+
+three int32 scalars plus a bool.  ``skipped_total`` lands in the epoch
+history, ``worst_consecutive`` is a running maximum the engine checks on
+host at window boundaries to realize the halt-after-K-consecutive policy
+(:class:`NonFiniteHaltError`) without a per-step device sync.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["NonFiniteHaltError", "all_finite", "guard_init"]
+
+
+class NonFiniteHaltError(RuntimeError):
+    """Raised by the engine when ``halt_after_consecutive`` or more steps
+    in a row produced a non-finite update (the data or the optimization is
+    broken, not one unlucky batch)."""
+
+
+def guard_init():
+    """Fresh ``(skipped_total, consecutive, worst_consecutive, tainted)``
+    state.  Four *distinct* arrays: the engine donates the carry, and
+    donating one aliased buffer twice is an XLA error."""
+    return (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.bool_))
+
+
+def all_finite(tree) -> jax.Array:
+    """Scalar bool: every inexact-dtype leaf of ``tree`` is fully finite.
+
+    Integer/bool leaves (step counters, ages, schedules) are skipped —
+    they cannot hold NaN/inf and ``jnp.isfinite`` rejects some of them.
+
+    """
+    checks = [jnp.all(jnp.isfinite(leaf))
+              for leaf in jax.tree_util.tree_leaves(tree)
+              if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact)]
+    if not checks:
+        return jnp.bool_(True)
+    return functools.reduce(jnp.logical_and, checks)

@@ -9,15 +9,29 @@ Each leaf's dtype *name* is stored alongside its bytes: numpy serializes
 extension dtypes (bfloat16, float8) as raw void records, and the recorded
 name lets ``load_checkpoint`` view them back losslessly instead of handing
 the caller opaque ``V2`` buffers.
+
+Writes are **atomic**: bytes go to a ``.tmp`` sibling (fsynced) and land
+via ``os.replace``, so a crash mid-save leaves the previous checkpoint
+intact instead of a torn archive.  Each save also drops a ``.sha256``
+sidecar; ``load_checkpoint`` verifies it (and wraps any unreadable
+archive) as :class:`CheckpointCorruptError`, which the engine's fallback
+path uses to skip to the newest *valid* checkpoint.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointCorruptError",
+           "atomic_write_text"]
+
+
+class CheckpointCorruptError(RuntimeError):
+    """The archive's bytes do not match its checksum sidecar, or the
+    archive cannot be read back into the template at all."""
 
 _SEP = "::"
 _DTYPE_PREFIX = "__dtype__" + _SEP
@@ -54,30 +68,87 @@ def _restore_dtype(arr: np.ndarray, name: str) -> np.ndarray:
     return arr.view(dt) if arr.dtype.kind == "V" else arr.astype(dt)
 
 
-def save_checkpoint(path: str, tree) -> None:
+def _atomic_write_bytes(path: str, write_fn) -> None:
+    """Run ``write_fn(file_object)`` against ``path + ".tmp"`` and publish
+    via ``os.replace`` — the file either keeps its old bytes or gets the
+    complete new ones, never a torn mix."""
+    tmp = path + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
+
+
+def atomic_write_text(path: str, text: str) -> None:
+    """Atomic replacement for ``open(path, "w").write(text)`` — used for
+    the LATEST pointer and meta sidecars too, not just archives."""
+    _atomic_write_bytes(path, lambda f: f.write(text.encode()))
+
+
+def _digest(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def save_checkpoint(path: str, tree, *, checksum: bool = True) -> None:
     path = _norm(path)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     dtypes = {_DTYPE_PREFIX + k: np.str_(v.dtype.name)
               for k, v in flat.items()}
-    np.savez(path, **flat, **dtypes)
+    # Write through a file object: np.savez would append a second ".npz"
+    # to a bare ".tmp" path, desyncing the replace target.
+    _atomic_write_bytes(path, lambda f: np.savez(f, **flat, **dtypes))
+    if checksum:
+        atomic_write_text(path + ".sha256", _digest(path) + "\n")
 
 
-def load_checkpoint(path: str, like):
+def load_checkpoint(path: str, like, *, verify: bool = True):
     """Restore into the structure of ``like`` (a template pytree).
 
     Leaves keep the dtype they were *saved* with (the template supplies
     structure and expected shapes only) — restoring must not silently cast
     e.g. a uint32 PRNG key or an int32 step counter to the template's dtype.
+
+    With ``verify=True`` (default) the ``.sha256`` sidecar, when present,
+    is checked before the archive is opened; a mismatch — or any failure
+    to read the archive back into the template — raises
+    :class:`CheckpointCorruptError` so callers can fall back to an older
+    checkpoint instead of crashing on a torn file.
     """
-    data = np.load(_norm(path))
-    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
-    new_leaves = []
-    for p, leaf in leaves_with_path:
-        key = _key(p)
-        arr = data[key]
-        if _DTYPE_PREFIX + key in data.files:   # absent in old checkpoints
-            arr = _restore_dtype(arr, str(data[_DTYPE_PREFIX + key]))
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
-        new_leaves.append(arr)
+    path = _norm(path)
+    sidecar = path + ".sha256"
+    if verify and os.path.exists(sidecar):
+        with open(sidecar) as f:
+            expected = f.read().strip()
+        actual = _digest(path)
+        if actual != expected:
+            raise CheckpointCorruptError(
+                f"{path}: sha256 mismatch (expected {expected[:12]}…, "
+                f"got {actual[:12]}…) — file corrupted after save")
+    try:
+        data = np.load(path)
+        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+        new_leaves = []
+        for p, leaf in leaves_with_path:
+            key = _key(p)
+            arr = data[key]
+            if _DTYPE_PREFIX + key in data.files:  # absent in old checkpoints
+                arr = _restore_dtype(arr, str(data[_DTYPE_PREFIX + key]))
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            new_leaves.append(arr)
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"{path}: unreadable checkpoint ({type(e).__name__}: {e})") from e
     return jax.tree_util.tree_unflatten(treedef, new_leaves)

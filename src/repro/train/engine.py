@@ -41,6 +41,7 @@ import queue
 import threading
 import time
 import warnings
+from collections import deque
 from typing import Any, Callable, Iterable, Iterator
 
 import jax
@@ -48,7 +49,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.introspect import accepts_kwarg
-from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.resilience.guard import NonFiniteHaltError, all_finite, guard_init
+from repro.resilience.supervisor import Supervisor
+from repro.train.checkpoint import (atomic_write_text, load_checkpoint,
+                                    save_checkpoint)
 
 __all__ = [
     "TrainState",
@@ -278,6 +282,8 @@ class AsyncPSStrategy:
             raise ValueError("strategy 'async_ps' needs grad_fn= and opt=")
         self.k = engine.n_workers
         self.max_staleness = engine.max_staleness
+        self.drop_overstale = bool(
+            getattr(engine.resilience, "drop_overstale", False))
 
     # Placement ----------------------------------------------------------
     def place_state(self, state: TrainState) -> TrainState:
@@ -303,12 +309,35 @@ class AsyncPSStrategy:
     def state_of(self, carry) -> TrainState:
         return carry[0]
 
+    # Fault hooks --------------------------------------------------------
+    def bump_age(self, carry, worker: int, amount: float):
+        """Host-side injection hook: age worker ``worker % k`` by
+        ``amount`` pushes (default: past ``max_staleness``, i.e. dead)."""
+        state, snapshots, ages, t = carry
+        amt = int(amount) or (self.max_staleness + 1)
+        ages = ages.at[int(worker) % self.k].add(jnp.int32(amt))
+        return (state, snapshots, ages, t)
+
     # Scan body ----------------------------------------------------------
     def body(self, carry, batch, lr):
         state, snapshots, ages, t = carry
         w = t % self.k
         snap_w = jax.tree.map(lambda s: s[w], snapshots)
         grads, metrics = self.engine.grad_fn(snap_w, batch)
+        if self.drop_overstale:
+            # A snapshot older than max_staleness is a dead/straggler
+            # worker: drop its gradient (zero-gradient server update keeps
+            # params and adagrad accumulators unchanged) and renormalize
+            # the survivors' contribution so the effective per-pass
+            # gradient mass matches the all-alive schedule.
+            live = ages <= self.max_staleness
+            n_live = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
+            scale = jnp.where(live[w], self.k / n_live, 0.0).astype(
+                jnp.float32)
+            grads = jax.tree.map(
+                lambda g: (g * scale).astype(g.dtype), grads)
+            metrics = dict(metrics)
+            metrics["async/dropped"] = 1.0 - jnp.where(live[w], 1.0, 0.0)
         params, opt_state = self.engine.opt.update(
             grads, state.opt_state, state.params, lr)
         ages = ages.at[w].add(1)
@@ -340,6 +369,22 @@ class Engine:
       prefetch: host→device prefetch depth (2 = double buffering; 0 = off).
       checkpoint_every/checkpoint_dir: save the full strategy carry every N
         epochs; ``run(..., resume=True)`` restores the newest one.
+      resilience: an (optional) ``ResilienceConfig``-shaped object enabling
+        the defenses — ``nonfinite_guard`` (plain scan body plus one
+        per-chunk finiteness reduction folded into a ``tainted`` flag,
+        resolved once per ``guard_window`` chunks; tainted windows are
+        replayed from a window-start backup with the strict
+        update-skipping body, which recomputes exact skipped-step
+        accounting), ``halt_after_consecutive`` (host-side
+        :class:`NonFiniteHaltError` policy), ``checkpoint_checksums`` /
+        ``keep_last`` (integrity + retention), ``drop_overstale``
+        (async_ps survivor renormalization), and the supervisor's retry /
+        backoff / hang-timeout knobs for the prefetch producer.
+      injector: an (optional) ``repro.resilience.FaultInjector`` whose
+        batch / prefetch / checkpoint / worker hooks fire at their planned
+        coordinates (chaos testing only — ``None`` in production).
+      supervisor: override the prefetch supervisor (tests inject a
+        no-sleep one); by default one is built from ``resilience``.
     """
 
     def __init__(
@@ -356,6 +401,9 @@ class Engine:
         prefetch: int = 2,
         checkpoint_every: int = 0,
         checkpoint_dir: str | None = None,
+        resilience=None,
+        injector=None,
+        supervisor: Supervisor | None = None,
     ):
         if scan_chunk < 0:
             raise ValueError(f"scan_chunk must be >= 0, got {scan_chunk}")
@@ -374,6 +422,20 @@ class Engine:
         self.prefetch = prefetch
         self.checkpoint_every = checkpoint_every
         self.checkpoint_dir = checkpoint_dir
+        # Resilience knobs are duck-typed off the config object so the
+        # engine stays constructible without repro.api; all defaults
+        # reproduce the pre-resilience behaviour exactly.
+        self.resilience = resilience
+        self.injector = injector
+        self._guard = bool(getattr(resilience, "nonfinite_guard", False))
+        self._halt_after = int(
+            getattr(resilience, "halt_after_consecutive", 0) or 0)
+        self._checksums = bool(
+            getattr(resilience, "checkpoint_checksums", True))
+        self._keep_last = int(getattr(resilience, "keep_last", 0) or 0)
+        if supervisor is None and resilience is not None:
+            supervisor = Supervisor.from_config(resilience, name="prefetch")
+        self.supervisor = supervisor
         if isinstance(strategy, str):
             # Lazy import: keeps repro.train importable without repro.api
             # having been set up first (no cycle either way — api.registry
@@ -381,22 +443,117 @@ class Engine:
             from repro.api.registry import STRATEGY
             strategy = STRATEGY.get(strategy)(self)
         self.strategy = strategy
-        # One jitted scan per chunk length (jit caches by shape); the carry
-        # is donated, so state buffers are reused in place step to step.
-        self._chunk_fn = jax.jit(self._run_chunk, donate_argnums=0)
+        # Guarded chunks resolve in windows of this many chunks: one guard-
+        # scalar fetch (and one replay backup + retained placed chunks) per
+        # window instead of per chunk.
+        self._guard_window = max(
+            1, int(getattr(resilience, "guard_window", 4) or 4))
+        # One jitted scan per chunk length (jit caches by shape).  The
+        # carry is donated so state buffers are reused in place chunk to
+        # chunk — except at a guard window's first chunk, whose *undonated*
+        # input carry survives the call and serves as the free backup a
+        # tainted window's strict replay restarts from.
+        self._chunk_fn = jax.jit(self._run_chunk, donate_argnums=(0,))
+        self._chunk_keep = jax.jit(self._run_chunk)
+        # The strict guard body only compiles if a window ever needs the
+        # replay (lazily, on first call) — clean runs never pay for it.
+        self._strict_fn = jax.jit(self._run_chunk_strict)
 
     # ---------------------------------------------------------------- scan
     def _run_chunk(self, carry, batches, lr):
+        """The hot path.  With the guard on the scan body is *identical* to
+        the unguarded one — no per-step check, count, or select.  The only
+        additions are a single post-scan finiteness reduction over the
+        chunk's final carry and stacked per-step metrics, folded into a
+        ``tainted`` flag threaded through the carry, and a ``guard/skipped``
+        zeros column so metric rows keep one schema.  The run loop fetches
+        the guard scalars once per *window* of chunks; a tainted window is
+        discarded and replayed from its start with
+        :meth:`_run_chunk_strict`, which recomputes the exact skip
+        accounting.  Clean windows — the overwhelming case — pay one
+        finiteness reduction per chunk and one scalar fetch per window."""
         def body(c, b):
             return self.strategy.body(c, b, lr)
 
-        return jax.lax.scan(body, carry, batches)
+        if not self._guard:
+            return jax.lax.scan(body, carry, batches)
 
-    def _host_chunks(self, batch_iter: Iterable) -> Iterator[dict]:
-        """Group host batches into stacked (S, ...) scan chunks."""
+        sc, (skipped, consec, worst, tainted) = carry
+        out_sc, metrics = jax.lax.scan(body, sc, batches)
+        # Stacked metrics give per-step visibility, so even a transient
+        # non-finite that the carry later masks still taints the window.
+        ok = all_finite((out_sc, metrics))
+        n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        metrics = dict(metrics)
+        metrics["guard/skipped"] = jnp.zeros((n_steps,), jnp.float32)
+        # A clean chunk proves every step was fine, so the consecutive
+        # counter resets; on taint its value is garbage anyway — the strict
+        # replay restarts from the window backup's (correct) guard state.
+        guard = (skipped, jnp.where(ok, jnp.int32(0), consec), worst,
+                 jnp.logical_or(tainted, ~ok))
+        return (out_sc, guard), metrics
+
+    def _run_chunk_strict(self, carry, batches, lr):
+        """The replay path for a window the hot pass tainted: the per-step
+        guarded body with exact skip accounting."""
+        def guarded(c, b):
+            sc, (skipped, consec, worst) = c
+            new_sc, metrics = self.strategy.body(sc, b, lr)
+            ok = all_finite((new_sc, metrics))
+            # Skip the whole update on a non-finite step: params, opt
+            # state, rng, step counter — the carry is exactly what it was,
+            # as if the poisoned batch had never been drawn.
+            keep = jax.lax.cond(ok, lambda: new_sc, lambda: sc)
+            bad = (~ok).astype(jnp.int32)
+            consec = jnp.where(ok, jnp.int32(0), consec + 1)
+            # Zero the skipped step's metrics so epoch means stay finite.
+            metrics = jax.tree.map(
+                lambda m: jnp.where(ok, m, jnp.zeros_like(m)), metrics)
+            metrics = dict(metrics)
+            metrics["guard/skipped"] = bad.astype(jnp.float32)
+            guard = (skipped + bad, consec, jnp.maximum(worst, consec))
+            return (keep, guard), metrics
+
+        sc, (skipped, consec, worst, _) = carry
+        (out_sc, counters), metrics = jax.lax.scan(
+            guarded, (sc, (skipped, consec, worst)), batches)
+        return (out_sc, (*counters, jnp.zeros((), jnp.bool_))), metrics
+
+    # Guard carry plumbing: with the guard on, the jitted carry is
+    # ``(strategy_carry, (skipped_total, consecutive, worst, tainted))`` —
+    # these helpers keep strategy lifecycle hooks working on their own
+    # carry.
+    def _wrap_carry(self, strategy_carry, guard_state=None):
+        if not self._guard:
+            return strategy_carry
+        return (strategy_carry, guard_state or guard_init())
+
+    def _split_carry(self, carry):
+        if not self._guard:
+            return carry, None
+        return carry
+
+    def _bump(self, strategy, carry, bump):
+        """Apply a recorded worker-age bump to the (wrapped) carry — used
+        both on first dispatch and when a strict replay re-dispatches the
+        chunks younger than a poisoned one."""
+        if bump is None:
+            return carry
+        sc, gs = self._split_carry(carry)
+        return self._wrap_carry(strategy.bump_age(sc, bump[0], bump[1]), gs)
+
+    def _host_chunks(self, batch_iter: Iterable, epoch: int = 0
+                     ) -> Iterator[dict]:
+        """Group host batches into stacked (S, ...) scan chunks (poisoning
+        any step with an armed batch-site fault event)."""
         pending: list[dict] = []
+        step = 0
         for b in batch_iter:
-            pending.append(_as_host_dict(b))
+            h = _as_host_dict(b)
+            if self.injector is not None:
+                h = self.injector.on_batch(h, epoch=epoch, step=step)
+            step += 1
+            pending.append(h)
             if self.scan_chunk and len(pending) == self.scan_chunk:
                 yield _stack_chunk(pending)
                 pending = []
@@ -409,28 +566,72 @@ class Engine:
 
     def _save(self, carry, epoch: int, history: list[dict]) -> None:
         path = self._ckpt_path(epoch)
-        save_checkpoint(path, carry)
-        with open(path + ".meta.json", "w") as f:
-            json.dump({"epoch": epoch, "history": history}, f)
-        with open(os.path.join(self.checkpoint_dir, _LATEST), "w") as f:
-            f.write(os.path.basename(path))
+        save_checkpoint(path, carry, checksum=self._checksums)
+        atomic_write_text(path + ".meta.json",
+                          json.dumps({"epoch": epoch, "history": history}))
+        atomic_write_text(os.path.join(self.checkpoint_dir, _LATEST),
+                          os.path.basename(path))
+        if self.injector is not None:
+            # Simulated bit rot / torn write of the file LATEST points at —
+            # AFTER the pointer update, so recovery must fall back.
+            self.injector.after_checkpoint(path + ".npz", epoch=epoch)
+        if self._keep_last:
+            self._prune(keep=os.path.basename(path))
+
+    def _prune(self, keep: str) -> None:
+        """Drop all but the newest ``keep_last`` checkpoints (never the one
+        just written).  Epoch numbers order lexically at fixed width."""
+        names = sorted(
+            (f[:-len(".npz")] for f in os.listdir(self.checkpoint_dir)
+             if f.startswith("ckpt_") and f.endswith(".npz")), reverse=True)
+        for base in names[self._keep_last:]:
+            if base == keep:
+                continue
+            stem = os.path.join(self.checkpoint_dir, base)
+            for suffix in (".npz", ".npz.sha256", ".meta.json"):
+                if os.path.exists(stem + suffix):
+                    os.remove(stem + suffix)
 
     def _load_latest(self, template_carry):
-        """(carry, completed_epochs, history) from the newest checkpoint, or
-        None when the directory holds none."""
-        if not self.checkpoint_dir:
+        """(carry, completed_epochs, history) from the newest *valid*
+        checkpoint, or None when the directory holds none.
+
+        The LATEST pointer's target is tried first; if it is corrupt
+        (checksum mismatch, torn archive, unreadable meta) the remaining
+        ``ckpt_*`` files are tried newest-first, each failure downgraded
+        to a warning — a crash or bit flip costs at most the epochs since
+        the last good save, never the run.
+        """
+        if not self.checkpoint_dir or not os.path.isdir(self.checkpoint_dir):
             return None
         pointer = os.path.join(self.checkpoint_dir, _LATEST)
-        if not os.path.exists(pointer):
-            return None
-        with open(pointer) as f:
-            base = f.read().strip()
-        path = os.path.join(self.checkpoint_dir, base)
-        carry = load_checkpoint(path, template_carry)
-        with open(path + ".meta.json") as f:
-            meta = json.load(f)
-        return (self.strategy.place_carry(carry), int(meta["epoch"]),
-                list(meta["history"]))
+        candidates: list[str] = []
+        if os.path.exists(pointer):
+            with open(pointer) as f:
+                candidates.append(f.read().strip())
+        candidates += sorted(
+            (f[:-len(".npz")] for f in os.listdir(self.checkpoint_dir)
+             if f.startswith("ckpt_") and f.endswith(".npz")), reverse=True)
+        seen: set[str] = set()
+        for base in candidates:
+            if not base or base in seen:
+                continue
+            seen.add(base)
+            path = os.path.join(self.checkpoint_dir, base)
+            try:
+                carry = load_checkpoint(path, template_carry,
+                                        verify=self._checksums)
+                with open(path + ".meta.json") as f:
+                    meta = json.load(f)
+                epoch, hist = int(meta["epoch"]), list(meta["history"])
+            except Exception as e:  # noqa: BLE001 — degrade to older ckpt
+                warnings.warn(
+                    f"checkpoint {base} is unusable "
+                    f"({type(e).__name__}: {e}); falling back to the next "
+                    "newest", stacklevel=2)
+                continue
+            return (self.strategy.place_carry(carry), epoch, hist)
+        return None
 
     # ----------------------------------------------------------------- run
     def run(
@@ -478,7 +679,8 @@ class Engine:
         # and caller-owned buffers (e.g. a params pytree reused across runs)
         # must survive this run.
         state = jax.tree.map(lambda x: jnp.array(x), state)
-        carry = strategy.init_carry(strategy.place_state(state))
+        carry = self._wrap_carry(strategy.init_carry(
+            strategy.place_state(state)))
         if resume:
             loaded = self._load_latest(carry)
             if loaded is not None:
@@ -493,14 +695,102 @@ class Engine:
         for epoch in range(start, n_epochs):
             lr = jnp.float32(lr_schedule(epoch))
             t0 = time.time()
-            carry = strategy.begin_epoch(carry)
+            sc, gs = self._split_carry(carry)
+            carry = self._wrap_carry(strategy.begin_epoch(sc), gs)
             metric_chunks = []
+            put = strategy.place_batch
+            if self.injector is not None:
+                put = self.injector.wrap_put(put, epoch=epoch)
+            if self.supervisor is not None:
+                put = functools.partial(self.supervisor.call, put,
+                                        key=f"prefetch@{epoch}")
             chunks = prefetch_to_device(
-                self._host_chunks(epoch_batches(epoch)),
-                strategy.place_batch, self.prefetch)
-            for placed in chunks:
-                carry, metrics = self._chunk_fn(carry, placed, lr)
-                metric_chunks.append(metrics)   # fetched after the epoch
+                self._host_chunks(epoch_batches(epoch), epoch),
+                put, self.prefetch)
+            # Guarded chunks are grouped into windows of ``guard_window``
+            # chunks.  Each window keeps its start carry (undonated — the
+            # replay backup) and its placed chunks; one guard-scalar fetch
+            # per window, resolved one chunk behind the dispatch so the
+            # fetch overlaps the successor's compute.  Each window item is
+            # ``[chunk_idx, placed, metrics]``.
+            win: list = []                  # the window currently filling
+            win_backup = None               # carry before win[0]
+            done: deque = deque()           # (backup, items, carry_out)
+            bumps: dict[int, tuple] = {}    # chunk_idx -> (worker, amount)
+
+            def dispatch(item):
+                nonlocal carry, win_backup
+                first = not win
+                if first:
+                    win_backup = carry
+                carry = self._bump(strategy, carry, bumps.get(item[0]))
+                # The window's first chunk must not donate its input: the
+                # backup has to survive for a possible strict replay.
+                carry, item[2] = (self._chunk_keep if first else
+                                  self._chunk_fn)(carry, item[1], lr)
+                win.append(item)
+                if len(win) == self._guard_window:
+                    done.append((win_backup, win[:], carry))
+                    win.clear()
+
+            def resolve_window():
+                nonlocal carry
+                backup, items, out = done.popleft()
+                gs = self._split_carry(out)[1]
+                skipped, worst, tainted = (
+                    v.item() for v in
+                    jax.device_get((gs[0], gs[2], gs[3])))
+                if tainted:
+                    # Non-finite step(s) somewhere in this window: discard
+                    # the hot pass and replay the window strictly from its
+                    # backup, skipping exactly the poisoned steps; then
+                    # re-dispatch everything younger, which consumed the
+                    # poisoned carry.
+                    cur = backup
+                    for item in items:
+                        cur = self._bump(strategy, cur, bumps.get(item[0]))
+                        cur, item[2] = self._strict_fn(cur, item[1], lr)
+                    gs = self._split_carry(cur)[1]
+                    skipped, worst = (int(v) for v in
+                                      jax.device_get((gs[0], gs[2])))
+                    younger = [it for _, its, _ in done for it in its]
+                    younger += win
+                    done.clear()
+                    win.clear()
+                    carry = cur
+                    for item in younger:
+                        dispatch(item)
+                metric_chunks.extend(item[2] for item in items)
+                if self._halt_after and worst >= self._halt_after:
+                    # Exact at window edges (the strict replay above just
+                    # recomputed it when this window held the poison).
+                    raise NonFiniteHaltError(
+                        f"{worst} consecutive non-finite steps "
+                        f"(halt_after_consecutive={self._halt_after}) "
+                        f"at epoch {epoch}")
+
+            for chunk_idx, placed in enumerate(chunks):
+                if self.injector is not None and \
+                        hasattr(strategy, "bump_age"):
+                    ev = self.injector.take("worker", epoch=epoch,
+                                            step=chunk_idx)
+                    if ev is not None:
+                        # Recorded so a tainted window's re-dispatch of
+                        # this chunk re-applies the same age bump.
+                        bumps[chunk_idx] = (ev.worker, ev.arg)
+                if not self._guard:
+                    carry = self._bump(strategy, carry, bumps.get(chunk_idx))
+                    carry, metrics = self._chunk_fn(carry, placed, lr)
+                    metric_chunks.append(metrics)   # fetched after the epoch
+                    continue
+                dispatch([chunk_idx, placed, None])
+                if done and (win or len(done) > 1):
+                    resolve_window()
+            while done or win:
+                if win and not done:        # roll the final partial window
+                    done.append((win_backup, win[:], carry))
+                    win.clear()
+                resolve_window()
             if not metric_chunks:
                 # e.g. n_meta < n_workers: the pipeline had nothing to yield.
                 warnings.warn(
@@ -513,10 +803,16 @@ class Engine:
                 for k in metric_chunks[0]
             }
             row.update(epoch=epoch, lr=float(lr), seconds=time.time() - t0)
+            if self._guard:
+                row["guard/skipped_total"] = int(
+                    jax.device_get(self._split_carry(carry)[1][0]))
             if eval_fn is not None:
-                row.update(eval_fn(strategy.state_of(carry).params))
+                row.update(eval_fn(
+                    strategy.state_of(self._split_carry(carry)[0]).params))
             history.append(row)
             if self.checkpoint_every and \
                     (epoch + 1) % self.checkpoint_every == 0:
                 self._save(carry, epoch + 1, history)
-        return EngineResult(state=strategy.state_of(carry), history=history)
+        return EngineResult(
+            state=strategy.state_of(self._split_carry(carry)[0]),
+            history=history)

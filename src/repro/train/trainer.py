@@ -73,6 +73,8 @@ def train_dnn_ssl(
     resume: bool = False,
     lr_schedule: Callable[[int], float] | None = None,
     params: dict | None = None,
+    resilience=None,
+    injector=None,
 ) -> TrainResult:
     """Run the paper's training loop over ``pipeline_epoch`` batches.
 
@@ -95,6 +97,12 @@ def train_dnn_ssl(
     checkpoints; ``resume=True`` restores the newest one exactly (rng and
     step included).  ``params`` overrides the seeded init (back-compat for
     callers that pre-initialize).
+
+    ``resilience`` (a ``ResilienceConfig``) turns on the engine's failure
+    defenses — non-finite guard, checkpoint integrity/retention, prefetch
+    supervision, async over-stale dropping; ``injector`` (a
+    ``repro.resilience.FaultInjector``) arms deterministic fault injection
+    for chaos testing.
     """
     opt = opt or adagrad()
     key = jax.random.PRNGKey(seed)
@@ -139,7 +147,8 @@ def train_dnn_ssl(
                     mesh=mesh, n_workers=n_workers,
                     max_staleness=max_staleness, scan_chunk=scan_chunk,
                     prefetch=prefetch, checkpoint_every=checkpoint_every,
-                    checkpoint_dir=checkpoint_dir)
+                    checkpoint_dir=checkpoint_dir, resilience=resilience,
+                    injector=injector)
     # The lr·k scaling rule compensates k-way gradient *averaging*; the
     # async server applies every pushed gradient individually, so its
     # reference regime keeps the base lr.

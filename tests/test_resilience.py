@@ -1,0 +1,436 @@
+"""Chaos suite for the resilience layer (repro.resilience + engine wiring).
+
+Covers the five injection sites and every defense:
+
+  * seeded :class:`FaultPlan` determinism and the consume-on-fire injector
+    ledger;
+  * the in-scan non-finite guard — exact skipped-step accounting, the
+    halt-after-K-consecutive policy, and the bit-reproducibility of a
+    guarded run;
+  * checkpoint integrity — atomic writes survive a mid-write crash,
+    checksum sidecars catch truncation and bit rot, resume falls back past
+    a corrupt LATEST target bit-identically, ``keep_last`` retention;
+  * the thread supervisor — deterministic backoff schedule, recovery /
+    exhaustion ledger, the hang watchdog;
+  * ``MetaBatchStream`` replan failures — supervised retries, deduped
+    warnings, disable-after-K so a broken partitioner cannot spin a
+    warning + thread per epoch;
+  * async_ps over-stale worker dropping (completes + deterministic);
+  * the full three-phase chaos driver (all sites, corrupt-LATEST resume).
+"""
+import dataclasses
+import os
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.config import RepartitionConfig, ResilienceConfig
+from repro.core import SSLHyper, build_affinity_graph, plan_meta_batches
+from repro.data import MetaBatchPipeline, drop_labels, make_corpus
+from repro.data.pipeline import make_metabatch_stream_pipeline
+from repro.models.dnn import DNNConfig
+from repro.resilience import (FaultEvent, FaultInjector, FaultPlan,
+                              InjectedFault, NonFiniteHaltError, RetryPolicy,
+                              Supervisor, SupervisorTimeout, all_finite)
+from repro.train import train_dnn_ssl
+from repro.train.checkpoint import (CheckpointCorruptError,
+                                    _atomic_write_bytes, atomic_write_text,
+                                    load_checkpoint, save_checkpoint)
+
+CFG = DNNConfig(input_dim=24, hidden_dim=32, n_hidden=2, n_classes=6,
+                dropout=0.0)
+HYPER = SSLHyper(0.3, 1e-4, 1e-5)
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    corpus = make_corpus(300, n_classes=6, input_dim=24, manifold_dim=4,
+                         seed=0)
+    labeled = drop_labels(corpus, 0.2, seed=1)
+    graph = build_affinity_graph(corpus.X, k=8)
+    plan = plan_meta_batches(graph, batch_size=64, n_classes=6, seed=0)
+    return labeled, graph, plan
+
+
+def pipeline_of(setup, n_workers: int = 1):
+    labeled, graph, plan = setup
+    return MetaBatchPipeline(labeled, graph, plan, n_workers=n_workers,
+                             seed=0).epoch
+
+
+def params_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(jax.device_get(a)),
+                               jax.tree.leaves(jax.device_get(b))))
+
+
+# ------------------------------------------------------------ fault plans
+def test_fault_plan_is_a_pure_function_of_seed():
+    kw = dict(n_epochs=4, steps_per_epoch=10)
+    a = FaultPlan.from_seed(3, **kw)
+    b = FaultPlan.from_seed(3, **kw)
+    assert a == b
+    assert FaultPlan.from_seed(4, **kw) != a
+    assert {e.site for e in a.events} == {"batch", "prefetch", "replan",
+                                          "checkpoint", "worker"}
+    # Checkpoints are labelled by completed-epoch count — never epoch 0.
+    assert all(e.epoch >= 1 for e in a.for_site("checkpoint"))
+
+
+def test_injector_rejects_colliding_plan_and_fires_once():
+    ev = FaultEvent("replan", epoch=1, mode="fail")
+    with pytest.raises(ValueError, match="colliding"):
+        FaultInjector(FaultPlan(events=(ev, ev)))
+    inj = FaultInjector(FaultPlan(events=(ev,)))
+    with pytest.raises(InjectedFault):
+        inj.maybe_fail("replan", epoch=1)
+    inj.maybe_fail("replan", epoch=1)          # consumed — no re-fire
+    assert [f["site"] for f in inj.fired()] == ["replan"]
+    assert inj.pending() == []
+
+
+@pytest.mark.parametrize("mode,bad", [("nan", np.isnan), ("inf", np.isinf)])
+def test_on_batch_poisons_the_planned_step_only(mode, bad):
+    inj = FaultInjector(FaultPlan(events=(
+        FaultEvent("batch", epoch=0, step=1, mode=mode),)))
+    batch = {"x": np.ones((4, 3), np.float32), "valid": np.ones(4, bool)}
+    clean = inj.on_batch(batch, epoch=0, step=0)
+    assert np.array_equal(clean["x"], batch["x"])
+    poisoned = inj.on_batch(batch, epoch=0, step=1)
+    assert bad(poisoned["x"]).all()
+    assert np.isfinite(batch["x"]).all()       # original untouched
+
+
+def test_wrap_put_crashes_once_then_keeps_chunk_coordinates():
+    inj = FaultInjector(FaultPlan(events=(
+        FaultEvent("prefetch", epoch=0, step=1, mode="crash"),
+        FaultEvent("prefetch", epoch=0, step=2, mode="crash"),)))
+    seen = []
+    put = inj.wrap_put(seen.append, epoch=0)
+    put("c0")
+    with pytest.raises(InjectedFault):
+        put("c1")                              # index did NOT advance
+    put("c1")                                  # retry at the same chunk
+    with pytest.raises(InjectedFault):
+        put("c2")                              # later event kept its slot
+    put("c2")
+    assert seen == ["c0", "c1", "c2"]
+
+
+# ------------------------------------------------------- non-finite guard
+def test_all_finite_skips_integer_leaves():
+    assert bool(all_finite({"i": jnp.arange(3), "x": jnp.ones(2)}))
+    assert not bool(all_finite({"i": jnp.arange(3),
+                                "x": jnp.array([1.0, np.nan])}))
+    assert bool(all_finite({"i": jnp.arange(3)}))      # nothing inexact
+
+
+def guarded_run(setup, injector, *, n_epochs=2, resilience=None, **kw):
+    res = ResilienceConfig(nonfinite_guard=True) \
+        if resilience is None else resilience
+    return train_dnn_ssl(
+        pipeline_of(setup), cfg=CFG, hyper=HYPER, n_epochs=n_epochs,
+        dropout=0.0, base_lr=5e-3, seed=0, pairwise="ref", scan_chunk=2,
+        resilience=res, injector=injector, **kw)
+
+
+def test_guard_skips_exactly_the_poisoned_steps(small_setup):
+    events = (FaultEvent("batch", epoch=0, step=1, mode="nan"),
+              FaultEvent("batch", epoch=1, step=0, mode="inf"))
+    res = guarded_run(small_setup, FaultInjector(FaultPlan(events)))
+    # skipped_total is cumulative (threaded through the scan carry).
+    assert [int(h["guard/skipped_total"]) for h in res.history] == [1, 2]
+    assert all(np.isfinite(leaf).all()
+               for leaf in jax.tree.leaves(jax.device_get(res.params)))
+    # Guarded recovery is bit-reproducible: same plan, same params.
+    again = guarded_run(small_setup, FaultInjector(FaultPlan(events)))
+    assert params_equal(res.params, again.params)
+
+
+def test_without_guard_a_poisoned_batch_corrupts_params(small_setup):
+    events = (FaultEvent("batch", epoch=0, step=1, mode="nan"),)
+    res = guarded_run(small_setup, FaultInjector(FaultPlan(events)),
+                      n_epochs=1, resilience=ResilienceConfig())
+    assert not all(np.isfinite(leaf).all()
+                   for leaf in jax.tree.leaves(jax.device_get(res.params)))
+
+
+def test_halt_after_consecutive_nonfinite_steps(small_setup):
+    events = tuple(FaultEvent("batch", epoch=0, step=s, mode="nan")
+                   for s in (0, 1, 2))
+    res = ResilienceConfig(nonfinite_guard=True, halt_after_consecutive=3)
+    with pytest.raises(NonFiniteHaltError, match="3 consecutive"):
+        train_dnn_ssl(
+            pipeline_of(small_setup), cfg=CFG, hyper=HYPER, n_epochs=1,
+            dropout=0.0, base_lr=5e-3, seed=0, pairwise="ref", scan_chunk=1,
+            resilience=res, injector=FaultInjector(FaultPlan(events)))
+
+
+# ------------------------------------------------- checkpoint integrity
+def test_atomic_write_survives_a_mid_write_crash(tmp_path):
+    path = str(tmp_path / "LATEST")
+    atomic_write_text(path, "ckpt_00001")
+
+    def torn(f):
+        f.write(b"ckpt_000")           # partial bytes, then the crash
+        raise OSError("disk pulled")
+
+    with pytest.raises(OSError, match="disk pulled"):
+        _atomic_write_bytes(path, torn)
+    with open(path) as f:
+        assert f.read() == "ckpt_00001"        # old bytes fully intact
+    assert not os.path.exists(path + ".tmp")   # no debris left behind
+
+
+@pytest.mark.parametrize("corrupt", ["truncate", "bitflip"])
+def test_checksum_catches_corruption(tmp_path, corrupt):
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "step": np.int32(7)}
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, tree)
+    assert os.path.exists(path + ".npz.sha256")
+    loaded = load_checkpoint(path, tree)
+    assert np.array_equal(loaded["w"], tree["w"])
+
+    size = os.path.getsize(path + ".npz")
+    if corrupt == "truncate":
+        os.truncate(path + ".npz", size // 2)
+    else:
+        with open(path + ".npz", "r+b") as f:
+            f.seek(size // 2)
+            byte = f.read(1)
+            f.seek(size // 2)
+            f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.raises(CheckpointCorruptError, match="sha256 mismatch"):
+        load_checkpoint(path, tree)
+
+
+def test_unreadable_archive_is_wrapped_even_without_sidecar(tmp_path):
+    tree = {"w": np.ones(3, np.float32)}
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, tree, checksum=False)
+    assert not os.path.exists(path + ".npz.sha256")
+    os.truncate(path + ".npz", 4)
+    with pytest.raises(CheckpointCorruptError, match="unreadable"):
+        load_checkpoint(path, tree)
+
+
+def test_keep_last_prunes_old_checkpoints(small_setup, tmp_path):
+    train_dnn_ssl(
+        pipeline_of(small_setup), cfg=CFG, hyper=HYPER, n_epochs=3,
+        dropout=0.0, base_lr=5e-3, seed=0, pairwise="ref",
+        checkpoint_every=1, checkpoint_dir=str(tmp_path),
+        resilience=ResilienceConfig(keep_last=2))
+    names = sorted(f for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert names == ["ckpt_00002.npz", "ckpt_00003.npz"]
+    assert sorted(f for f in os.listdir(tmp_path)
+                  if f.endswith(".sha256")) == ["ckpt_00002.npz.sha256",
+                                                "ckpt_00003.npz.sha256"]
+    with open(tmp_path / "LATEST") as f:
+        assert f.read() == "ckpt_00003"
+
+
+def test_resume_falls_back_past_corrupt_latest_bit_identically(
+        small_setup, tmp_path):
+    kw = dict(cfg=CFG, hyper=HYPER, dropout=0.2, base_lr=5e-3, seed=0,
+              pairwise="ref")
+    uninterrupted = train_dnn_ssl(pipeline_of(small_setup), n_epochs=4, **kw)
+    train_dnn_ssl(pipeline_of(small_setup), n_epochs=2, checkpoint_every=1,
+                  checkpoint_dir=str(tmp_path), **kw)
+    # Rot the checkpoint LATEST points at; its sidecar keeps the good hash.
+    target = tmp_path / "ckpt_00002.npz"
+    with open(target, "r+b") as f:
+        f.seek(os.path.getsize(target) // 2)
+        byte = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.warns(UserWarning, match="falling back to the next newest"):
+        resumed = train_dnn_ssl(
+            pipeline_of(small_setup), n_epochs=4, checkpoint_every=1,
+            checkpoint_dir=str(tmp_path), resume=True, **kw)
+    # Fell back to ckpt_00001 and replayed epochs 1..3 — bit-identical.
+    assert params_equal(resumed.params, uninterrupted.params)
+
+
+# ------------------------------------------------------------- supervisor
+def test_supervisor_retries_with_a_deterministic_schedule():
+    sleeps_a, sleeps_b = [], []
+    attempts = {"n": 0}
+
+    def flaky():
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    policy = RetryPolicy(max_retries=3, backoff_base=0.1, backoff_max=1.0,
+                         seed=11)
+    sup = Supervisor(policy, name="t", sleep=sleeps_a.append)
+    assert sup.call(flaky, key="job") == "ok"
+    assert [e["status"] for e in sup.events()] == ["retrying", "retrying",
+                                                   "recovered"]
+    # The backoff schedule is a pure function of (seed, key, attempt).
+    assert sleeps_a == [policy.delay("job", 0), policy.delay("job", 1)]
+    attempts["n"] = 0
+    Supervisor(policy, name="t", sleep=sleeps_b.append).call(flaky, key="job")
+    assert sleeps_b == sleeps_a
+    assert RetryPolicy(seed=12).delay("job", 0) != policy.delay("job", 0)
+
+
+def test_supervisor_reraises_after_exhaustion():
+    sup = Supervisor(RetryPolicy(max_retries=2, backoff_base=0.0,
+                                 backoff_max=0.0), sleep=lambda _: None)
+
+    def broken():
+        raise ValueError("permanently broken")
+
+    with pytest.raises(ValueError, match="permanently broken"):
+        sup.call(broken, key="job")
+    statuses = [e["status"] for e in sup.events()]
+    assert statuses == ["retrying", "retrying", "exhausted"]
+
+
+def test_supervisor_watchdog_abandons_hung_attempts():
+    sup = Supervisor(RetryPolicy(max_retries=1, backoff_base=0.0,
+                                 backoff_max=0.0, hang_timeout=0.05),
+                     sleep=lambda _: None)
+    with pytest.raises(SupervisorTimeout):
+        sup.call(time.sleep, 5.0, key="hang")
+    assert [e["status"] for e in sup.events()] == ["retrying", "exhausted"]
+
+
+def test_supervisor_nonretryable_exceptions_propagate_immediately():
+    sup = Supervisor(RetryPolicy(max_retries=3), sleep=lambda _: None)
+
+    def wrong():
+        raise TypeError("not transient")
+
+    with pytest.raises(TypeError):
+        sup.call(wrong, key="job", retryable=(ValueError,))
+    assert sup.events() == []          # never entered the retry path
+
+
+# ----------------------------------------- stream replan dedupe/disable
+@pytest.fixture(scope="module")
+def stream_setup():
+    corpus = make_corpus(600, n_classes=6, input_dim=24, manifold_dim=4,
+                         seed=0)
+    graph = build_affinity_graph(corpus.X, k=8)
+    plan = plan_meta_batches(graph, batch_size=96, n_classes=6, seed=0)
+    return corpus, graph, plan
+
+
+def failing_stream(setup, **kw):
+    corpus, graph, plan = setup
+    rep = RepartitionConfig(every_n_epochs=1, matching_temperature=0.5,
+                            seed=5)
+    pipeline = make_metabatch_stream_pipeline(
+        corpus, graph, plan, seed=0, with_neighbor=False,
+        repartition=rep, **kw)
+    return pipeline
+
+
+def test_replan_disable_after_consecutive_failures(stream_setup):
+    pipeline = failing_stream(stream_setup, max_replan_failures=2)
+    stream = pipeline.stream
+
+    def broken(epoch):
+        raise RuntimeError("partitioner down")
+
+    stream._synthesize = broken
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        for epoch in range(5):
+            for _ in pipeline(epoch=epoch):
+                pass
+    texts = [str(w.message) for w in caught]
+    fails = [t for t in texts if "partitioner down" in t]
+    # One warning per failed target until the trip — then silence, not a
+    # warning + replan thread per epoch forever.
+    assert len(fails) == 2
+    assert "consecutive failure 2" in fails[-1]
+    assert sum("disabling background replans" in t for t in texts) == 1
+    assert stream._replan_disabled
+    assert stream.swaps == 0
+
+
+def test_supervised_replan_recovers_transient_failure_silently(stream_setup):
+    sup = Supervisor(RetryPolicy(max_retries=2, backoff_base=0.0,
+                                 backoff_max=0.0), sleep=lambda _: None)
+    pipeline = failing_stream(stream_setup, supervisor=sup)
+    stream = pipeline.stream
+    real, boom = stream._synthesize, {"left": 1}
+
+    def flaky(epoch):
+        if boom["left"] > 0:
+            boom["left"] -= 1
+            raise RuntimeError("transient blip")
+        return real(epoch)
+
+    stream._synthesize = flaky
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")         # any warning fails the test
+        for epoch in range(2):
+            for _ in pipeline(epoch=epoch):
+                pass
+    assert stream.swaps == 1                   # epoch-1 replan landed
+    assert any(e["status"] == "recovered" for e in sup.events())
+
+
+# --------------------------------------------------- async_ps drop path
+def test_async_ps_drops_overstale_worker_and_stays_deterministic(
+        small_setup):
+    events = (FaultEvent("worker", epoch=0, step=1, mode="dead", worker=1),)
+    kw = dict(cfg=CFG, hyper=HYPER, n_epochs=2, dropout=0.0, base_lr=5e-3,
+              seed=0, pairwise="ref", strategy="async_ps", n_workers=3,
+              scan_chunk=2, max_staleness=2,
+              resilience=ResilienceConfig(drop_overstale=True))
+    res = train_dnn_ssl(pipeline_of(small_setup),
+                        injector=FaultInjector(FaultPlan(events)), **kw)
+    assert len(res.history) == 2
+    assert sum(h.get("async/dropped", 0.0) for h in res.history) > 0
+    again = train_dnn_ssl(pipeline_of(small_setup),
+                          injector=FaultInjector(FaultPlan(events)), **kw)
+    assert params_equal(res.params, again.params)
+
+
+def test_before_chunk_is_inert_for_strategies_without_bump_age():
+    inj = FaultInjector(FaultPlan(events=(
+        FaultEvent("worker", epoch=0, step=0, mode="dead"),)))
+    carry = object()
+    assert inj.before_chunk(object(), carry, epoch=0, chunk=0) is carry
+    assert len(inj.pending()) == 1             # stays armed, shows pending
+
+
+# ------------------------------------------------- full chaos (3 phases)
+def test_chaos_run_recovers_every_site_bit_identically(tmp_path):
+    """The CI chaos-smoke contract: all five sites fire, every phase
+    completes, guard skip counts match the plan exactly, and resuming
+    past the corrupted LATEST is bit-identical to the uninterrupted run."""
+    from repro.resilience.chaos import run_chaos
+
+    report = run_chaos(seed=7, workdir=str(tmp_path))
+    assert report["all_sites_fired"]
+    assert report["skip_counts_match"]
+    assert report["resume_bit_identical"]
+    assert report["ok"]
+    sites_fired = {f["site"]
+                   for f in report["phases"]["uninterrupted"]["fired"]}
+    assert sites_fired == {"batch", "prefetch", "replan", "checkpoint",
+                           "worker"}
+
+
+def test_chaos_plan_unique_keys_across_seeds():
+    """The collision-shift in chaos_plan yields a valid plan (unique
+    (site, epoch, step) keys) for any seed, not just the CI default."""
+    from repro.resilience.chaos import chaos_plan
+
+    for seed in range(20):
+        plan = chaos_plan(seed, steps_per_epoch=7, chunks_per_epoch=4)
+        keys = [e.key() for e in plan.events]
+        assert len(keys) == len(set(keys)), seed
+        FaultInjector(plan)                    # arms without raising

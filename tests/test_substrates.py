@@ -62,13 +62,14 @@ def test_checkpoint_roundtrip(tmp_path):
 
 
 def test_checkpoint_bare_path_normalized_once(tmp_path):
-    """A bare (no ``.npz``) path must produce ONE file that the same bare
-    path loads back — ``np.savez`` used to append a second extension behind
-    the caller's back and desync save/load."""
+    """A bare (no ``.npz``) path must produce ONE archive (plus its
+    checksum sidecar) that the same bare path loads back — ``np.savez``
+    used to append a second extension behind the caller's back and desync
+    save/load."""
     tree = {"w": jnp.arange(4, dtype=jnp.float32)}
     bare = str(tmp_path / "ckpt")
     save_checkpoint(bare, tree)
-    assert os.listdir(tmp_path) == ["ckpt.npz"]
+    assert sorted(os.listdir(tmp_path)) == ["ckpt.npz", "ckpt.npz.sha256"]
     for p in (bare, bare + ".npz"):
         restored = load_checkpoint(p, jax.tree.map(jnp.zeros_like, tree))
         np.testing.assert_array_equal(np.asarray(restored["w"]),
