@@ -1,21 +1,42 @@
-"""Kernel micro-benchmarks: fused Pallas graph-regularizer and streaming
-top-k vs their jnp oracles (interpret mode on CPU — correctness-
-representative, not TPU timings), plus the jnp oracle timings that the
+"""Kernel micro-benchmarks: fused + block-sparse Pallas graph-regularizer
+and streaming top-k vs their jnp oracles, plus the jnp oracle timings the
 trainer uses on CPU.
 
+Timings are only perf-meaningful on a **compiled** Pallas backend
+(TPU/GPU).  Everywhere else the Pallas kernels run in interpret mode —
+those records are correctness smoke, carry ``"compiled": false``, and the
+JSON is stamped ``"interpret_only": true`` so CI can never gate a speedup
+claim on them.  What *is* backend-independent is the FLOP model: the
+block-sparse density sweep records an analytic per-record ``flops_model``
+whose ratio to the dense sweep equals the tile density exactly — the
+Eq.-3/4 work saved by the compacted grid, provable without a TPU.
+
 Times the *forward* and the *fwd+bwd* (``jax.value_and_grad`` w.r.t. logp)
-paths for ref vs fused, and counts (B, B)-shaped intermediates materialized
-outside Pallas kernels — the fused path must show zero (the whole point of
-the tiled analytic VJP).  ``run(json_path=...)`` additionally dumps the
-records as machine-readable JSON so the perf trajectory is tracked across
-PRs (``benchmarks/run.py`` writes ``BENCH_kernels.json``).
+paths, and counts (B, B)-shaped intermediates materialized outside Pallas
+kernels — the fused and block-sparse paths must show zero (the whole point
+of the tiled analytic VJP).  ``run(json_path=...)`` dumps the records as
+machine-readable JSON so the perf trajectory is tracked across PRs
+(``benchmarks/run.py`` writes ``BENCH_kernels.json``).
+
+CLI (``python -m benchmarks.bench_kernels``):
+
+  * no flags — full record sweep, writes ``BENCH_kernels.json``;
+  * ``--smoke-blocksparse`` — seeded dense ≡ block-sparse bitwise check on
+    a multi-tile full-mask grid plus an oracle check on a sparse mask;
+  * ``--autotune [--dry-run] [--out PATH]`` — sweep tile candidates per
+    kernel on the *current* backend and persist the winners through
+    ``repro.kernels.tuning.save_tile_table`` (rows tagged with the
+    measured backend; validated against the V001–V004 audits at write
+    time).  ``--dry-run`` skips timing and writes the first candidates —
+    CI uses it to prove the sweep plumbing end to end.
 
 Implementations are looked up from the ``repro.api`` PAIRWISE registry —
-the same path the trainer takes when a config says ``pairwise="ref"`` or
-``"fused"``.
+the same path the trainer takes when a config says ``pairwise="fused"`` or
+``"blocksparse"``.
 """
 from __future__ import annotations
 
+import argparse
 import json
 
 import jax
@@ -24,12 +45,48 @@ import numpy as np
 
 from repro.analysis import count_bxb_intermediates
 from repro.api import PAIRWISE
+from repro.core.metabatch import block_layout
 from repro.kernels import ref
+from repro.kernels.tuning import TileSpec, save_tile_table
 
 from .common import timeit
 
-__all__ = ["count_bxb_intermediates", "run"]   # re-export: counter lives in
-#                                                repro.analysis now
+__all__ = ["count_bxb_intermediates", "run", "autotune", "smoke_blocksparse"]
+
+#: Backends whose Pallas timings are real kernel launches.
+_COMPILED_BACKENDS = ("tpu", "gpu")
+
+#: Stamped into the JSON next to ``interpret_only``.
+INTERPRET_NOTE = (
+    "Pallas records with compiled=false ran in interpret mode: correctness "
+    "smoke only, never a basis for speedup claims. Use flops_model for "
+    "density-proportionality; compare timings only between compiled=true "
+    "records.")
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _pallas_compiled() -> bool:
+    return _backend() in _COMPILED_BACKENDS
+
+
+def _pallas_mode() -> str:
+    return _backend() if _pallas_compiled() else "interpret"
+
+
+def _bsp_flops_model(n_active: int, bt: int, classes: int, bc: int) -> int:
+    """Analytic MXU-contraction FLOPs for one fwd+bwd block-sparse sweep.
+
+    Each of the four passes (fwd accumulation, bwd bterm, bwd dL/dlogp,
+    bwd dL/dW) performs one 2·bt·bt·bc-FLOP contraction per active tile
+    per class chunk, so the total is exactly proportional to the number
+    of active tiles — i.e. to the layout density.
+    """
+    bc = min(bc, classes)
+    n_chunks = -(-classes // bc)
+    return 4 * n_active * n_chunks * 2 * bt * bt * bc
 
 
 def _graph_reg_records(quick: bool) -> list[dict]:
@@ -48,7 +105,7 @@ def _graph_reg_records(quick: bool) -> list[dict]:
         W = jnp.asarray(np.abs(rng.normal(size=(B, B)))
                         * (rng.random((B, B)) < 0.05), jnp.float32)
         for name, impl in impls.items():
-            if name == "fused" and B > 1024 and jax.default_backend() != "tpu":
+            if name == "fused" and B > 1024 and not _pallas_compiled():
                 continue   # interpret-mode grid sweeps get slow at B≥2048
             fwd = jax.jit(impl)
             grad = jax.jit(jax.value_and_grad(impl))
@@ -58,15 +115,100 @@ def _graph_reg_records(quick: bool) -> list[dict]:
             t_bwd = timeit(
                 lambda: grad(logp, W)[1].block_until_ready(),
                 repeats=repeats)
+            mode = _pallas_mode() if name == "fused" else _backend()
             recs.append({
                 "kernel": "graph_reg", "impl": name, "B": B, "C": C,
                 "fwd_us": round(t_fwd, 1), "fwd_bwd_us": round(t_bwd, 1),
                 "bxb_outside_kernels": count_bxb_intermediates(
                     jax.grad(lambda lp: impl(lp, W)), logp, B=B),
-                "mode": ("interpret" if name == "fused"
-                         and jax.default_backend() != "tpu" else
-                         jax.default_backend()),
+                "mode": mode,
+                "compiled": mode != "interpret",
             })
+    return recs
+
+
+def _occ_cases(nt: int) -> list[tuple[str, np.ndarray]]:
+    """Symmetric occupancy masks at increasing block density."""
+    idx = np.arange(nt)
+    return [
+        ("diag", np.eye(nt, dtype=bool)),
+        ("band", np.abs(np.subtract.outer(idx, idx)) <= 1),
+        ("full", np.ones((nt, nt), dtype=bool)),
+    ]
+
+
+def _blocksparse_records(quick: bool) -> list[dict]:
+    """Density sweep: dense-fused vs block-sparse at fixed shape.
+
+    The compacted grid's work (and, on a compiled backend, its time) must
+    track ``flops_model`` — proportional to the tile density, with the
+    ``full`` case matching the dense model exactly.
+    """
+    rng = np.random.default_rng(0)
+    gamma, kappa = 1.0, 1e-4
+    B, C, bt, bc = 512, 39, 128, 512
+    nt = B // bt
+    bsp = PAIRWISE.get("blocksparse")
+    fused = PAIRWISE.get("fused")
+    tiles_b = TileSpec(bi=bt, bc=bc)
+    tiles_d = TileSpec(bi=bt, bj=bt, bc=bc)
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    base = np.abs(rng.normal(size=(B, B))).astype(np.float32)
+    base = (base + base.T) / 2
+    dense_flops = _bsp_flops_model(nt * nt, bt, C, bc)
+    recs = []
+    for name, occ in _occ_cases(nt):
+        mask = np.kron(occ, np.ones((bt, bt), dtype=bool))
+        W_np = np.where(mask, base, 0.0).astype(np.float32)
+        W = jnp.asarray(W_np)
+        lay = block_layout(W_np, bt).arrays()
+
+        def impl(lp, w):
+            return bsp(lp, w, gamma, kappa, layout=lay, tiles=tiles_b)
+
+        fwd = jax.jit(impl)
+        grad = jax.jit(jax.value_and_grad(impl))
+        t_fwd = timeit(lambda: fwd(logp, W).block_until_ready(), repeats=2)
+        t_bwd = timeit(lambda: grad(logp, W)[1].block_until_ready(),
+                       repeats=2)
+        n_active = int(occ.sum())
+        flops = _bsp_flops_model(n_active, bt, C, bc)
+        recs.append({
+            "kernel": "graph_reg_blocksparse", "impl": "blocksparse",
+            "B": B, "C": C, "bt": bt, "case": name,
+            "n_active_tiles": n_active,
+            "density": round(n_active / (nt * nt), 4),
+            "fwd_us": round(t_fwd, 1), "fwd_bwd_us": round(t_bwd, 1),
+            "flops_model": flops,
+            "flops_frac_of_dense": round(flops / dense_flops, 4),
+            "bxb_outside_kernels": count_bxb_intermediates(
+                jax.grad(lambda lp: impl(lp, W)), logp, B=B),
+            "mode": _pallas_mode(),
+            "compiled": _pallas_compiled(),
+        })
+    # Dense-fused baseline on the full mask: the density-1.0 reference the
+    # sweep's flops_frac_of_dense is normalized against.
+    W = jnp.asarray(base)
+
+    def impl_d(lp, w):
+        return fused(lp, w, gamma, kappa, tiles=tiles_d)
+
+    fwd = jax.jit(impl_d)
+    grad = jax.jit(jax.value_and_grad(impl_d))
+    t_fwd = timeit(lambda: fwd(logp, W).block_until_ready(), repeats=2)
+    t_bwd = timeit(lambda: grad(logp, W)[1].block_until_ready(), repeats=2)
+    recs.append({
+        "kernel": "graph_reg_blocksparse", "impl": "fused",
+        "B": B, "C": C, "bt": bt, "case": "dense_baseline",
+        "n_active_tiles": nt * nt, "density": 1.0,
+        "fwd_us": round(t_fwd, 1), "fwd_bwd_us": round(t_bwd, 1),
+        "flops_model": dense_flops, "flops_frac_of_dense": 1.0,
+        "bxb_outside_kernels": count_bxb_intermediates(
+            jax.grad(lambda lp: impl_d(lp, W)), logp, B=B),
+        "mode": _pallas_mode(),
+        "compiled": _pallas_compiled(),
+    })
     return recs
 
 
@@ -81,13 +223,13 @@ def _topk_records(quick: bool) -> list[dict]:
         t_dense = timeit(lambda: f_ref(x).block_until_ready())
         recs.append({"kernel": "rbf_dense", "impl": "ref", "N": N, "D": D,
                      "fwd_us": round(t_dense, 1),
-                     "mode": jax.default_backend()})
+                     "mode": _backend(), "compiled": True})
         f_topk = jax.jit(lambda a: ref.knn_topk_ref(a, a, k,
                                                     exclude_self=True))
         t_topk_ref = timeit(lambda: f_topk(x)[0].block_until_ready())
         recs.append({"kernel": "knn_topk", "impl": "ref", "N": N, "D": D,
                      "k": k, "fwd_us": round(t_topk_ref, 1),
-                     "mode": jax.default_backend()})
+                     "mode": _backend(), "compiled": True})
         if quick:
             t_stream = timeit(
                 lambda: knn_topk_pallas(x, x, k, exclude_self=True)[0]
@@ -95,28 +237,206 @@ def _topk_records(quick: bool) -> list[dict]:
             recs.append({"kernel": "knn_topk", "impl": "pallas_stream",
                          "N": N, "D": D, "k": k,
                          "fwd_us": round(t_stream, 1),
-                         "mode": ("interpret"
-                                  if jax.default_backend() != "tpu"
-                                  else "tpu")})
+                         "mode": _pallas_mode(),
+                         "compiled": _pallas_compiled()})
     return recs
 
 
 def run(quick: bool = True, json_path: str | None = None) -> list[str]:
-    recs = _graph_reg_records(quick) + _topk_records(quick)
+    recs = (_graph_reg_records(quick) + _blocksparse_records(quick)
+            + _topk_records(quick))
     if json_path:
         with open(json_path, "w") as fh:
-            json.dump({"backend": jax.default_backend(), "records": recs},
+            json.dump({"backend": _backend(),
+                       "interpret_only": not _pallas_compiled(),
+                       "note": INTERPRET_NOTE,
+                       "records": recs},
                       fh, indent=2)
     rows = []
     for r in recs:
         shape = f"B{r['B']}" if "B" in r else f"N{r['N']}"
+        if "case" in r:
+            shape += f"_{r['case']}"
+        if "fwd_bwd_us" in r:
+            derived = (f"fwd_bwd={r['fwd_bwd_us']:.1f}us;"
+                       f"bxb={r['bxb_outside_kernels']}")
+            if "density" in r:
+                derived += f";density={r['density']:g}"
+        else:
+            derived = r["mode"]
         rows.append(f"kernel/{r['kernel']}_{r['impl']}_{shape},"
-                    f"{r['fwd_us']:.1f},"
-                    + (f"fwd_bwd={r['fwd_bwd_us']:.1f}us;"
-                       f"bxb={r['bxb_outside_kernels']}"
-                       if "fwd_bwd_us" in r else r["mode"]))
+                    f"{r['fwd_us']:.1f},{derived}")
     return rows
 
 
+# ---------------------------------------------------------------- autotune
+#: Candidate tile specs per kernel, swept by ``--autotune`` on the current
+#: backend.  All block-sparse candidates share bi (= the layout's bt): the
+#: tile edge is fixed by the batch pipeline, only the class chunk is free.
+_AUTOTUNE_CANDIDATES: dict[str, tuple[TileSpec, ...]] = {
+    "graph_reg": (TileSpec(bi=128, bj=128, bc=256),
+                  TileSpec(bi=128, bj=128, bc=512)),
+    "graph_reg_blocksparse": (TileSpec(bi=128, bc=256),
+                              TileSpec(bi=128, bc=512)),
+}
+
+_AUTOTUNE_SHAPE = (512, 39)   # representative (B, C) sweep shape
+
+
+def _autotune_time(kernel: str, ts: TileSpec, logp, W, lay) -> float:
+    gamma, kappa = 1.0, 1e-4
+    if kernel == "graph_reg":
+        f = PAIRWISE.get("fused")
+
+        def impl(lp):
+            return f(lp, W, gamma, kappa, tiles=ts)
+    else:
+        f = PAIRWISE.get("blocksparse")
+
+        def impl(lp):
+            return f(lp, W, gamma, kappa, layout=lay, tiles=ts)
+
+    grad = jax.jit(jax.value_and_grad(impl))
+    return timeit(lambda: grad(logp)[1].block_until_ready(), repeats=2)
+
+
+def autotune(out_path: str = "TUNED_tiles.json", *,
+             dry_run: bool = False) -> list[tuple]:
+    """Measure tile candidates on the current backend and persist winners.
+
+    Rows are tagged with the *measured* backend — a table tuned in
+    interpret mode only ever matches interpret-mode (CPU) runs, so tuned
+    interpret timings can never leak into TPU tile selection.  With
+    ``dry_run=True`` nothing is timed: the first candidate per kernel is
+    written, exercising the full sweep → ``save_tile_table`` → V001–V004
+    validation path (what CI runs).
+    """
+    backend = _backend()
+    rng = np.random.default_rng(0)
+    B, C = _AUTOTUNE_SHAPE
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    base = np.abs(rng.normal(size=(B, B))).astype(np.float32)
+    W_np = ((base + base.T) / 2).astype(np.float32)
+    W = jnp.asarray(W_np)
+    rows_out = []
+    for kernel, cands in _AUTOTUNE_CANDIDATES.items():
+        lay = (block_layout(W_np, cands[0].bi).arrays()
+               if kernel == "graph_reg_blocksparse" else None)
+        best, best_t = cands[0], None
+        for ts in cands:
+            if dry_run:
+                print(f"autotune[{kernel}] {ts} -> dry-run (not timed)")
+                continue
+            t = _autotune_time(kernel, ts, logp, W, lay)
+            print(f"autotune[{kernel}] {ts} -> {t:.1f}us")
+            if best_t is None or t < best_t:
+                best, best_t = ts, t
+        label = "first candidate" if dry_run else f"{best_t:.1f}us"
+        print(f"autotune[{kernel}] winner ({backend}): {best} [{label}]")
+        rows_out.append((kernel, backend, None, best))
+    save_tile_table(out_path, rows_out)
+    print(f"wrote {out_path} ({len(rows_out)} rows, backend={backend}, "
+          f"validated V001-V004)")
+    return rows_out
+
+
+# ------------------------------------------------------------------- smoke
+def smoke_blocksparse() -> None:
+    """Seeded dense ≡ block-sparse equivalence smoke (the CI gate).
+
+    Full mask on a multi-tile grid: fwd, dL/dlogp and dL/dW must match the
+    dense fused kernel *bitwise* (same tiles, same accumulation order).
+    Sparse mask: value and dL/dlogp must match the jnp oracle over the
+    full W, and dL/dW must agree on the mask and be zero off it.
+    """
+    from repro.kernels.ops import (graph_regularizer_blocksparse,
+                                   graph_regularizer_fused)
+
+    rng = np.random.default_rng(7)
+    gamma, kappa = 1e-3, 1e-4
+    B, C, bt, bc = 128, 16, 32, 8
+    tiles_b = TileSpec(bi=bt, bc=bc)
+    tiles_d = TileSpec(bi=bt, bj=bt, bc=bc)
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    base = rng.random((B, B)).astype(np.float32)
+    W_np = ((base + base.T) / 2).astype(np.float32)
+    W = jnp.asarray(W_np)
+    lay = block_layout(W_np, bt).arrays()
+
+    def f_b(lp, w):
+        return graph_regularizer_blocksparse(lp, w, gamma, kappa,
+                                             layout=lay, tiles=tiles_b)
+
+    def f_d(lp, w):
+        return graph_regularizer_fused(lp, w, gamma, kappa, tiles=tiles_d)
+
+    vb, (glp_b, gw_b) = jax.value_and_grad(f_b, argnums=(0, 1))(logp, W)
+    vd, (glp_d, gw_d) = jax.value_and_grad(f_d, argnums=(0, 1))(logp, W)
+
+    def bitwise(a, b) -> bool:
+        return bool(np.array_equal(
+            np.asarray(a, np.float32).view(np.int32),
+            np.asarray(b, np.float32).view(np.int32)))
+
+    ok_f, ok_lp, ok_w = bitwise(vb, vd), bitwise(glp_b, glp_d), \
+        bitwise(gw_b, gw_d)
+    print(f"full-mask B={B} bt={bt} (grid {B // bt}x{B // bt}): "
+          f"fwd bitwise={ok_f} dlogp bitwise={ok_lp} dW bitwise={ok_w}")
+    if not (ok_f and ok_lp and ok_w):
+        raise SystemExit("blocksparse smoke FAILED: dense/blocksparse "
+                         "bitwise mismatch on full mask")
+
+    # Sparse mask vs the jnp oracle.
+    nt = B // bt
+    occ = np.eye(nt, dtype=bool)
+    occ[0, nt - 1] = occ[nt - 1, 0] = True
+    mask = np.kron(occ, np.ones((bt, bt), dtype=bool))
+    Ws_np = np.where(mask, W_np, 0.0).astype(np.float32)
+    Ws = jnp.asarray(Ws_np)
+    lay_s = block_layout(Ws_np, bt).arrays()
+
+    def f_s(lp, w):
+        return graph_regularizer_blocksparse(lp, w, gamma, kappa,
+                                             layout=lay_s, tiles=tiles_b)
+
+    vs, (glp_s, gw_s) = jax.value_and_grad(f_s, argnums=(0, 1))(logp, Ws)
+    vo, (glp_o, gw_o) = jax.value_and_grad(
+        lambda lp, w: ref.graph_regularizer_ref(lp, w, gamma, kappa),
+        argnums=(0, 1))(logp, Ws)
+    ok_v = bool(np.allclose(vs, vo, rtol=1e-5, atol=1e-6))
+    ok_g = bool(np.allclose(glp_s, glp_o, rtol=1e-5, atol=1e-6))
+    ok_gw = bool(np.allclose(np.asarray(gw_s)[mask],
+                             np.asarray(gw_o)[mask],
+                             rtol=1e-5, atol=1e-6))
+    ok_z = bool(np.all(np.asarray(gw_s)[~mask] == 0.0))
+    dens = occ.sum() / occ.size
+    print(f"sparse-mask density={dens:.3f}: value={ok_v} dlogp={ok_g} "
+          f"dW(on-mask)={ok_gw} dW(off-mask zero)={ok_z}")
+    if not (ok_v and ok_g and ok_gw and ok_z):
+        raise SystemExit("blocksparse smoke FAILED: oracle mismatch on "
+                         "sparse mask")
+    print("blocksparse smoke OK")
+
+
 if __name__ == "__main__":
-    print("\n".join(run(json_path="BENCH_kernels.json")))
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke-blocksparse", action="store_true",
+                    help="seeded dense==blocksparse equivalence check")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep tile candidates, write the tuned table")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="with --autotune: skip timing, still write+validate")
+    ap.add_argument("--out", default="TUNED_tiles.json",
+                    help="tile-table path for --autotune")
+    ap.add_argument("--full", action="store_true",
+                    help="bench the slow large shapes too (quick=False)")
+    cli = ap.parse_args()
+    if cli.smoke_blocksparse:
+        smoke_blocksparse()
+    elif cli.autotune:
+        autotune(cli.out, dry_run=cli.dry_run)
+    else:
+        print("\n".join(run(quick=not cli.full,
+                            json_path="BENCH_kernels.json")))

@@ -24,6 +24,7 @@ from repro.analysis.jaxpr_audit import EntryPoint
 __all__ = [
     "ENTRY_POINTS",
     "graph_reg_fused",
+    "graph_reg_blocksparse",
     "graph_reg_ref",
     "knn_topk",
     "ssl_objective",
@@ -51,6 +52,35 @@ def _build_fused():
             argnums=(0, 1))(logp, W)
 
     return loss_and_grads, _logp_W()
+
+
+def _build_blocksparse():
+    """Block-sparse fwd+bwd on a block-diagonal mask (2 of 4 tiles active).
+
+    The contract matches the dense fused path: 0 dense B×B intermediates
+    outside Pallas kernels in either direction — the bwd's (B, C)-shaped
+    bterm staging array is the only inter-kernel buffer, and C ≪ B here.
+    """
+    import numpy as np
+
+    from repro.core.metabatch import block_layout
+    from repro.kernels.ops import graph_regularizer_blocksparse
+
+    bt = _B // 2
+    Wn = np.zeros((_B, _B), np.float32)
+    Wn[:bt, :bt] = 1.0
+    Wn[bt:, bt:] = 1.0
+    layout = tuple(jnp.asarray(a) for a in block_layout(Wn, bt).arrays())
+    logp, _ = _logp_W()
+    W = jnp.asarray(Wn)
+
+    def loss_and_grads(logp, W):
+        return jax.value_and_grad(
+            lambda lp, w: graph_regularizer_blocksparse(
+                lp, w, _GAMMA, _KAPPA, layout=layout),
+            argnums=(0, 1))(logp, W)
+
+    return loss_and_grads, (logp, W)
 
 
 def _build_ref():
@@ -163,6 +193,10 @@ graph_reg_fused = EntryPoint(
     name="graph_reg_fused", build=_build_fused,
     B=_B, expect_bxb=0)
 
+graph_reg_blocksparse = EntryPoint(
+    name="graph_reg_blocksparse", build=_build_blocksparse,
+    B=_B, expect_bxb=0)
+
 graph_reg_ref = EntryPoint(
     name="graph_reg_ref", build=_build_ref,
     B=_B, expect_bxb=None, canary_min_bxb=3)
@@ -193,6 +227,7 @@ engine_async_ps = EntryPoint(
 #: Audit order (fast kernel traces first, engine traces last).
 ENTRY_POINTS = (
     graph_reg_fused,
+    graph_reg_blocksparse,
     graph_reg_ref,
     knn_topk,
     ssl_objective,

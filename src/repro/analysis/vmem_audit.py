@@ -96,6 +96,7 @@ def _fill(kernel: str, tiles: TileSpec) -> tuple[int, int, int, int]:
     wrapper defaults in ``repro.kernels``)."""
     defaults = {
         "graph_reg": (128, 128, 512, None),
+        "graph_reg_blocksparse": (128, None, 512, None),
         "rbf": (128, 128, None, 256),
         "topk": (128, 512, None, 256),
     }[kernel]
@@ -171,6 +172,92 @@ def _graph_reg_launches(tiles: TileSpec, *, rows: int, classes: int
     return [fwd, bwd_dlogp, bwd_dw]
 
 
+def _blocksparse_launches(tiles: TileSpec, *, rows: int, classes: int
+                          ) -> list[Launch]:
+    """Launch models for the block-sparse regularizer (bi doubles as the
+    square tile edge bt).
+
+    The real kernels window W and the row blocks through *scalar-prefetched*
+    tile-id lists (data-dependent index maps); the static stand-ins below
+    clamp the grid step into the tile-id range [0, nt) — the exact bound
+    ``BlockLayout`` guarantees — so the V003 corner sweep exercises both
+    the first and the last addressable tile.  The tile-id lists themselves
+    live in SMEM (scalar prefetch), not VMEM, and are excluded from the
+    footprint.  Representative list length: a fully dense mask (T = nt²),
+    the worst case for grid size and the case that must stay bit-equal to
+    the dense fused kernel.
+    """
+    bt, _, bc, _ = _fill("graph_reg_blocksparse", tiles)
+    bc = min(bc, classes)
+    nt = -(-rows // bt)
+    P, Cc = nt * bt, _ceil_to(classes, bc)
+    n_c = Cc // bc
+    T = nt * nt
+
+    def tid(t):                        # representative in-bounds tile id
+        return min(t, nt - 1)
+
+    fwd = Launch("graph_reg_blocksparse", "fwd", (T, n_c), (
+        Block("p", (bt, bc), "in", index_map=lambda t, c: (tid(t), c),
+              array_shape=(P, Cc)),
+        Block("logp_j", (bt, bc), "in", index_map=lambda t, c: (tid(t), c),
+              array_shape=(P, Cc)),
+        Block("logp_i", (bt, bc), "in", index_map=lambda t, c: (tid(t), c),
+              array_shape=(P, Cc)),
+        Block("W", (bt, bt), "in",
+              index_map=lambda t, c: (tid(t), tid(t)), array_shape=(P, P)),
+        Block("scalars", (1, 4), "in", index_map=lambda t, c: (0, 0),
+              array_shape=(1, 4)),
+        Block("out", (1, 1), "out", index_map=lambda t, c: (0, 0),
+              array_shape=(1, 1)),
+        Block("acc", (bt, bt), "scratch"),
+        Block("deg", (bt, 1), "scratch"),
+        Block("ent", (bt, 1), "scratch"),
+    ))
+    bwd_bterm = Launch("graph_reg_blocksparse", "bwd_bterm", (n_c, T), (
+        Block("W", (bt, bt), "in",
+              index_map=lambda c, t: (tid(t), tid(t)), array_shape=(P, P)),
+        Block("p_j", (bt, bc), "in", index_map=lambda c, t: (tid(t), c),
+              array_shape=(P, Cc)),
+        Block("bterm", (bt, bc), "out",
+              index_map=lambda c, t: (tid(t), c), array_shape=(P, Cc)),
+        Block("b", (bt, bc), "scratch"),
+    ))
+    bwd_dlogp = Launch("graph_reg_blocksparse", "bwd_dlogp", (n_c, T), (
+        Block("W", (bt, bt), "in",
+              index_map=lambda c, t: (tid(t), tid(t)), array_shape=(P, P)),
+        Block("logp_j", (bt, bc), "in", index_map=lambda c, t: (tid(t), c),
+              array_shape=(P, Cc)),
+        Block("p_i", (bt, bc), "in", index_map=lambda c, t: (tid(t), c),
+              array_shape=(P, Cc)),
+        Block("logp_i", (bt, bc), "in", index_map=lambda c, t: (tid(t), c),
+              array_shape=(P, Cc)),
+        Block("bterm", (bt, bc), "in", index_map=lambda c, t: (tid(t), c),
+              array_shape=(P, Cc)),
+        Block("scalars", (1, 4), "in", index_map=lambda c, t: (0, 0),
+              array_shape=(1, 4)),
+        Block("dlogp", (bt, bc), "out",
+              index_map=lambda c, t: (tid(t), c), array_shape=(P, Cc)),
+        Block("a", (bt, bc), "scratch"),
+        Block("deg", (bt, 1), "scratch"),
+    ))
+    bwd_dw = Launch("graph_reg_blocksparse", "bwd_dw", (nt, nt, n_c), (
+        Block("p_i", (bt, bc), "in", index_map=lambda i, j, c: (i, c),
+              array_shape=(P, Cc)),
+        Block("logp_j", (bt, bc), "in", index_map=lambda i, j, c: (j, c),
+              array_shape=(P, Cc)),
+        Block("logp_i", (bt, bc), "in", index_map=lambda i, j, c: (i, c),
+              array_shape=(P, Cc)),
+        Block("scalars", (1, 4), "in", index_map=lambda i, j, c: (0, 0),
+              array_shape=(1, 4)),
+        Block("dW", (bt, bt), "out", index_map=lambda i, j, c: (i, j),
+              array_shape=(P, P)),
+        Block("acc", (bt, bt), "scratch"),
+        Block("ent", (bt, 1), "scratch"),
+    ))
+    return [fwd, bwd_bterm, bwd_dlogp, bwd_dw]
+
+
 def _rbf_launches(tiles: TileSpec, *, rows: int, cols: int, feat: int
                   ) -> list[Launch]:
     bi, bj, _, bd = _fill("rbf", tiles)
@@ -229,6 +316,10 @@ _MODELS: dict[str, dict] = {
     "graph_reg": {"launches": _graph_reg_launches,
                   # bi is a lane dim too: the bwd transposed-W view (bj, bi).
                   "lane": ("bi", "bj", "bc"), "sublane": ()},
+    # The square tile edge bt rides bi; it is the last axis of every
+    # (bt, bt) W/dW block, so it is lane-constrained like bc.
+    "graph_reg_blocksparse": {"launches": _blocksparse_launches,
+                              "lane": ("bi", "bc"), "sublane": ()},
     "rbf": {"launches": _rbf_launches,
             "lane": ("bj", "bd"), "sublane": ("bi",)},
     "topk": {"launches": _topk_launches,
@@ -239,6 +330,7 @@ _MODELS: dict[str, dict] = {
 #: (max_rows=None): large enough to exercise full-size tiles.
 _DEFAULT_SHAPES = {
     "graph_reg": dict(rows=4096, classes=39),
+    "graph_reg_blocksparse": dict(rows=4096, classes=39),
     "rbf": dict(rows=4096, cols=4096, feat=351),
     "topk": dict(rows=4096, cols=4096, feat=351, k=16),
 }

@@ -134,6 +134,9 @@ class BatchConfig:
     pad_factor: float = 2.4
     pad_headroom: float = 1.25    # metabatch_stream: pinned-pad slack so
                                   # re-partitioned plans fit jitted shapes
+    layout_bt: int | None = None  # tile edge of the per-batch BlockLayout
+                                  # (block-sparse regularizer); None = no
+                                  # layout attached, dense kernels only
 
     def __post_init__(self):
         _require(self.batch_size > 0,
@@ -142,6 +145,10 @@ class BatchConfig:
                  f"pad_factor must be >= 1, got {self.pad_factor}")
         _require(self.pad_headroom >= 1.0,
                  f"pad_headroom must be >= 1, got {self.pad_headroom}")
+        _require(self.layout_bt is None
+                 or (isinstance(self.layout_bt, int) and self.layout_bt > 0),
+                 f"layout_bt must be a positive int or None, "
+                 f"got {self.layout_bt!r}")
         _require(not (self.pipeline == "graph_batch" and self.shuffle_blocks),
                  "pipeline='graph_batch' is the consecutive-mini-block "
                  "baseline; set shuffle_blocks=False (shuffled blocks would "
@@ -197,9 +204,11 @@ class ObjectiveConfig:
 
     ``pairwise`` names a PAIRWISE registry entry — ``"ref"`` (jnp oracle),
     ``"pallas"`` (tiled cross-term kernel), ``"fused"`` (single-pass fused
-    regularizer kernel, fwd + tiled VJP) or ``"auto"`` (fused on TPU, jnp
-    oracle elsewhere).  ``gamma=kappa=0`` recovers the fully-supervised
-    baseline.
+    regularizer kernel, fwd + tiled VJP), ``"blocksparse"`` (the fused
+    kernel over a compacted active-tile grid; needs
+    ``BatchConfig.layout_bt``) or ``"auto"`` (on TPU: block-sparse when
+    the pipeline supplies a layout, else fused; jnp oracle elsewhere).
+    ``gamma=kappa=0`` recovers the fully-supervised baseline.
 
     ``tile_bi``/``tile_bj``/``tile_bc`` pin kernel block sizes (rows ×
     affinity-columns × class-chunk); ``None`` auto-selects from the
@@ -424,6 +433,18 @@ class ExperimentConfig:
                  f"batch.pipeline='metabatch_stream' (got "
                  f"{self.batch.pipeline!r}); only the streaming pipeline "
                  "can swap plans between epochs")
+        _require(self.batch.layout_bt is None
+                 or self.objective.tile_bi is None
+                 or self.batch.layout_bt == self.objective.tile_bi,
+                 f"batch.layout_bt={self.batch.layout_bt} and "
+                 f"objective.tile_bi={self.objective.tile_bi} disagree; the "
+                 "block-sparse kernel's tile edge must match the layout the "
+                 "pipeline builds (leave tile_bi unset to inherit layout_bt)")
+        _require(not (self.objective.pairwise == "blocksparse"
+                      and self.batch.layout_bt is None),
+                 "objective.pairwise='blocksparse' without batch.layout_bt "
+                 "would silently run the dense fused path every step; set "
+                 "layout_bt (or use pairwise='auto')")
 
     @classmethod
     def _sections(cls) -> dict[str, type]:

@@ -137,7 +137,8 @@ class Experiment:
             shuffle_blocks=cfg.batch.shuffle_blocks,
             hierarchy_cache=self._hierarchy_cache(),
             supervisor=self._replan_supervisor(),
-            fault_injector=self.injector)
+            fault_injector=self.injector,
+            layout_bt=cfg.batch.layout_bt)
         self._built = True
         return self
 
@@ -224,9 +225,17 @@ class Experiment:
         strategy = self._strategy()
         # Resolve the pairwise kernel once here (with any pinned tile sizes
         # from the config) and hand the callable down — nothing below this
-        # point touches the registry again.
-        pairwise = resolve_pairwise(cfg.objective.pairwise,
-                                    tiles=cfg.objective.tiles())
+        # point touches the registry again.  A pipeline-built block layout
+        # fixes the kernel's square tile edge: pin bi to layout_bt so the
+        # block-sparse kernel's grid matches the layout the batches carry
+        # (config validation already rejects a conflicting tile_bi).
+        tiles = cfg.objective.tiles()
+        if cfg.batch.layout_bt is not None:
+            from repro.kernels.tuning import TileSpec
+            tiles = tiles or TileSpec()
+            if tiles.bi is None:
+                tiles = dataclasses.replace(tiles, bi=cfg.batch.layout_bt)
+        pairwise = resolve_pairwise(cfg.objective.pairwise, tiles=tiles)
         t0 = time.time()
         res = train_dnn_ssl(
             self.pipeline,

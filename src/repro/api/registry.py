@@ -134,11 +134,17 @@ PIPELINE.register("metabatch_stream",
 #:     analytic VJP (interpret mode off-TPU);
 #:   * ``"fused"``  — the single-pass fused regularizer kernel (fwd + tiled
 #:     VJP), unconditionally Pallas;
-#:   * ``"auto"``   — ``"fused"`` on TPU backends, the jnp oracle elsewhere.
+#:   * ``"blocksparse"`` — the tile-skipping fused kernel driven by a
+#:     ``BlockLayout`` (``layout=`` kwarg); falls back to ``"fused"`` when
+#:     no layout is supplied;
+#:   * ``"auto"``   — on TPU backends ``"blocksparse"`` when a layout is
+#:     available, else ``"fused"``; the jnp oracle elsewhere.
 PAIRWISE = Registry("pairwise")
 PAIRWISE.register("ref", "repro.kernels.ref:graph_reg_pairwise_ref")
 PAIRWISE.register("pallas", "repro.kernels.ops:graph_reg_pairwise_pallas_vjp")
 PAIRWISE.register("fused", "repro.kernels.ops:graph_regularizer_fused")
+PAIRWISE.register("blocksparse",
+                  "repro.kernels.ops:graph_regularizer_blocksparse")
 PAIRWISE.register("auto", "repro.kernels.ops:graph_regularizer_auto")
 
 #: ``(engine) -> strategy`` execution strategies for the unified training
@@ -163,6 +169,8 @@ STRATEGY.register("async_ps", "repro.train.engine:AsyncPSStrategy")
 #: new entry here to put a new compiled path under the CI gate.
 AUDIT = Registry("audit")
 AUDIT.register("graph_reg_fused", "repro.analysis.entrypoints:graph_reg_fused")
+AUDIT.register("graph_reg_blocksparse",
+               "repro.analysis.entrypoints:graph_reg_blocksparse")
 AUDIT.register("graph_reg_ref", "repro.analysis.entrypoints:graph_reg_ref")
 AUDIT.register("knn_topk", "repro.analysis.entrypoints:knn_topk")
 AUDIT.register("ssl_objective", "repro.analysis.entrypoints:ssl_objective")

@@ -29,7 +29,9 @@ from .partition import PartitionResult, partition_graph
 
 __all__ = ["MetaBatchPlan", "build_mini_blocks", "synthesize_meta_batches",
            "batch_graph", "NeighborSampler", "concat_batch_indices",
-           "plan_meta_batches", "epoch_plan_seed", "resynthesize_plan"]
+           "plan_meta_batches", "epoch_plan_seed", "resynthesize_plan",
+           "BlockLayout", "tile_occupancy", "layout_from_occupancy",
+           "block_layout", "plan_layout_budget"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -285,3 +287,189 @@ def concat_batch_indices(
     if j is None:
         return plan.meta_batches[i]
     return np.concatenate([plan.meta_batches[i], plan.meta_batches[j]])
+
+
+# --------------------------------------------------------------------------
+# Block-sparse tile layout (consumed by kernels/graph_reg blocksparse path)
+#
+# After §2 partitioning the concatenated-batch affinity block W is
+# block-structured: most bt×bt tiles off the mini-block diagonal are exact
+# structural zeros.  A ``BlockLayout`` records which tiles are occupied as
+#   * a dense (nt, nt) int32 occupancy mask, and
+#   * two padded active-tile index lists — row-major (CSR-style, drives the
+#     forward / dL/dlogp kernels) and column-major (CSC-style, drives the
+#     Wᵀ·P pass of the VJP) — each entry an (row, col, valid) triple.
+# Both lists share one static length so jitted kernel shapes never change
+# across batches; the padding convention is part of the kernel contract:
+#   * every EMPTY tile row (resp. column) still gets one sentinel entry
+#     (row, 0, valid=0) so the row's output block is visited and written
+#     (Pallas only flushes an output block when the grid visits it), and
+#   * length padding repeats the LAST entry with valid=0 — same (row, col)
+#     as the real tail, so no new accumulation strip starts and the
+#     strip-finalize predicate fires exactly once, at the final pad tile.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """Static tile-occupancy layout of one padded batch affinity block."""
+
+    bt: int                    # square tile edge (rows == cols per tile)
+    nt: int                    # number of tiles per side (padded B / bt)
+    n_active: int              # occupied tiles (<= nt*nt)
+    rows: np.ndarray           # (T,) int32 — row-major list: tile row ids
+    cols: np.ndarray           # (T,) int32 — row-major list: tile col ids
+    valid: np.ndarray          # (T,) int32 — 1 = real tile, 0 = sentinel/pad
+    crows: np.ndarray          # (T,) int32 — col-major list: tile row ids
+    ccols: np.ndarray          # (T,) int32 — col-major list: tile col ids
+    cvalid: np.ndarray         # (T,) int32
+    occ: np.ndarray            # (nt, nt) int32 occupancy mask
+
+    @property
+    def list_len(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def density(self) -> float:
+        """Fraction of tiles occupied — the FLOP ratio vs the dense sweep."""
+        return self.n_active / float(self.nt * self.nt)
+
+    def arrays(self) -> tuple[np.ndarray, ...]:
+        """The 7-tuple the kernels consume (order is the ops contract)."""
+        return (self.rows, self.cols, self.valid,
+                self.crows, self.ccols, self.cvalid, self.occ)
+
+
+def tile_occupancy(W: np.ndarray, bt: int) -> np.ndarray:
+    """(nt, nt) bool mask: tile (i, j) is True iff any W entry in it is != 0.
+
+    Exact occupancy — the block-sparse regularizer over this mask equals
+    the dense regularizer bit-for-bit semantics-wise (a skipped tile is an
+    all-zero tile, contributing nothing to any Eq.-3/4 term).
+    """
+    if W.ndim != 2 or W.shape[0] != W.shape[1]:
+        raise ValueError(f"W must be square, got shape {W.shape}")
+    B = W.shape[0]
+    nt = -(-B // bt)
+    P = nt * bt
+    if P != B:
+        Wp = np.zeros((P, P), dtype=W.dtype)
+        Wp[:B, :B] = W
+    else:
+        Wp = W
+    return Wp.reshape(nt, bt, nt, bt).any(axis=(1, 3))
+
+
+def _tile_list(occ: np.ndarray, *, by_col: bool) -> tuple[np.ndarray, ...]:
+    """Active-tile (rows, cols, valid) in row-major or col-major order,
+    with one (major, 0, valid=0) sentinel per empty major line."""
+    nt = occ.shape[0]
+    if by_col:
+        c, r = np.nonzero(occ.T)        # sorted by col, then row
+        major = c
+    else:
+        r, c = np.nonzero(occ)          # sorted by row, then col
+        major = r
+    present = np.zeros(nt, dtype=bool)
+    present[major] = True
+    missing = np.flatnonzero(~present)
+    zeros = np.zeros(len(missing), dtype=np.int64)
+    if by_col:
+        rows = np.concatenate([r, zeros])
+        cols = np.concatenate([c, missing])
+        order = np.argsort(cols, kind="stable")
+    else:
+        rows = np.concatenate([r, missing])
+        cols = np.concatenate([c, zeros])
+        order = np.argsort(rows, kind="stable")
+    valid = np.concatenate([np.ones(len(r), dtype=np.int32),
+                            np.zeros(len(missing), dtype=np.int32)])
+    return (rows[order].astype(np.int32), cols[order].astype(np.int32),
+            valid[order])
+
+
+def _pad_tile_list(rows, cols, valid, n: int):
+    """Pad to length n by repeating the last entry with valid=0."""
+    cur = len(rows)
+    if cur > n:
+        raise ValueError(
+            f"tile list length {cur} exceeds the pinned layout budget {n}; "
+            f"raise the budget (plan_layout_budget headroom) or the tile "
+            f"size")
+    if cur == n:
+        return rows, cols, valid
+    pad = n - cur
+    rows = np.concatenate([rows, np.full(pad, rows[-1], dtype=np.int32)])
+    cols = np.concatenate([cols, np.full(pad, cols[-1], dtype=np.int32)])
+    valid = np.concatenate([valid, np.zeros(pad, dtype=np.int32)])
+    return rows, cols, valid
+
+
+def layout_from_occupancy(
+    occ: np.ndarray, bt: int, *, list_len: int | None = None
+) -> BlockLayout:
+    """Build the padded index lists from a boolean (nt, nt) occupancy mask."""
+    occ = np.asarray(occ, dtype=bool)
+    if occ.ndim != 2 or occ.shape[0] != occ.shape[1]:
+        raise ValueError(f"occ must be square, got shape {occ.shape}")
+    nt = occ.shape[0]
+    rows, cols, valid = _tile_list(occ, by_col=False)
+    crows, ccols, cvalid = _tile_list(occ, by_col=True)
+    n = max(len(rows), len(crows)) if list_len is None else int(list_len)
+    rows, cols, valid = _pad_tile_list(rows, cols, valid, n)
+    crows, ccols, cvalid = _pad_tile_list(crows, ccols, cvalid, n)
+    return BlockLayout(
+        bt=int(bt), nt=nt, n_active=int(occ.sum()),
+        rows=rows, cols=cols, valid=valid,
+        crows=crows, ccols=ccols, cvalid=cvalid,
+        occ=occ.astype(np.int32))
+
+
+def block_layout(
+    W: np.ndarray, bt: int, *, list_len: int | None = None
+) -> BlockLayout:
+    """BlockLayout of a (padded) dense batch affinity block W."""
+    return layout_from_occupancy(tile_occupancy(W, bt), bt,
+                                 list_len=list_len)
+
+
+def plan_layout_budget(
+    plan: MetaBatchPlan,
+    graph: AffinityGraph,
+    bt: int,
+    pad: int,
+    *,
+    with_neighbor: bool = True,
+    headroom: float = 1.25,
+) -> int:
+    """Static tile-list length covering every batch this plan can emit.
+
+    Walks every Eq.-6 support pair (r, s) with |C_rs| > 0 (plus the
+    neighbourless singletons) and computes the exact padded-tile list
+    length of the assembled [M_r, M_s] batch — active tiles plus one
+    sentinel per empty tile row/column.  The max over pairs, scaled by
+    ``headroom`` (slack for re-partitioned plans) and rounded up to a
+    multiple of 8, is the shared static list length the jitted kernels
+    are shaped with.  Pure host-side preprocessing — nothing here runs
+    per training step.
+    """
+    nt = -(-pad // bt)
+    W = graph.W.tocsr()
+    pairs: list[tuple[int, int | None]] = [(i, None)
+                                           for i in range(plan.n_meta)]
+    if with_neighbor:
+        coo = plan.batch_edges.tocoo()
+        pairs += [(int(i), int(j)) for i, j in zip(coo.row, coo.col)]
+    need = nt  # floor: an all-empty mask still carries nt sentinels
+    for i, j in pairs:
+        idx = concat_batch_indices(plan, i, j)
+        sub = W[idx][:, idx].tocoo()
+        if sub.nnz == 0:
+            continue
+        tr = sub.row // bt
+        tc = sub.col // bt
+        n_active = len(np.unique(tr.astype(np.int64) * nt + tc))
+        n_csr = n_active + (nt - len(np.unique(tr)))
+        n_csc = n_active + (nt - len(np.unique(tc)))
+        need = max(need, n_csr, n_csc)
+    return int(np.ceil(need * headroom / 8.0) * 8)

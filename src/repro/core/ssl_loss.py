@@ -101,6 +101,7 @@ def graph_regularizer(
     kappa: float,
     *,
     pairwise: str | Callable | None = None,
+    layout=None,
 ) -> Array:
     """γ Σ_ij W_ij Hc(p_i,p_j) − (κ + γ Σ_j W_ij) H(p_i)   (Eq. 4 + entropy reg).
 
@@ -110,10 +111,17 @@ def graph_regularizer(
     fused single-pass kernel) compute the *whole* penalty — cross term, row
     degrees and entropy correction — in one sweep, so the separate jnp
     degree/entropy passes below are skipped entirely.
+
+    ``layout`` is the batch's block-sparsity descriptor — the flat array
+    tuple from ``BlockLayout.arrays()`` (or the ``BlockLayout`` itself) —
+    forwarded only to implementations advertising ``accepts_layout`` (the
+    block-sparse kernel and "auto"); others ignore it.
     Returns the summed (not averaged) penalty over the batch.
     """
     impl = _resolve_pairwise(pairwise)
     if impl is not None and getattr(impl, "full_regularizer", False):
+        if layout is not None and getattr(impl, "accepts_layout", False):
+            return impl(logp, W, gamma, kappa, layout=layout)
         return impl(logp, W, gamma, kappa)
     impl = impl or pairwise_cross_entropy_term
     cross = impl(logp, W)
@@ -136,6 +144,7 @@ def ssl_objective(
     *,
     params=None,
     pairwise: str | Callable | None = None,
+    layout=None,
     reduction: str = "mean",
 ) -> tuple[Array, dict]:
     """Decomposed Eq.-3 objective over one (concatenated meta-)batch.
@@ -149,6 +158,9 @@ def ssl_objective(
         "auto") or a ``(logp, W) -> scalar`` callable; None = inline jnp
         oracle.  "fused"/"auto" compute the whole graph regularizer in one
         Pallas sweep (see ``graph_regularizer``).
+      layout: optional block-sparsity descriptor of ``W`` (the array tuple
+        from ``BlockLayout.arrays()``), forwarded to layout-aware pairwise
+        implementations so the kernel skips structurally-zero tiles.
       reduction: 'sum' is the paper-faithful Eq. 2; 'mean' normalizes the
         supervised term by #labeled and the graph terms by B (scale-stable
         across batch sizes; used by the trainer).
@@ -164,7 +176,7 @@ def ssl_objective(
     sup = -jnp.sum(picked * label_mask)
     n_labeled = jnp.maximum(jnp.sum(label_mask), 1.0)
     greg = graph_regularizer(logp, W, hyper.gamma, hyper.kappa,
-                             pairwise=pairwise)
+                             pairwise=pairwise, layout=layout)
     l2 = hyper.weight_decay * l2_penalty(params) if params is not None else jnp.float32(0)
     if reduction == "mean":
         b = logits.shape[0]

@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.core.affinity import AffinityGraph
 from repro.core.metabatch import (MetaBatchPlan, NeighborSampler,
-                                  epoch_plan_seed, resynthesize_plan)
+                                  block_layout, epoch_plan_seed,
+                                  plan_layout_budget, resynthesize_plan)
 from repro.core.partition import HierarchyCache
 from repro.core.partition import partition_graph as partition_graph_default
 from repro.data.synthetic_timit import SyntheticCorpus
@@ -51,6 +52,17 @@ class SSLBatch:
     label_mask: np.ndarray   # (k, P) float {0,1}
     W: np.ndarray            # (k, P, P) dense affinity block
     valid: np.ndarray        # (k, P) bool (padding indicator)
+    # Optional block-sparse layout of W (``BlockLayout.arrays()`` per
+    # worker, stacked along k) — present only when the pipeline was built
+    # with ``layout_bt``; ``None`` fields are dropped before the batch
+    # reaches a device (``engine._as_host_dict``).
+    tile_rows: np.ndarray | None = None    # (k, T) int32, row-major list
+    tile_cols: np.ndarray | None = None    # (k, T) int32
+    tile_valid: np.ndarray | None = None   # (k, T) int32 {0,1}
+    tile_crows: np.ndarray | None = None   # (k, T) int32, col-major list
+    tile_ccols: np.ndarray | None = None   # (k, T) int32
+    tile_cvalid: np.ndarray | None = None  # (k, T) int32 {0,1}
+    tile_occ: np.ndarray | None = None     # (k, nt, nt) int32 occupancy
 
 
 def _pad_to(a: np.ndarray, size: int, axis: int = 0) -> np.ndarray:
@@ -63,20 +75,30 @@ def _pad_to(a: np.ndarray, size: int, axis: int = 0) -> np.ndarray:
 
 
 def _assemble(corpus: SyntheticCorpus, graph: AffinityGraph,
-              idx: np.ndarray, P: int):
-    """Padded (x, y, label_mask, W, valid) arrays for one concat batch."""
-    return (_pad_to(corpus.X[idx], P),
+              idx: np.ndarray, P: int, *, layout_bt: int | None = None,
+              layout_len: int | None = None):
+    """Padded (x, y, label_mask, W, valid) arrays for one concat batch.
+
+    With ``layout_bt`` the tuple is extended by the 7 ``BlockLayout``
+    arrays of the padded W (``layout_len`` pins the static tile-list
+    length so every batch of the run shares one jitted shape).  This runs
+    on the pipeline/prefetch producer thread — zero per-step layout work
+    on the training path.
+    """
+    W = _pad_to(_pad_to(graph.dense_block(idx), P, 0), P, 1)
+    base = (_pad_to(corpus.X[idx], P),
             _pad_to(corpus.y[idx], P),
             _pad_to(corpus.label_mask[idx].astype(np.float32), P),
-            _pad_to(_pad_to(graph.dense_block(idx), P, 0), P, 1),
+            W,
             _pad_to(np.ones(len(idx), bool), P))
+    if layout_bt is None:
+        return base
+    return base + block_layout(W, layout_bt, list_len=layout_len).arrays()
 
 
 def _stack_group(parts) -> SSLBatch:
-    xs, ys, ms, Ws, vs = zip(*parts)
-    return SSLBatch(x=np.stack(xs), y=np.stack(ys),
-                    label_mask=np.stack(ms), W=np.stack(Ws),
-                    valid=np.stack(vs))
+    cols = [np.stack(c) for c in zip(*parts)]
+    return SSLBatch(*cols)   # 5 base columns, +7 tile columns with a layout
 
 
 class MetaBatchPipeline:
@@ -85,7 +107,7 @@ class MetaBatchPipeline:
     def __init__(self, corpus: SyntheticCorpus, graph: AffinityGraph,
                  plan: MetaBatchPlan, *, n_workers: int = 1,
                  pad_factor: float = 2.4, with_neighbor: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, layout_bt: int | None = None):
         self.corpus = corpus
         self.graph = graph
         self.plan = plan
@@ -97,6 +119,12 @@ class MetaBatchPipeline:
         mmax = max(len(m) for m in plan.meta_batches)
         self.pad = int(np.ceil(
             (2 * mmax if with_neighbor else mmax) / 64) * 64)
+        # Static plan => the exact tile-list budget is known up front (no
+        # headroom needed: the plan never changes).
+        self.layout_bt = layout_bt
+        self.layout_len = (None if layout_bt is None else plan_layout_budget(
+            plan, graph, layout_bt, self.pad, with_neighbor=with_neighbor,
+            headroom=1.0))
 
     def _one(self, i: int) -> tuple[np.ndarray, np.ndarray]:
         j = self.sampler.sample(i) if self.with_neighbor else None
@@ -114,7 +142,8 @@ class MetaBatchPipeline:
             for i in group:
                 idx, _ = self._one(int(i))
                 parts.append(_assemble(self.corpus, self.graph, idx,
-                                       self.pad))
+                                       self.pad, layout_bt=self.layout_bt,
+                                       layout_len=self.layout_len))
             yield _stack_group(parts)
 
 
@@ -169,7 +198,8 @@ class MetaBatchStream:
                  pad_headroom: float = 1.25, record_indices: bool = False,
                  hierarchy_cache: HierarchyCache | None = None,
                  supervisor=None, fault_injector=None,
-                 max_replan_failures: int = 3):
+                 max_replan_failures: int = 3,
+                 layout_bt: int | None = None):
         self.corpus = corpus
         self.graph = graph
         self.plan = plan
@@ -232,6 +262,13 @@ class MetaBatchStream:
         base = 2 * mmax if with_neighbor else mmax
         headroom = pad_headroom if self.every > 0 else 1.0
         self.pad = int(np.ceil(base * headroom / 64) * 64)
+        # Tile-list budget pinned like the pad: with re-partitioning on,
+        # ``pad_headroom`` also buys slack for denser re-planned layouts;
+        # ``_fits`` rejects a plan that would overflow either pin.
+        self.layout_bt = layout_bt
+        self.layout_len = (None if layout_bt is None else plan_layout_budget(
+            plan, graph, layout_bt, self.pad, with_neighbor=with_neighbor,
+            headroom=headroom))
         # Snapshots for the builder thread: replans preserve batch size and
         # class count, so the thread never reads the swappable ``plan``.
         self._batch_size = plan.batch_size
@@ -247,7 +284,15 @@ class MetaBatchStream:
     # ------------------------------------------------------------ internals
     def _fits(self, plan: MetaBatchPlan) -> bool:
         mmax = max(len(m) for m in plan.meta_batches)
-        return (2 * mmax if self.with_neighbor else mmax) <= self.pad
+        if (2 * mmax if self.with_neighbor else mmax) > self.pad:
+            return False
+        if self.layout_bt is not None:
+            need = plan_layout_budget(
+                plan, self.graph, self.layout_bt, self.pad,
+                with_neighbor=self.with_neighbor, headroom=1.0)
+            if need > self.layout_len:
+                return False
+        return True
 
     def _synthesize(self, epoch: int) -> MetaBatchPlan:
         # Runs on the builder thread: reads only construction-time
@@ -323,7 +368,8 @@ class MetaBatchStream:
         if not self._fits(plan):
             warnings.warn(
                 f"re-partitioned plan for epoch {target} exceeds the "
-                f"pinned pad {self.pad} (raise pad_headroom — "
+                f"pinned pad {self.pad} or tile-list budget "
+                f"{self.layout_len} (raise pad_headroom — "
                 f"BatchConfig.pad_headroom in the config API); keeping the "
                 "previous plan", stacklevel=4)
             return False
@@ -419,7 +465,8 @@ class MetaBatchStream:
                     [main, plan.meta_batches[j]]))
                 idxs.append(idx)
                 parts.append(_assemble(self.corpus, self.graph, idx,
-                                       self.pad))
+                                       self.pad, layout_bt=self.layout_bt,
+                                       layout_len=self.layout_len))
             if self.record_indices:
                 recorded.append(idxs)
             yield _stack_group(parts)
@@ -435,15 +482,18 @@ class MetaBatchStream:
 # ---------------------------------------------------------------------------
 def make_meta_batch_pipeline(corpus, graph, plan, *, n_workers: int = 1,
                              seed: int = 0, with_neighbor: bool = True,
-                             pad_factor: float = 2.4, **_):
+                             pad_factor: float = 2.4,
+                             layout_bt: int | None = None, **_):
     """The paper's method (§2): meta-batches + Eq.-6 sampled neighbours."""
     return MetaBatchPipeline(corpus, graph, plan, n_workers=n_workers,
                              pad_factor=pad_factor,
-                             with_neighbor=with_neighbor, seed=seed).epoch
+                             with_neighbor=with_neighbor, seed=seed,
+                             layout_bt=layout_bt).epoch
 
 
 def make_graph_batch_pipeline(corpus, graph, plan, *, n_workers: int = 1,
-                              seed: int = 0, pad_factor: float = 2.4, **_):
+                              seed: int = 0, pad_factor: float = 2.4,
+                              layout_bt: int | None = None, **_):
     """Pure graph-partitioned batches — the §2 low-entropy baseline.
 
     Pair with a plan built with ``shuffle_blocks=False`` so each batch is a
@@ -451,7 +501,7 @@ def make_graph_batch_pipeline(corpus, graph, plan, *, n_workers: int = 1,
     """
     return MetaBatchPipeline(corpus, graph, plan, n_workers=n_workers,
                              pad_factor=pad_factor, with_neighbor=False,
-                             seed=seed).epoch
+                             seed=seed, layout_bt=layout_bt).epoch
 
 
 def make_metabatch_stream_pipeline(corpus, graph, plan, *,
@@ -464,7 +514,8 @@ def make_metabatch_stream_pipeline(corpus, graph, plan, *,
                                    record_indices: bool = False,
                                    hierarchy_cache=None, supervisor=None,
                                    fault_injector=None,
-                                   max_replan_failures: int = 3, **_):
+                                   max_replan_failures: int = 3,
+                                   layout_bt: int | None = None, **_):
     """The §2 stream as a first-class pipeline: NeighborSampler + meta-batch
     assembly feeding the engine directly, with optional between-epoch
     stochastic re-partitioning (``repartition`` = a ``RepartitionConfig``-
@@ -484,7 +535,7 @@ def make_metabatch_stream_pipeline(corpus, graph, plan, *,
         shuffle_blocks=shuffle_blocks, pad_headroom=pad_headroom,
         record_indices=record_indices, hierarchy_cache=hierarchy_cache,
         supervisor=supervisor, fault_injector=fault_injector,
-        max_replan_failures=max_replan_failures)
+        max_replan_failures=max_replan_failures, layout_bt=layout_bt)
 
     def epoch_fn(epoch: int | None = None, n_epochs: int | None = None):
         return stream.epoch(epoch=epoch, n_epochs=n_epochs)

@@ -423,3 +423,379 @@ def graph_reg_bwd_pallas(
     dW = _reg_bwd_dw(logp, scalars, bi=bi, bj=bj, bc=bc,
                      interpret=interpret)
     return dlogp, dW
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse variant: compacted grid over active tiles only.
+#
+# The §2 meta-batch W is block-structured — most bt×bt tiles are exact
+# structural zeros.  A ``repro.core.metabatch.BlockLayout`` supplies
+# scalar-prefetched active-tile index lists (row-major for the forward /
+# dL/dlogp sweeps, column-major for the Wᵀ·P pass) so the grid is
+# (n_listed_tiles, C/bc) instead of (B/bt)² × C/bc: MXU work scales with
+# occupied tiles.  Accumulation order within every row strip is identical
+# to the dense fused sweep (j ascending, then class chunks), so a fully
+# dense occupancy mask reproduces the dense kernels bit for bit.
+#
+# Layout padding contract (see metabatch.BlockLayout): every empty tile
+# row/column carries one valid=0 sentinel so its output block is still
+# visited and written, and length padding repeats the last entry with
+# valid=0 so no new strip starts and each strip finalizes exactly once.
+# ---------------------------------------------------------------------------
+DEFAULT_BT = 128
+
+
+def _bsp_tiles(B: int, C: int, bt, bc) -> tuple[int, int]:
+    """Table-selected (bt, bc) with explicit overrides; bt is never clamped
+    to B — it must match the tile size the BlockLayout was built with."""
+    auto = select_tiles("graph_reg_blocksparse", rows=B,
+                        pinned=TileSpec(bi=bt, bc=bc))
+    return (auto.bi or DEFAULT_BT), min(auto.bc or DEFAULT_BC, C)
+
+
+def _bsp_check_layout(B: int, bt: int, nt: int) -> None:
+    if -(-B // bt) != nt:
+        raise ValueError(
+            f"BlockLayout tile grid ({nt}×{nt}) does not match "
+            f"ceil(B/bt) = ceil({B}/{bt}) = {-(-B // bt)}; the layout must "
+            f"be built with the same tile size the kernel runs with "
+            f"(pin ObjectiveConfig.tile_bt / tiles.bi consistently)")
+
+
+def _bsp_fwd_kernel(rows_ref, cols_ref, valid_ref, p_ref, logpj_ref,
+                    logpi_ref, w_ref, s_ref, out_ref, acc_ref, deg_ref,
+                    ent_ref, *, n_t: int, n_c: int):
+    t, c = pl.program_id(0), pl.program_id(1)
+    row = rows_ref[t]
+    first = (t == 0) | (rows_ref[jnp.maximum(t - 1, 0)] != row)
+    last = (t == n_t - 1) | (rows_ref[jnp.minimum(t + 1, n_t - 1)] != row)
+    live = valid_ref[t] == 1
+
+    @pl.when((t == 0) & (c == 0))
+    def _init_out():
+        out_ref[0, 0] = 0.0
+
+    @pl.when(first & (c == 0))
+    def _init_row_state():
+        deg_ref[...] = jnp.zeros_like(deg_ref)
+        ent_ref[...] = jnp.zeros_like(ent_ref)
+
+    @pl.when(c == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live & (c == 0))
+    def _deg_chunk():
+        deg_ref[...] += jnp.sum(w_ref[...], axis=1, keepdims=True)
+
+    @pl.when(live)
+    def _cross_chunk():
+        # S_tile += P_i(bt, bc) @ logP_j(bt, bc)^T — skipped on sentinels.
+        acc_ref[...] += jax.lax.dot_general(
+            p_ref[...], logpj_ref[...],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(first)
+    def _entropy_chunk():
+        # H(p_i) once per row strip — NOT gated on `live`: an empty tile
+        # row's sentinel still owes the κ-weighted entropy of its rows.
+        ent_ref[...] += -jnp.sum(p_ref[...] * logpi_ref[...], axis=1,
+                                 keepdims=True)
+
+    gc = s_ref[0, 0]
+    kappa = s_ref[0, 1]
+    ge = s_ref[0, 2]
+
+    @pl.when(live & (c == n_c - 1))
+    def _finish_tile():
+        out_ref[0, 0] += -gc * jnp.sum(w_ref[...] * acc_ref[...])
+
+    @pl.when(last & (c == n_c - 1))
+    def _finish_row_strip():
+        out_ref[0, 0] += -jnp.sum((kappa + ge * deg_ref[...]) * ent_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bc", "interpret"))
+def _bsp_forward(
+    logp: jax.Array, W: jax.Array, rows: jax.Array, cols: jax.Array,
+    valid: jax.Array, scalars: jax.Array, *,
+    bt: int, bc: int, interpret: bool,
+) -> jax.Array:
+    B, C = logp.shape
+    nt = -(-B // bt)
+    pad_r, pad_c = nt * bt - B, (-C) % bc
+    p = _pad2(jnp.exp(logp), pad_r, pad_c).astype(jnp.float32)
+    logpp = _pad2(logp, pad_r, pad_c).astype(jnp.float32)
+    Wp = _pad2(W, pad_r, pad_r).astype(jnp.float32)
+    T = rows.shape[0]
+    n_c = (C + pad_c) // bc
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T, n_c),
+        in_specs=[
+            pl.BlockSpec((bt, bc), lambda t, c, rows, cols, valid:
+                         (rows[t], c)),
+            pl.BlockSpec((bt, bc), lambda t, c, rows, cols, valid:
+                         (cols[t], c)),
+            pl.BlockSpec((bt, bc), lambda t, c, rows, cols, valid:
+                         (rows[t], c)),
+            pl.BlockSpec((bt, bt), lambda t, c, rows, cols, valid:
+                         (rows[t], cols[t])),
+            pl.BlockSpec((1, 4), lambda t, c, rows, cols, valid: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda t, c, rows, cols, valid:
+                               (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bt, bt), jnp.float32),   # S tile accumulator
+            pltpu.VMEM((bt, 1), jnp.float32),    # row degrees
+            pltpu.VMEM((bt, 1), jnp.float32),    # row entropies
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_bsp_fwd_kernel, n_t=T, n_c=n_c),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(rows, cols, valid, p, logpp, logpp, Wp, scalars)
+    return out[0, 0]
+
+
+def graph_reg_blocksparse_pallas(
+    logp: jax.Array, W: jax.Array,
+    rows: jax.Array, cols: jax.Array, valid: jax.Array,
+    gamma: float, kappa: float, *, ent_weight: float | None = None,
+    bt: int | None = None, bc: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Block-sparse fused Eq.-3/4 regularizer over the active tiles only.
+
+    ``rows``/``cols``/``valid`` are the row-major active-tile list of a
+    ``BlockLayout`` built with the same ``bt``.  Semantically equal to the
+    dense fused kernel whenever the layout's occupancy covers every
+    nonzero of W (exact by ``tile_occupancy`` construction); bit-identical
+    to it on a fully dense mask.
+    """
+    B, C = logp.shape
+    bt, bc = _bsp_tiles(B, C, bt, bc)
+    ge = gamma if ent_weight is None else ent_weight
+    scalars = jnp.stack([gamma, kappa, ge, 0.0]).astype(
+        jnp.float32).reshape(1, 4)
+    return _bsp_forward(logp, W, rows, cols, valid, scalars,
+                        bt=bt, bc=bc,
+                        interpret=_default_interpret(interpret))
+
+
+def _bsp_bterm_kernel(crows_ref, ccols_ref, cvalid_ref, w_ref, pj_ref,
+                      out_ref, b_ref, *, n_t: int):
+    t = pl.program_id(1)
+    col = ccols_ref[t]
+    first = (t == 0) | (ccols_ref[jnp.maximum(t - 1, 0)] != col)
+    last = (t == n_t - 1) | (ccols_ref[jnp.minimum(t + 1, n_t - 1)] != col)
+    live = cvalid_ref[t] == 1
+
+    @pl.when(first)
+    def _init():
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    @pl.when(live)
+    def _acc():
+        # B += W[j-blk, i-blk]ᵀ @ P[j-blk, c-blk] — same contraction (and
+        # j-ascending order per output block) as the dense dlogp kernel.
+        b_ref[...] += jax.lax.dot_general(
+            w_ref[...], pj_ref[...],
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(last)
+    def _write():
+        out_ref[...] = b_ref[...]
+
+
+def _bsp_dlogp_kernel(rows_ref, cols_ref, valid_ref, w_ref, logpj_ref,
+                      pi_ref, logpi_ref, bterm_ref, s_ref, out_ref,
+                      a_ref, deg_ref, *, n_t: int):
+    t = pl.program_id(1)
+    row = rows_ref[t]
+    first = (t == 0) | (rows_ref[jnp.maximum(t - 1, 0)] != row)
+    last = (t == n_t - 1) | (rows_ref[jnp.minimum(t + 1, n_t - 1)] != row)
+    live = valid_ref[t] == 1
+
+    @pl.when(first)
+    def _init():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        # deg is recomputed per class chunk (same adds, same j order as
+        # the dense kernel's persisted scratch — bit-identical result).
+        deg_ref[...] = jnp.zeros_like(deg_ref)
+
+    @pl.when(live)
+    def _acc():
+        # A += W[i-blk, j-blk] @ logP[j-blk, c-blk]
+        a_ref[...] += jnp.dot(w_ref[...], logpj_ref[...],
+                              preferred_element_type=jnp.float32)
+        deg_ref[...] += jnp.sum(w_ref[...], axis=1, keepdims=True)
+
+    @pl.when(last)
+    def _finish():
+        g, gc, kappa, ge = (s_ref[0, 0], s_ref[0, 1],
+                            s_ref[0, 2], s_ref[0, 3])
+        p = pi_ref[...]
+        coef = kappa + ge * deg_ref[...]
+        out_ref[...] = g * (-gc * (p * a_ref[...] + bterm_ref[...])
+                            + coef * p * (logpi_ref[...] + 1.0))
+
+
+def _bsp_dw_kernel(occ_ref, pi_ref, logpj_ref, logpi_ref, s_ref, out_ref,
+                   acc_ref, ent_ref, *, n_t: int, n_c: int):
+    i, j, c = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    live = occ_ref[i * n_t + j] == 1
+
+    @pl.when(c == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((j == 0) & (c == 0))
+    def _init_ent():
+        ent_ref[...] = jnp.zeros_like(ent_ref)
+
+    @pl.when(live)
+    def _acc():
+        # The MXU contraction is the only per-tile cost that matters and
+        # is skipped on unoccupied tiles; the (dense) dW output block is
+        # still written every tile so every gradient entry is defined.
+        acc_ref[...] += jax.lax.dot_general(
+            pi_ref[...], logpj_ref[...],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _entropy_chunk():
+        ent_ref[...] += -jnp.sum(pi_ref[...] * logpi_ref[...], axis=1,
+                                 keepdims=True)
+
+    @pl.when(c == n_c - 1)
+    def _finish():
+        g, gc, ge = s_ref[0, 0], s_ref[0, 1], s_ref[0, 3]
+        val = -g * (gc * acc_ref[...] + ge * ent_ref[...])
+        out_ref[...] = jnp.where(live, val, jnp.zeros_like(val))
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bc", "interpret"))
+def _bsp_bwd(
+    logp: jax.Array, W: jax.Array,
+    rows: jax.Array, cols: jax.Array, valid: jax.Array,
+    crows: jax.Array, ccols: jax.Array, cvalid: jax.Array,
+    occ: jax.Array, scalars: jax.Array, *,
+    bt: int, bc: int, interpret: bool,
+) -> tuple[jax.Array, jax.Array]:
+    B, C = logp.shape
+    nt = occ.shape[0]
+    _bsp_check_layout(B, bt, nt)
+    pad_r, pad_c = nt * bt - B, (-C) % bc
+    p = _pad2(jnp.exp(logp), pad_r, pad_c).astype(jnp.float32)
+    logpp = _pad2(logp, pad_r, pad_c).astype(jnp.float32)
+    Wp = _pad2(W, pad_r, pad_r).astype(jnp.float32)
+    P, Cc = nt * bt, C + pad_c
+    T = rows.shape[0]
+    n_c = Cc // bc
+    # Pass 1 — column-major sweep: bterm[i-blk, c-blk] = Σ_j Wᵀ·P.
+    bterm = pl.pallas_call(
+        functools.partial(_bsp_bterm_kernel, n_t=T),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n_c, T),
+            in_specs=[
+                pl.BlockSpec((bt, bt), lambda c, t, cr, cc, cv:
+                             (cr[t], cc[t])),
+                pl.BlockSpec((bt, bc), lambda c, t, cr, cc, cv:
+                             (cr[t], c)),
+            ],
+            out_specs=pl.BlockSpec((bt, bc), lambda c, t, cr, cc, cv:
+                                   (cc[t], c)),
+            scratch_shapes=[pltpu.VMEM((bt, bc), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((P, Cc), jnp.float32),
+        interpret=interpret,
+    )(crows, ccols, cvalid, Wp, p)
+    # Pass 2 — row-major sweep folds A = W·logP, degrees and bterm into
+    # the dlogp tiles.
+    dlogp = pl.pallas_call(
+        functools.partial(_bsp_dlogp_kernel, n_t=T),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n_c, T),
+            in_specs=[
+                pl.BlockSpec((bt, bt), lambda c, t, rows, cols, valid:
+                             (rows[t], cols[t])),
+                pl.BlockSpec((bt, bc), lambda c, t, rows, cols, valid:
+                             (cols[t], c)),
+                pl.BlockSpec((bt, bc), lambda c, t, rows, cols, valid:
+                             (rows[t], c)),
+                pl.BlockSpec((bt, bc), lambda c, t, rows, cols, valid:
+                             (rows[t], c)),
+                pl.BlockSpec((bt, bc), lambda c, t, rows, cols, valid:
+                             (rows[t], c)),
+                pl.BlockSpec((1, 4), lambda c, t, rows, cols, valid:
+                             (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bt, bc), lambda c, t, rows, cols, valid:
+                                   (rows[t], c)),
+            scratch_shapes=[
+                pltpu.VMEM((bt, bc), jnp.float32),   # (W·logP) tile
+                pltpu.VMEM((bt, 1), jnp.float32),    # row degrees
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((P, Cc), jnp.float32),
+        interpret=interpret,
+    )(rows, cols, valid, Wp, logpp, p, logpp, bterm, scalars)
+    # dW — predicated-dense grid: MXU work only on occupied tiles, but
+    # every (dense) output tile is written so the gradient is defined.
+    dw = pl.pallas_call(
+        functools.partial(_bsp_dw_kernel, n_t=nt, n_c=n_c),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nt, nt, n_c),
+            in_specs=[
+                pl.BlockSpec((bt, bc), lambda i, j, c, occf: (i, c)),
+                pl.BlockSpec((bt, bc), lambda i, j, c, occf: (j, c)),
+                pl.BlockSpec((bt, bc), lambda i, j, c, occf: (i, c)),
+                pl.BlockSpec((1, 4), lambda i, j, c, occf: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bt, bt), lambda i, j, c, occf: (i, j)),
+            scratch_shapes=[
+                pltpu.VMEM((bt, bt), jnp.float32),   # S tile
+                pltpu.VMEM((bt, 1), jnp.float32),    # row entropies
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((P, P), jnp.float32),
+        interpret=interpret,
+    )(occ.reshape(-1), p, logpp, logpp, scalars)
+    if pad_r:
+        dw = dw[:B, :B]
+    if pad_c or pad_r:
+        dlogp = dlogp[:B, :C]
+    return dlogp, dw
+
+
+def graph_reg_blocksparse_bwd_pallas(
+    logp: jax.Array, W: jax.Array, g: jax.Array,
+    rows: jax.Array, cols: jax.Array, valid: jax.Array,
+    crows: jax.Array, ccols: jax.Array, cvalid: jax.Array,
+    occ: jax.Array, *,
+    gamma: float, kappa: float, ent_weight: float,
+    bt: int | None = None, bc: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Block-sparse tiled analytic VJP: (dlogp, dW).
+
+    Same scalar convention as ``graph_reg_bwd_pallas``; the index lists
+    and occupancy mask come from the same ``BlockLayout`` as the forward.
+    """
+    B, C = logp.shape
+    bt, bc = _bsp_tiles(B, C, bt, bc)
+    scalars = jnp.stack(
+        [jnp.asarray(g, jnp.float32), jnp.float32(gamma),
+         jnp.float32(kappa), jnp.float32(ent_weight)]).reshape(1, 4)
+    return _bsp_bwd(logp, W, rows, cols, valid, crows, ccols, cvalid, occ,
+                    scalars, bt=bt, bc=bc,
+                    interpret=_default_interpret(interpret))

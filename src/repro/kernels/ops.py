@@ -35,8 +35,9 @@ from functools import partial
 import jax
 
 from . import ref
-from .graph_reg import (graph_reg_bwd_pallas, graph_reg_cross_pallas,
-                        graph_reg_fused_pallas)
+from .graph_reg import (graph_reg_blocksparse_bwd_pallas,
+                        graph_reg_blocksparse_pallas, graph_reg_bwd_pallas,
+                        graph_reg_cross_pallas, graph_reg_fused_pallas)
 from .pairwise import knn_topk_pallas, rbf_affinity_pallas
 from .tuning import TileSpec
 
@@ -44,6 +45,7 @@ __all__ = [
     "graph_reg_pairwise",
     "graph_reg_pairwise_pallas_vjp",
     "graph_regularizer_fused",
+    "graph_regularizer_blocksparse",
     "graph_regularizer_auto",
     "rbf_affinity",
     "knn_topk",
@@ -141,14 +143,108 @@ graph_regularizer_fused.full_regularizer = True
 graph_regularizer_fused.accepts_tiles = True
 
 
+# ---------------------------------------------------------------------------
+# Block-sparse path: same regularizer, compacted grid over active tiles.
+# The BlockLayout index arrays are *traced* integer operands (their
+# cotangents are None); only the scalar triple + tile spec stay nondiff
+# static, exactly as in the dense custom_vjp above.
+# ---------------------------------------------------------------------------
+def _bsp_tile_kwargs(tiles: TileSpec | None) -> dict:
+    if tiles is None:
+        return {}
+    out = {}
+    if tiles.bi is not None:
+        out["bt"] = tiles.bi
+    if tiles.bc is not None:
+        out["bc"] = tiles.bc
+    return out
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(9, 10, 11, 12))
+def _bsp_primal(logp, W, rows, cols, valid, crows, ccols, cvalid, occ,
+                gamma, kappa, ent_weight, tiles):
+    return graph_reg_blocksparse_pallas(
+        logp, W, rows, cols, valid, gamma, kappa, ent_weight=ent_weight,
+        **_bsp_tile_kwargs(tiles))
+
+
+def _bsp_vjp_fwd(logp, W, rows, cols, valid, crows, ccols, cvalid, occ,
+                 gamma, kappa, ent_weight, tiles):
+    out = _bsp_primal(logp, W, rows, cols, valid, crows, ccols, cvalid,
+                      occ, gamma, kappa, ent_weight, tiles)
+    return out, (logp, W, rows, cols, valid, crows, ccols, cvalid, occ)
+
+
+def _bsp_vjp_bwd(gamma, kappa, ent_weight, tiles, res, g):
+    logp, W, rows, cols, valid, crows, ccols, cvalid, occ = res
+    dlogp, dW = graph_reg_blocksparse_bwd_pallas(
+        logp, W, g, rows, cols, valid, crows, ccols, cvalid, occ,
+        gamma=gamma, kappa=kappa, ent_weight=ent_weight,
+        **_bsp_tile_kwargs(tiles))
+    return (dlogp, dW, None, None, None, None, None, None, None)
+
+
+_bsp_primal.defvjp(_bsp_vjp_fwd, _bsp_vjp_bwd)
+
+
+def graph_regularizer_blocksparse(
+        logp: jax.Array, W: jax.Array,
+        gamma: float | None = None, kappa: float | None = None, *,
+        layout=None, tiles: TileSpec | None = None) -> jax.Array:
+    """The ``"blocksparse"`` registry entry: tile-skipping fused Eq.-3/4
+    regularizer driven by a ``repro.core.metabatch.BlockLayout``.
+
+    ``layout`` is the layout's 7-array tuple ``(rows, cols, valid, crows,
+    ccols, cvalid, occ)`` (``BlockLayout.arrays()``) — numpy or traced jnp
+    arrays both work; they ride through the custom_vjp as nondifferentiated
+    operands.  Without a layout the call degrades to the dense fused path,
+    so the entry is safe to select unconditionally.
+    """
+    if layout is None:
+        return graph_regularizer_fused(logp, W, gamma, kappa, tiles=tiles)
+    if hasattr(layout, "arrays"):   # a BlockLayout instance
+        layout = layout.arrays()
+    rows, cols, valid, crows, ccols, cvalid, occ = layout
+    if occ.shape[-1] == 1:
+        # A 1×1 tile grid has no tiles to skip — the dense fused kernel is
+        # the same work without the scalar-prefetch machinery.  (It also
+        # sidesteps a compiler corner: on a single-step grid XLA contracts
+        # the two final scalar accumulations differently across the two
+        # kernel structures, costing 1 ulp of bit-equality.)
+        bt = tiles.bi if tiles is not None else None
+        bc = tiles.bc if tiles is not None else None
+        dense_tiles = (TileSpec(bi=bt, bj=bt, bc=bc)
+                       if (bt is not None or bc is not None) else None)
+        return graph_regularizer_fused(logp, W, gamma, kappa,
+                                       tiles=dense_tiles)
+    if gamma is None:
+        gamma, kappa, ent_weight = 1.0, 0.0, 0.0
+    else:
+        gamma, kappa = float(gamma), float(kappa or 0.0)
+        ent_weight = gamma
+    return _bsp_primal(logp, W, rows, cols, valid, crows, ccols, cvalid,
+                       occ, gamma, kappa, ent_weight, tiles)
+
+
+graph_regularizer_blocksparse.full_regularizer = True
+graph_regularizer_blocksparse.accepts_tiles = True
+graph_regularizer_blocksparse.accepts_layout = True
+
+
 def graph_regularizer_auto(
         logp: jax.Array, W: jax.Array,
         gamma: float | None = None, kappa: float | None = None, *,
         use_pallas: bool | None = None,
-        tiles: TileSpec | None = None) -> jax.Array:
-    """The ``"auto"`` registry entry: fused Pallas kernels on TPU, the jnp
-    oracle elsewhere.  Same dual signature as ``graph_regularizer_fused``."""
+        tiles: TileSpec | None = None, layout=None) -> jax.Array:
+    """The ``"auto"`` registry entry: block-sparse Pallas kernels when the
+    pipeline supplied a BlockLayout, the dense fused kernels otherwise —
+    on TPU backends; the jnp oracle elsewhere (the layout's occupancy is
+    exact, so the oracle over the full W computes the same value).  Same
+    dual signature as ``graph_regularizer_fused``."""
     if _want_pallas(use_pallas):
+        if layout is not None:
+            return graph_regularizer_blocksparse(logp, W, gamma, kappa,
+                                                 layout=layout, tiles=tiles)
         return graph_regularizer_fused(logp, W, gamma, kappa, tiles=tiles)
     if gamma is None:
         return ref.graph_reg_pairwise_ref(logp, W)
@@ -157,6 +253,7 @@ def graph_regularizer_auto(
 
 graph_regularizer_auto.full_regularizer = True
 graph_regularizer_auto.accepts_tiles = True
+graph_regularizer_auto.accepts_layout = True
 
 
 def rbf_affinity(x: jax.Array, y: jax.Array, sigma, *,

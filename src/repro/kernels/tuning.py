@@ -6,15 +6,26 @@ problem shape *and* the backend: on TPU the MXU wants 128-lane-aligned
 blocks and a wide accumulation chunk; in interpret mode (CPU validation)
 fewer, fatter grid steps dominate wall time.
 
-``DEFAULT_TILE_TABLE`` encodes the hand-tuned defaults as ordered
-``(kernel, backend, max_rows, TileSpec)`` rules — first match wins, with
+``DEFAULT_TILE_TABLE`` encodes the default rules as ordered
+``(kernel, backend, max_rows, TileSpec)`` rows — first match wins, with
 ``backend=None`` / ``max_rows=None`` rows acting as wildcards.  Callers go
 through :func:`select_tiles`, which also lets a config *pin* individual
 dims (a pinned dim always wins over the table).
 
+Tables are built through :func:`build_table`, which canonicalizes the row
+order (backend-specific before wildcard, tighter ``max_rows`` bounds
+first) and rejects duplicate match keys — so an unreachable (shadowed)
+row is impossible by construction, not just flagged after the fact by the
+V004 audit.  Measured tables from the ``benchmarks/bench_kernels.py
+--autotune`` sweep are persisted with :func:`save_tile_table` (which
+validates every row through the analysis V001–V004 checks at write time)
+and activated via the ``REPRO_TUNED_TILES`` environment variable or an
+explicit ``table=`` argument.
+
 Tile dims (not every kernel uses all four):
 
-  * ``bi`` — output/row block (rows of ``logp`` / ``x``);
+  * ``bi`` — output/row block (rows of ``logp`` / ``x``); doubles as the
+    square tile edge ``bt`` for the block-sparse regularizer;
   * ``bj`` — column block of the affinity matrix / candidate set;
   * ``bc`` — class-dimension accumulation chunk (graph regularizer);
   * ``bd`` — feature-dimension accumulation chunk (pairwise distances).
@@ -22,9 +33,12 @@ Tile dims (not every kernel uses all four):
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 
 __all__ = ["TileSpec", "DEFAULT_TILE_TABLE", "select_tiles",
-           "default_interpret"]
+           "default_interpret", "build_table", "save_tile_table",
+           "load_tile_table", "active_tile_table"]
 
 
 def default_interpret(interpret: bool | None) -> bool:
@@ -77,9 +91,43 @@ class TileSpec:
         return out
 
 
+def build_table(rows) -> tuple[tuple[str, str | None, int | None, TileSpec],
+                               ...]:
+    """Canonicalize table rows so first-match-wins cannot shadow a row.
+
+    Sort key per kernel: backend-specific rows before ``backend=None``
+    wildcards, then ``max_rows`` ascending with ``None`` (any row count)
+    last.  Under that order an earlier row never covers a later row's
+    match set — the V004 "unreachable row" finding is impossible by
+    construction.  Duplicate ``(kernel, backend, max_rows)`` keys raise.
+    """
+    rows = list(rows)
+    for row in rows:
+        kern, be, max_rows, tiles = row
+        if not isinstance(kern, str) or not isinstance(tiles, TileSpec):
+            raise ValueError(f"malformed tuning row {row!r}")
+        if max_rows is not None and (not isinstance(max_rows, int)
+                                     or max_rows <= 0):
+            raise ValueError(f"max_rows must be a positive int or None in "
+                             f"{row!r}")
+    seen = set()
+    for kern, be, max_rows, _ in rows:
+        key = (kern, be, max_rows)
+        if key in seen:
+            raise ValueError(f"duplicate tuning row for {key}")
+        seen.add(key)
+
+    def order(row):
+        kern, be, max_rows, _ = row
+        return (kern, be is None, be or "",
+                max_rows is None, max_rows or 0)
+
+    return tuple(sorted(rows, key=order))
+
+
 #: Ordered first-match-wins rules: (kernel, backend, max_rows, tiles).
 #: ``backend=None`` matches any backend; ``max_rows=None`` any row count.
-DEFAULT_TILE_TABLE: tuple[tuple[str, str | None, int | None, TileSpec], ...] = (
+DEFAULT_TILE_TABLE: tuple[tuple[str, str | None, int | None, TileSpec], ...] = build_table((
     # Fused graph regularizer: (bi, bj) tiles of the B×B affinity block,
     # bc-wide class chunks accumulated into the VMEM S tile.
     ("graph_reg", "tpu", 512,  TileSpec(bi=128, bj=128, bc=256)),
@@ -88,6 +136,10 @@ DEFAULT_TILE_TABLE: tuple[tuple[str, str | None, int | None, TileSpec], ...] = (
     # Interpret/CPU validation: keep the MXU shape but the narrow chunk —
     # grid-step count dominates, not VMEM pressure.
     ("graph_reg", None,  None, TileSpec(bi=128, bj=128, bc=512)),
+    # Block-sparse graph regularizer: square bt×bt tiles (bi doubles as
+    # bt — it must match the BlockLayout the batch pipeline built).
+    ("graph_reg_blocksparse", "tpu", None, TileSpec(bi=128, bc=512)),
+    ("graph_reg_blocksparse", None,  None, TileSpec(bi=128, bc=512)),
     # Dense RBF affinity block.
     ("rbf", "tpu", 1024, TileSpec(bi=128, bj=128, bd=256)),
     ("rbf", "tpu", None, TileSpec(bi=256, bj=128, bd=256)),
@@ -96,7 +148,71 @@ DEFAULT_TILE_TABLE: tuple[tuple[str, str | None, int | None, TileSpec], ...] = (
     # top-k merge; the running (bi, k) state stays resident in VMEM.
     ("topk", "tpu", None, TileSpec(bi=128, bj=512, bd=256)),
     ("topk", None,  None, TileSpec(bi=128, bj=512, bd=256)),
-)
+))
+
+
+def save_tile_table(path: str, rows, *, validate: bool = True) -> None:
+    """Persist a measured tile table (JSON), validated at write time.
+
+    ``rows`` is an iterable of ``(kernel, backend, max_rows, TileSpec)``.
+    The table is canonicalized through :func:`build_table` and — unless
+    ``validate=False`` — every row is checked against the static VMEM
+    budget / alignment / index-map-bounds / reachability audits
+    (V001–V004) before anything is written: a sweep can never persist a
+    table the analysis gate would reject.
+    """
+    table = build_table(rows)
+    if validate:
+        from repro.analysis.vmem_audit import validate_tuning_table
+        findings, _ = validate_tuning_table(table=table)
+        errors = [f for f in findings if f.severity == "error"]
+        if errors:
+            lines = "; ".join(f"{f.rule}: {f.message}" for f in errors)
+            raise ValueError(
+                f"refusing to write tuning table with audit errors: {lines}")
+    payload = {
+        "format": 1,
+        "rows": [
+            {"kernel": kern, "backend": be, "max_rows": max_rows,
+             "tiles": {d: v for d, v in zip(_DIMS, tiles.astuple())
+                       if v is not None}}
+            for kern, be, max_rows, tiles in table
+        ],
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+
+
+def load_tile_table(path: str) -> tuple:
+    """Load a table written by :func:`save_tile_table` (canonical order)."""
+    with open(path) as fh:
+        payload = json.load(fh)
+    if payload.get("format") != 1:
+        raise ValueError(f"unknown tile-table format in {path!r}: "
+                         f"{payload.get('format')!r}")
+    return build_table(
+        (r["kernel"], r["backend"], r["max_rows"], TileSpec(**r["tiles"]))
+        for r in payload["rows"])
+
+
+_TUNED_CACHE: dict = {"path": None, "table": None}
+
+
+def active_tile_table() -> tuple:
+    """The table :func:`select_tiles` consults by default.
+
+    ``REPRO_TUNED_TILES=<path>`` prepends a measured table (written by the
+    bench ``--autotune`` sweep) in front of the built-in defaults — tuned
+    rows win for the shapes they cover, defaults backstop the rest.
+    """
+    path = os.environ.get("REPRO_TUNED_TILES")
+    if not path:
+        return DEFAULT_TILE_TABLE
+    if _TUNED_CACHE["path"] != path:
+        _TUNED_CACHE["path"] = path
+        _TUNED_CACHE["table"] = load_tile_table(path) + DEFAULT_TILE_TABLE
+    return _TUNED_CACHE["table"]
 
 
 def select_tiles(
@@ -105,17 +221,20 @@ def select_tiles(
     rows: int,
     backend: str | None = None,
     pinned: TileSpec | None = None,
-    table=DEFAULT_TILE_TABLE,
+    table=None,
 ) -> TileSpec:
     """Pick block sizes for ``kernel`` at ``rows`` problem rows.
 
     ``backend=None`` reads ``jax.default_backend()``.  ``pinned`` dims (from
     an ``ExperimentConfig``) override whatever the table selects; unknown
-    kernels fall back to the pinned values alone.
+    kernels fall back to the pinned values alone.  ``table=None`` consults
+    :func:`active_tile_table` (tuned rows, then the defaults).
     """
     if backend is None:
         import jax
         backend = jax.default_backend()
+    if table is None:
+        table = active_tile_table()
     auto = TileSpec()
     for kern, be, max_rows, tiles in table:
         if kern != kernel:

@@ -193,8 +193,13 @@ def prefetch_to_device(chunks: Iterable, put: Callable, depth: int = 2
 
 def _as_host_dict(batch) -> dict:
     if dataclasses.is_dataclass(batch) and not isinstance(batch, dict):
-        return dataclasses.asdict(batch)
-    return dict(batch)
+        d = dataclasses.asdict(batch)
+    else:
+        d = dict(batch)
+    # Optional batch fields (the SSLBatch tile layout when the pipeline has
+    # no layout_bt) are None — drop them so chunk stacking and device
+    # placement only ever see arrays.
+    return {k: v for k, v in d.items() if v is not None}
 
 
 def _stack_chunk(batches: list[dict]) -> dict:

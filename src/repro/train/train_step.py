@@ -26,16 +26,28 @@ Array = jax.Array
 
 
 # ------------------------------------------------------------------ DNN/SSL
+#: SSLBatch block-layout fields, in ``BlockLayout.arrays()`` order — the
+#: tuple the layout-aware pairwise kernels consume.
+_TILE_KEYS = ("tile_rows", "tile_cols", "tile_valid",
+              "tile_crows", "tile_ccols", "tile_cvalid", "tile_occ")
+
+
 def dnn_ssl_loss(params, batch: dict, cfg: DNNConfig, hyper: SSLHyper,
                  *, dropout_rng=None, dropout: float = 0.0, pairwise=None):
     """Mean Eq.-3 loss over the k stacked concatenated batches.
 
     ``pairwise`` names a PAIRWISE registry entry ("ref" | "pallas" |
-    "fused" | "auto") or is an already-resolved ``(logp, W) -> scalar``
-    callable; ``None`` keeps the inline jnp oracle.
+    "fused" | "blocksparse" | "auto") or is an already-resolved
+    ``(logp, W) -> scalar`` callable; ``None`` keeps the inline jnp oracle.
+    When the pipeline attached a block layout (the ``tile_*`` batch keys,
+    from ``BatchConfig.layout_bt``) it rides through the vmap and into
+    layout-aware kernels, which skip W's structurally-zero tiles.
     """
+    tile_args = ([batch[k] for k in _TILE_KEYS]
+                 if all(batch.get(k) is not None for k in _TILE_KEYS)
+                 else [])
 
-    def per_worker(x, y, mask, W, valid):
+    def per_worker(x, y, mask, W, valid, *tiles):
         logits = dnn_forward(params, x, dropout_rng=dropout_rng,
                              dropout=dropout)
         # Padding rows: zero affinity + zero label mask + masked entropy term.
@@ -43,12 +55,12 @@ def dnn_ssl_loss(params, batch: dict, cfg: DNNConfig, hyper: SSLHyper,
         Wm = W * valid[:, None] * valid[None, :]
         loss, metrics = ssl_objective(
             logits, y, mask, Wm, hyper, params=params, pairwise=pairwise,
-            reduction="mean")
+            layout=tuple(tiles) or None, reduction="mean")
         return loss, metrics
 
     losses, metrics = jax.vmap(per_worker)(
         batch["x"], batch["y"], batch["label_mask"], batch["W"],
-        batch["valid"].astype(jnp.float32))
+        batch["valid"].astype(jnp.float32), *tile_args)
     return jnp.mean(losses), jax.tree.map(jnp.mean, metrics)
 
 

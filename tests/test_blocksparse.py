@@ -1,0 +1,363 @@
+"""Block-sparse Eq.-3/4 regularizer: layout construction, kernel semantics,
+tuning-table persistence, and the config→pipeline→train_step threading.
+
+Runs in the minimal container (no hypothesis): these tests guard the
+block-sparse kernels' gradient semantics on non-tile-aligned shapes, the
+bitwise dense-equivalence contract on full masks, and the BlockLayout
+padding conventions the kernels assume.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import PAIRWISE, resolve_pairwise
+from repro.core.metabatch import (BlockLayout, block_layout,
+                                  concat_batch_indices, plan_layout_budget,
+                                  tile_occupancy)
+from repro.core.ssl_loss import SSLHyper, graph_regularizer
+from repro.kernels import ref
+from repro.kernels.ops import (graph_regularizer_blocksparse,
+                               graph_regularizer_fused)
+from repro.kernels.tuning import (TileSpec, build_table, load_tile_table,
+                                  save_tile_table)
+
+GAMMA, KAPPA = 0.31, 2e-3
+
+
+def _problem(rng, B, C, bt, density=0.5):
+    """(logp, W, layout): W zeroed outside a random symmetric tile mask."""
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    W = np.abs(rng.normal(size=(B, B))).astype(np.float32)
+    W = (W + W.T) / 2
+    nt = -(-B // bt)
+    occ = rng.random((nt, nt)) < density
+    occ = occ | occ.T
+    mask = np.kron(occ, np.ones((bt, bt), bool))[:B, :B]
+    W = np.where(mask, W, 0.0).astype(np.float32)
+    return logp, jnp.asarray(W), block_layout(W, bt), mask
+
+
+def _bsp(logp, W, layout, bt, bc=16):
+    return graph_regularizer_blocksparse(
+        logp, W, GAMMA, KAPPA, layout=layout,
+        tiles=TileSpec(bi=bt, bc=bc))
+
+
+def _oracle(logp, W):
+    return ref.graph_regularizer_ref(logp, W, GAMMA, KAPPA)
+
+
+# ------------------------------------------------------------------- kernel
+@pytest.mark.parametrize("B,C,bt", [(77, 23, 32), (128, 39, 32),
+                                    (130, 70, 64), (96, 8, 32)])
+def test_forward_matches_oracle_unaligned(rng, B, C, bt):
+    """Compacted-grid forward == jnp oracle on shapes where B and C are
+    NOT multiples of the tile sizes (sentinel + padding conventions)."""
+    logp, W, lay, _ = _problem(rng, B, C, bt)
+    got = _bsp(logp, W, lay, bt)
+    want = _oracle(logp, W)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,C,bt", [(77, 23, 32), (130, 70, 64)])
+def test_vjp_matches_autodiff_of_oracle(rng, B, C, bt):
+    """Analytic two-pass VJP == jax.grad of the oracle: dL/dlogp exactly,
+    dL/dW on the occupied tiles (off-mask dW is structurally zero)."""
+    logp, W, lay, mask = _problem(rng, B, C, bt)
+    f = lambda lp, w: _bsp(lp, w, lay, bt)  # noqa: E731
+    glp, gw = jax.grad(f, argnums=(0, 1))(logp, W)
+    glp_o, gw_o = jax.grad(_oracle, argnums=(0, 1))(logp, W)
+    np.testing.assert_allclose(np.asarray(glp), np.asarray(glp_o),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gw)[mask],
+                               np.asarray(gw_o)[mask],
+                               rtol=1e-4, atol=1e-6)
+    assert np.all(np.asarray(gw)[~mask] == 0.0), \
+        "dW must be zero on structurally-zero tiles"
+
+
+def test_full_mask_bitwise_equals_dense_fused(rng):
+    """On a fully-occupied multi-tile grid the block-sparse kernels visit
+    the same tiles in the same order as the dense fused kernels — value
+    and both gradients must match *bitwise*, not just approximately."""
+    B, C, bt, bc = 128, 16, 32, 8
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    W = np.abs(rng.normal(size=(B, B))).astype(np.float32)
+    W = jnp.asarray((W + W.T) / 2)
+    lay = block_layout(np.asarray(W), bt)
+    assert lay.density == 1.0 and lay.nt > 1
+    f_b = lambda lp, w: _bsp(lp, w, lay, bt, bc)  # noqa: E731
+    f_d = lambda lp, w: graph_regularizer_fused(  # noqa: E731
+        lp, w, GAMMA, KAPPA, tiles=TileSpec(bi=bt, bj=bt, bc=bc))
+    vb, (glp_b, gw_b) = jax.value_and_grad(f_b, argnums=(0, 1))(logp, W)
+    vd, (glp_d, gw_d) = jax.value_and_grad(f_d, argnums=(0, 1))(logp, W)
+    for got, want in [(vb, vd), (glp_b, glp_d), (gw_b, gw_d)]:
+        assert np.array_equal(
+            np.asarray(got, np.float32).view(np.int32),
+            np.asarray(want, np.float32).view(np.int32))
+
+
+def test_single_tile_grid_falls_back_to_dense(rng):
+    """nt == 1 has nothing to skip: the entry must route to the dense
+    fused kernel (bitwise-identical result)."""
+    B, C, bt = 64, 8, 64
+    logp, W, lay, _ = _problem(rng, B, C, bt, density=1.1)
+    assert lay.nt == 1
+    got = _bsp(logp, W, lay, bt, bc=8)
+    want = graph_regularizer_fused(logp, W, GAMMA, KAPPA,
+                                   tiles=TileSpec(bi=bt, bj=bt, bc=8))
+    assert np.array_equal(np.asarray(got, np.float32).view(np.int32),
+                          np.asarray(want, np.float32).view(np.int32))
+
+
+def test_empty_mask_keeps_entropy_term(rng):
+    """All-zero W: every tile row is sentinel-only, the pairwise terms
+    vanish, and only the κ·H(p) entropy term survives — with gradients."""
+    B, C, bt = 96, 8, 32
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    W = jnp.zeros((B, B), jnp.float32)
+    lay = block_layout(np.zeros((B, B), np.float32), bt)
+    assert lay.n_active == 0 and lay.list_len >= lay.nt   # sentinels kept
+    got, (glp, gw) = jax.value_and_grad(
+        lambda lp, w: _bsp(lp, w, lay, bt, bc=8), argnums=(0, 1))(logp, W)
+    want = _oracle(logp, W)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+    glp_o = jax.grad(_oracle)(logp, W)
+    np.testing.assert_allclose(np.asarray(glp), np.asarray(glp_o),
+                               rtol=1e-4, atol=1e-6)
+    assert np.all(np.asarray(gw) == 0.0)
+
+
+def test_empty_tile_row_inside_sparse_mask(rng):
+    """A mask whose middle tile row/column is entirely empty still writes
+    that row's outputs (the sentinel convention) and matches the oracle."""
+    B, C, bt = 96, 10, 32
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(B, C)), jnp.float32))
+    W = np.abs(np.random.default_rng(3).normal(size=(B, B)))
+    W = ((W + W.T) / 2).astype(np.float32)
+    occ = np.zeros((3, 3), bool)
+    occ[0, 0] = occ[2, 2] = occ[0, 2] = occ[2, 0] = True   # row/col 1 empty
+    mask = np.kron(occ, np.ones((bt, bt), bool))
+    W = np.where(mask, W, 0.0).astype(np.float32)
+    lay = block_layout(W, bt)
+    f = lambda lp, w: _bsp(lp, w, lay, bt, bc=8)  # noqa: E731
+    got, glp = jax.value_and_grad(f)(logp, jnp.asarray(W))
+    np.testing.assert_allclose(float(got), float(_oracle(logp, W)),
+                               rtol=1e-5)
+    glp_o = jax.grad(_oracle)(logp, jnp.asarray(W))
+    np.testing.assert_allclose(np.asarray(glp), np.asarray(glp_o),
+                               rtol=1e-4, atol=1e-6)
+    # The empty tile row's dlogp rows are pure entropy-term gradients —
+    # finite, not garbage from an unvisited output block.
+    assert np.all(np.isfinite(np.asarray(glp)))
+
+
+def test_vmap_over_stacked_layouts(rng):
+    """Per-worker layouts stack along a leading axis and ride through vmap
+    (the dnn_ssl_loss path); grad-under-vmap works too."""
+    B, C, bt, k = 64, 8, 32, 3
+    logps, Ws, lays = [], [], []
+    for _ in range(k):
+        logp, W, lay, _ = _problem(rng, B, C, bt)
+        logps.append(np.asarray(logp))
+        Ws.append(np.asarray(W))
+        lays.append(lay)
+    # Stacking requires the pipeline's shared static list length.
+    shared = max(lay.list_len for lay in lays)
+    lays = [block_layout(Ws[i], bt, list_len=shared).arrays()
+            for i in range(k)]
+    stacked = [jnp.asarray(np.stack([a[i] for a in lays]))
+               for i in range(7)]
+    tiles = TileSpec(bi=bt, bc=8)
+
+    def per_worker(lp, w, *lay):
+        return graph_regularizer_blocksparse(lp, w, GAMMA, KAPPA,
+                                             layout=tuple(lay), tiles=tiles)
+
+    out = jax.vmap(per_worker)(jnp.asarray(np.stack(logps)),
+                               jnp.asarray(np.stack(Ws)), *stacked)
+    want = [float(per_worker(jnp.asarray(logps[i]), jnp.asarray(Ws[i]),
+                             *lays[i])) for i in range(k)]
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
+    g = jax.vmap(jax.grad(per_worker, argnums=(0, 1)))(
+        jnp.asarray(np.stack(logps)), jnp.asarray(np.stack(Ws)), *stacked)
+    assert g[0].shape == (k, B, C) and g[1].shape == (k, B, B)
+
+
+def test_zero_bxb_intermediates_both_directions(rng):
+    """The whole point: fwd+bwd at B=64 materializes no dense B×B array
+    outside Pallas kernels (the bwd stages through a (B, C) buffer only)."""
+    from repro.analysis import count_bxb_intermediates
+
+    B, C, bt = 64, 8, 16
+    logp, W, lay, _ = _problem(rng, B, C, bt)
+    n = count_bxb_intermediates(
+        jax.grad(lambda lp: _bsp(lp, W, lay, bt, bc=8)), logp, B=B)
+    assert n == 0
+
+
+# ------------------------------------------------------------------- layout
+def test_layout_deterministic_and_exact(rng):
+    """Same W → identical layout arrays; occupancy is exact (a tile is
+    active iff it holds a nonzero)."""
+    _, W, lay1, mask = _problem(rng, 96, 8, 32)
+    lay2 = block_layout(np.asarray(W), 32)
+    for a, b in zip(lay1.arrays(), lay2.arrays()):
+        assert np.array_equal(a, b)
+    occ = tile_occupancy(np.asarray(W), 32)
+    assert lay1.n_active == int(occ.sum())
+    assert lay1.density == pytest.approx(occ.mean())
+    # Row-major list enumerates exactly the active tiles (valid=1 entries).
+    active = {(int(r), int(c)) for r, c, v in
+              zip(lay1.rows, lay1.cols, lay1.valid) if v}
+    assert active == {(i, j) for i, j in zip(*np.nonzero(occ))}
+
+
+def test_layout_list_len_padding_and_overflow(rng):
+    """list_len pins the static shape: padding repeats the last entry with
+    valid=0; a budget smaller than the natural length raises."""
+    _, W, lay, _ = _problem(rng, 96, 8, 32)
+    n = lay.list_len
+    padded = block_layout(np.asarray(W), 32, list_len=n + 8)
+    assert padded.list_len == n + 8
+    assert np.array_equal(padded.rows[:n], lay.rows)
+    assert np.all(padded.valid[n:] == 0)
+    assert np.all(padded.rows[n:] == lay.rows[n - 1])   # repeats last entry
+    # Padding must not change the kernel's answer.
+    logp = jax.nn.log_softmax(jnp.zeros((96, 8), jnp.float32))
+    np.testing.assert_allclose(float(_bsp(logp, W, padded, 32, bc=8)),
+                               float(_bsp(logp, W, lay, 32, bc=8)),
+                               rtol=1e-6)
+    with pytest.raises(ValueError):
+        block_layout(np.asarray(W), 32, list_len=max(1, n - 8))
+
+
+def test_plan_layout_budget_covers_every_batch(small_graph_setup):
+    """The static budget is an upper bound on the natural tile-list length
+    of every [M_r, M_s] batch the plan can emit — layouts built at the
+    budget never raise."""
+    corpus, graph, plan = small_graph_setup
+    bt, pad = 64, 448
+    budget = plan_layout_budget(plan, graph, bt, pad)
+    assert budget % 8 == 0
+    Wd = graph.W.toarray()
+    coo = plan.batch_edges.tocoo()
+    pairs = [(i, None) for i in range(plan.n_meta)]
+    pairs += [(int(i), int(j)) for i, j in zip(coo.row, coo.col)]
+    for i, j in pairs[:12]:
+        idx = concat_batch_indices(plan, i, j)
+        sub = Wd[np.ix_(idx, idx)]
+        P = np.zeros((pad, pad), np.float32)
+        P[:len(idx), :len(idx)] = sub
+        lay = block_layout(P, bt, list_len=budget)   # must not raise
+        assert isinstance(lay, BlockLayout) and lay.list_len == budget
+
+
+# ------------------------------------------------------------ tuning table
+def test_build_table_canonical_order_and_dup_rejection():
+    spec = TileSpec(bi=128, bc=256)
+    rows = [("k", None, None, spec), ("k", "tpu", None, spec),
+            ("k", "tpu", 512, spec)]
+    table = build_table(rows)
+    assert [r[1:3] for r in table] == [("tpu", 512), ("tpu", None),
+                                       (None, None)]
+    with pytest.raises(ValueError, match="duplicate"):
+        build_table(rows + [("k", "tpu", 512, TileSpec(bi=8))])
+
+
+def test_save_load_tile_table_roundtrip(tmp_path):
+    path = str(tmp_path / "tuned.json")
+    rows = [("graph_reg_blocksparse", "cpu", None, TileSpec(bi=128, bc=256)),
+            ("graph_reg", "cpu", None, TileSpec(bi=128, bj=128, bc=256))]
+    save_tile_table(path, rows)
+    assert load_tile_table(path) == build_table(rows)
+
+
+def test_save_tile_table_rejects_audit_errors(tmp_path):
+    """A TPU-reachable row with a misaligned tile must fail the write-time
+    V002 check — the sweep can never persist a gate-rejected table."""
+    path = str(tmp_path / "bad.json")
+    with pytest.raises(ValueError, match="audit errors"):
+        save_tile_table(path, [("graph_reg", "tpu", None,
+                                TileSpec(bi=100, bj=128, bc=256))])
+    assert not (tmp_path / "bad.json").exists()
+
+
+# ---------------------------------------------------------------- threading
+def test_registry_entry_and_resolver(rng):
+    impl = PAIRWISE.get("blocksparse")
+    assert impl.full_regularizer and impl.accepts_layout
+    logp, W, lay, _ = _problem(rng, 64, 8, 32)
+    resolved = resolve_pairwise("blocksparse",
+                                tiles=TileSpec(bi=32, bc=8))
+    assert getattr(resolved, "accepts_layout", False)
+    got = resolved(logp, W, GAMMA, KAPPA, layout=lay.arrays())
+    want = _bsp(logp, W, lay, 32, bc=8)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
+
+
+def test_graph_regularizer_layout_dispatch(rng):
+    """ssl_loss.graph_regularizer hands the layout to layout-aware impls
+    and the result matches the oracle on the same W."""
+    logp, W, lay, _ = _problem(rng, 64, 8, 32)
+    impl = resolve_pairwise("blocksparse", tiles=TileSpec(bi=32, bc=8))
+    got = graph_regularizer(logp, W, GAMMA, KAPPA, pairwise=impl,
+                            layout=lay.arrays())
+    np.testing.assert_allclose(float(got), float(_oracle(logp, W)),
+                               rtol=1e-5)
+
+
+def test_dnn_ssl_loss_threads_tile_keys(rng):
+    """A batch carrying the tile_* keys reaches the block-sparse kernel
+    through the vmap and matches the jnp-oracle loss on the same batch."""
+    from repro.models.dnn import DNNConfig, init_dnn
+    from repro.train.train_step import dnn_ssl_loss
+
+    B, C, bt, d = 64, 4, 32, 16
+    cfg = DNNConfig(input_dim=d, hidden_dim=32, n_hidden=1, n_classes=C,
+                    dropout=0.0)
+    params = init_dnn(cfg, jax.random.PRNGKey(0))
+    _, W, lay, _ = _problem(rng, B, C, bt)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(1, B, d)), jnp.float32),
+        "y": jnp.zeros((1, B), jnp.int32),
+        "label_mask": jnp.ones((1, B), jnp.float32),
+        "W": jnp.asarray(W)[None],
+        "valid": jnp.ones((1, B), jnp.float32),
+    }
+    keys = ("tile_rows", "tile_cols", "tile_valid", "tile_crows",
+            "tile_ccols", "tile_cvalid", "tile_occ")
+    batch_tiles = dict(batch)
+    for k, a in zip(keys, lay.arrays()):
+        batch_tiles[k] = jnp.asarray(a)[None]
+    hyper = SSLHyper(gamma=GAMMA, kappa=KAPPA)
+    impl = resolve_pairwise("blocksparse", tiles=TileSpec(bi=bt, bc=4))
+    loss_bsp, _ = dnn_ssl_loss(params, batch_tiles, cfg, hyper,
+                               pairwise=impl)
+    loss_ref, _ = dnn_ssl_loss(params, batch, cfg, hyper, pairwise="ref")
+    np.testing.assert_allclose(float(loss_bsp), float(loss_ref), rtol=1e-5)
+
+
+def test_config_guards():
+    """blocksparse without a layout, or a conflicting tile_bi, is rejected
+    at config construction — not silently degraded per step."""
+    from repro.api import BatchConfig, ExperimentConfig, ObjectiveConfig
+
+    with pytest.raises(ValueError, match="layout_bt"):
+        ExperimentConfig(objective=ObjectiveConfig(pairwise="blocksparse"))
+    with pytest.raises(ValueError, match="tile_bi"):
+        ExperimentConfig(batch=BatchConfig(layout_bt=64),
+                         objective=ObjectiveConfig(tile_bi=128))
+    cfg = ExperimentConfig(
+        batch=BatchConfig(layout_bt=64),
+        objective=ObjectiveConfig(pairwise="blocksparse"))
+    assert cfg.batch.layout_bt == 64
+    cfg2 = dataclasses.replace(cfg)
+    assert cfg2.batch.layout_bt == 64

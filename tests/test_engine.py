@@ -77,7 +77,8 @@ def python_loop_reference(pipeline_epoch, *, n_epochs, dropout, base_lr,
         for batch in pipeline_epoch():
             key, rng = jax.random.split(key)
             jb = {k: jnp.asarray(v)
-                  for k, v in dataclasses.asdict(batch).items()}
+                  for k, v in dataclasses.asdict(batch).items()
+                  if v is not None}
             params, opt_state, metrics = step_fn(params, opt_state, jb, lr,
                                                  rng)
             ms.append(metrics)
@@ -164,7 +165,8 @@ def async_reference(pipeline_epoch, *, n_epochs, n_workers, max_staleness,
         for step, batch in enumerate(pipeline_epoch()):
             w = step % n_workers
             jb = {k: jnp.asarray(v)
-                  for k, v in dataclasses.asdict(batch).items()}
+                  for k, v in dataclasses.asdict(batch).items()
+                  if v is not None}
             g = grad_fn(snapshots[w], jb)
             params, opt_state = update_fn(g, opt_state, params,
                                           jnp.float32(base_lr))

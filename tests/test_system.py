@@ -71,7 +71,8 @@ def test_parallel_decomposition_equals_sequential_average(ssl_setup):
     labeled, graph, plan, test = ssl_setup
     pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=2, seed=0)
     batch = next(iter(pipe.epoch()))
-    jb = {k: jnp.asarray(v) for k, v in dataclasses.asdict(batch).items()}
+    jb = {k: jnp.asarray(v) for k, v in dataclasses.asdict(batch).items()
+          if v is not None}
     cfg = DNNConfig(input_dim=48, hidden_dim=32, n_hidden=1, n_classes=8)
     hyper = SSLHyper(0.1, 1e-4, 0.0)
     params = init_dnn(cfg, jax.random.PRNGKey(0))
@@ -102,7 +103,8 @@ def test_pallas_pairwise_callable_plugs_into_training(ssl_setup):
     labeled, graph, plan, test = ssl_setup
     pipe = MetaBatchPipeline(labeled, graph, plan, n_workers=1, seed=0)
     batch = next(iter(pipe.epoch()))
-    jb = {k: jnp.asarray(v) for k, v in dataclasses.asdict(batch).items()}
+    jb = {k: jnp.asarray(v) for k, v in dataclasses.asdict(batch).items()
+          if v is not None}
     cfg = DNNConfig(input_dim=48, hidden_dim=32, n_hidden=1, n_classes=8)
     hyper = SSLHyper(0.1, 1e-4, 0.0)
     params = init_dnn(cfg, jax.random.PRNGKey(0))
