@@ -1,0 +1,116 @@
+"""Online refresh latency + dynamic-ingestion throughput.
+
+The online loop's viability claim is that keeping the affinity graph
+synced to the live model costs an epoch-boundary blip, not an epoch:
+an embedding-space rebuild is one streaming top-k plus a *delta* repair
+of the existing partition, and a node insert is a (m × n) streaming
+top-k plus a local label repair — never a from-scratch
+``partition_graph``.
+
+For an N-node corpus this benchmark times
+
+* ``refresh`` — :func:`repro.online.embedding_knn_graph` over an (N, H)
+  embedding matrix plus the delta-repair + re-grouped plan (the
+  ``OnlineManager.refresh`` low-churn path, end to end);
+* ``insert`` — :func:`repro.core.affinity.insert_nodes` +
+  :func:`repro.core.partition.extend_partition` + plan re-grouping for a
+  32-row batch, reported as rows/s ingestion throughput;
+* ``evict`` — the symmetric removal + repair for the same batch.
+
+``run(json_path=...)`` also dumps machine-readable records
+(``BENCH_online.json`` in CI) so the refresh-latency trajectory
+survives across PRs.  Pure host-path smoke — no gates, no device code.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core.affinity import evict_nodes, insert_nodes
+from repro.core.metabatch import plan_from_labels, plan_meta_batches
+from repro.core.partition import extend_partition, repair_partition
+from repro.online import edge_churn, embedding_knn_graph
+
+KNN = 10
+M = 16            # n_classes
+BATCH = 512       # plan batch size
+INSERT = 32       # ingestion batch (OnlineConfig.insert_batch default)
+
+
+def _corpus_and_embeddings(n: int, h: int = 64, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 32)).astype(np.float32)
+    # Embeddings = noisy linear view of the features: realistic churn
+    # (same coarse geometry, perturbed neighbourhoods), not a degenerate
+    # identical-graph rebuild.
+    E = (X @ rng.normal(size=(32, h)).astype(np.float32)
+         + 0.1 * rng.normal(size=(n, h)).astype(np.float32))
+    return X, E
+
+
+def _median_seconds(fn, repeats: int) -> float:
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(quick: bool = True, json_path: str | None = None):
+    n = 2000 if quick else 10_000
+    repeats = 3 if quick else 5
+    X, E = _corpus_and_embeddings(n)
+    graph = embedding_knn_graph(X, k=KNN)
+    plan = plan_meta_batches(graph, batch_size=BATCH, n_classes=M, seed=0)
+    labels = plan.mini_block_labels
+    k_parts = int(labels.max()) + 1
+    new_graph = embedding_knn_graph(E, k=KNN)
+    churn = edge_churn(graph, new_graph)
+
+    def do_refresh():
+        g = embedding_knn_graph(E, k=KNN)
+        res = repair_partition(g.W, labels, k_parts, tol=0.15,
+                               touched=None, passes=2)
+        plan_from_labels(g, res.labels, BATCH, M, seed=1)
+
+    def do_insert():
+        rng = np.random.default_rng(1)
+        g2 = insert_nodes(graph, X, rng.normal(
+            size=(INSERT, X.shape[1])).astype(np.float32))
+        res = extend_partition(g2.W, labels, k_parts, tol=0.15)
+        plan_from_labels(g2, res.labels, BATCH, M, seed=2)
+        return g2
+
+    g2 = do_insert()
+
+    def do_evict():
+        g3 = evict_nodes(g2, np.arange(n, n + INSERT))
+        res = repair_partition(g3.W, labels, k_parts, tol=0.15)
+        plan_from_labels(g3, res.labels, BATCH, M, seed=3)
+
+    t_refresh = _median_seconds(do_refresh, repeats)
+    t_insert = _median_seconds(do_insert, repeats)
+    t_evict = _median_seconds(do_evict, repeats)
+    ins_per_s = INSERT / t_insert if t_insert > 0 else float("inf")
+
+    records = {
+        "n": n,
+        "knn": KNN,
+        "insert_batch": INSERT,
+        "edge_churn": churn,
+        "refresh_seconds": t_refresh,
+        "insert_seconds": t_insert,
+        "evict_seconds": t_evict,
+        "insert_rows_per_s": ins_per_s,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(records, f, indent=2)
+
+    yield f"online_refresh_n{n},{t_refresh * 1e6:.0f},churn={churn:.3f}"
+    yield (f"online_insert_{INSERT}_n{n},{t_insert * 1e6:.0f},"
+           f"rows_per_s={ins_per_s:.0f}")
+    yield f"online_evict_{INSERT}_n{n},{t_evict * 1e6:.0f},"

@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: quality,label,ablation,"
-                         "parallel,kernels,train,partition,roofline")
+                         "parallel,kernels,train,partition,online,roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -60,6 +60,13 @@ def main() -> None:
         sections.append(("partition(loop_vs_vec)", lambda: bench_partition.run(
             quick, json_path="BENCH_partition.json",
             replan_json_path="BENCH_partition_replan.json")))
+    if only is None or "online" in only:
+        from benchmarks import bench_online
+        # Refresh latency + insert/evict throughput land in
+        # BENCH_online.json — the cost trajectory of keeping the graph
+        # synced to the live model.
+        sections.append(("online(refresh+ingest)", lambda: bench_online.run(
+            quick, json_path="BENCH_online.json")))
     if only is None or "roofline" in only:
         from benchmarks import bench_roofline
 

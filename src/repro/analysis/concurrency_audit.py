@@ -58,6 +58,7 @@ THREADED_MODULES: dict[str, str] = {
     "partition": "src/repro/core/partition.py",
     "supervisor": "src/repro/resilience/supervisor.py",
     "faults": "src/repro/resilience/faults.py",
+    "online": "src/repro/online/refresh.py",
 }
 
 

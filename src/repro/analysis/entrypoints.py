@@ -27,6 +27,7 @@ __all__ = [
     "graph_reg_blocksparse",
     "graph_reg_ref",
     "knn_topk",
+    "online_refresh",
     "ssl_objective",
     "engine_sequential",
     "engine_sync_mesh",
@@ -104,6 +105,24 @@ def _build_knn():
         return knn(x, x, k, exclude_self=True, use_pallas=True)
 
     return run, (x,)
+
+
+def _build_online_refresh():
+    """Embedding-space top-k of the online graph refresh (``repro.online``).
+
+    Same contract as construction-time ``knn_topk``: the refresh must
+    never materialize the dense N×N embedding-distance matrix — the
+    running top-k lives in the Pallas kernel's VMEM scratch.
+    """
+    from repro.online import embedding_topk_device
+
+    n, d, k = _B, 64, 8
+    e = jnp.zeros((n, d), jnp.float32)
+
+    def run(e):
+        return embedding_topk_device(e, k)
+
+    return run, (e,)
 
 
 def _build_ssl_objective():
@@ -205,6 +224,10 @@ knn_topk = EntryPoint(
     name="knn_topk", build=_build_knn,
     B=_B, expect_bxb=0)
 
+online_refresh = EntryPoint(
+    name="online_refresh", build=_build_online_refresh,
+    B=_B, expect_bxb=0)
+
 ssl_objective = EntryPoint(
     name="ssl_objective", build=_build_ssl_objective,
     B=_B, expect_bxb=0)
@@ -230,6 +253,7 @@ ENTRY_POINTS = (
     graph_reg_blocksparse,
     graph_reg_ref,
     knn_topk,
+    online_refresh,
     ssl_objective,
     engine_sequential,
     engine_sync_mesh,

@@ -15,8 +15,8 @@ there instead of forking the wiring.
 """
 from .config import (BatchConfig, DataConfig, ExecutionConfig,
                      ExperimentConfig, GraphConfig, ObjectiveConfig,
-                     PartitionConfig, RepartitionConfig, ResilienceConfig,
-                     TrainConfig)
+                     OnlineConfig, PartitionConfig, RepartitionConfig,
+                     ResilienceConfig, TrainConfig)
 from .experiment import Experiment, ExperimentResult
 from .registry import (AFFINITY, OPTIMIZER, PAIRWISE, PARTITIONER, PIPELINE,
                        STRATEGY, Registry, resolve_pairwise)
@@ -24,7 +24,7 @@ from .registry import (AFFINITY, OPTIMIZER, PAIRWISE, PARTITIONER, PIPELINE,
 __all__ = [
     "ExperimentConfig", "DataConfig", "GraphConfig", "PartitionConfig",
     "BatchConfig", "RepartitionConfig", "ObjectiveConfig", "TrainConfig",
-    "ExecutionConfig", "ResilienceConfig",
+    "ExecutionConfig", "ResilienceConfig", "OnlineConfig",
     "Experiment", "ExperimentResult",
     "Registry", "AFFINITY", "PARTITIONER", "PIPELINE", "PAIRWISE",
     "OPTIMIZER", "STRATEGY", "resolve_pairwise",

@@ -28,6 +28,7 @@ __all__ = [
     "TrainConfig",
     "ExecutionConfig",
     "ResilienceConfig",
+    "OnlineConfig",
     "ExperimentConfig",
 ]
 
@@ -410,6 +411,58 @@ class ResilienceConfig:
 
 
 @dataclass(frozen=True)
+class OnlineConfig:
+    """Embedding-space graph refresh + dynamic corpus (``repro.online``).
+
+    ``refresh_every=N > 0`` turns the loop on: during every N-th epoch the
+    engine captures the model's hidden activations (``tap`` selects the
+    hidden layer, negative = from the top) and at the epoch boundary the
+    affinity graph is rebuilt over those embeddings and lock-published to
+    the streaming pipeline — the graph tracks the *model's* similarity
+    rather than the frozen input features (Bai et al. 1511.06104).  When
+    edge churn is at most ``churn_threshold`` the existing partition is
+    delta-repaired around the changed edges; above it the plan is
+    re-synthesized from scratch.
+
+    ``bandwidth="per_node"`` swaps the global self-tuning sigma for
+    Zelnik-Manor local scaling (per-node k-th-NN bandwidth — the learned-
+    bandwidth option of Sharma & Jones 2306.07098); ``k=None`` inherits
+    ``GraphConfig.k``.  ``insert_batch`` is the default chunk size for
+    :meth:`repro.online.OnlineManager.insert` callers.  Requires
+    ``BatchConfig.pipeline="metabatch_stream"`` — only the streaming
+    pipeline can swap graphs between epochs.
+    """
+
+    refresh_every: int = 0
+    tap: int = -1                 # hidden layer to capture (negative = top)
+    insert_batch: int = 32
+    churn_threshold: float = 0.25
+    bandwidth: str = "global"
+    k: int | None = None          # None = inherit GraphConfig.k
+    backend: str = "host"         # top-k search backend for the refresh
+
+    def __post_init__(self):
+        _require(self.refresh_every >= 0,
+                 f"refresh_every must be >= 0, got {self.refresh_every}")
+        _require(self.insert_batch > 0,
+                 f"insert_batch must be positive, got {self.insert_batch}")
+        _require(0.0 <= self.churn_threshold <= 1.0,
+                 f"churn_threshold must be in [0, 1], "
+                 f"got {self.churn_threshold}")
+        _require(self.bandwidth in ("global", "per_node"),
+                 f"bandwidth must be 'global' or 'per_node', "
+                 f"got {self.bandwidth!r}")
+        _require(self.k is None or (isinstance(self.k, int) and self.k > 0),
+                 f"k must be a positive int or None, got {self.k!r}")
+        _require(self.backend in ("host", "device"),
+                 f"backend must be 'host' or 'device', got {self.backend!r}")
+
+    @property
+    def active(self) -> bool:
+        return self.refresh_every > 0
+
+
+@dataclass(frozen=True)
 class ExperimentConfig:
     """The single config object an ``Experiment`` runs from."""
 
@@ -424,8 +477,20 @@ class ExperimentConfig:
     train: TrainConfig = field(default_factory=TrainConfig)
     execution: ExecutionConfig = field(default_factory=ExecutionConfig)
     resilience: ResilienceConfig = field(default_factory=ResilienceConfig)
+    online: OnlineConfig = field(default_factory=OnlineConfig)
 
     def __post_init__(self):
+        _require(not (self.online.active
+                      and self.batch.pipeline != "metabatch_stream"),
+                 f"online.refresh_every={self.online.refresh_every} requires "
+                 f"batch.pipeline='metabatch_stream' (got "
+                 f"{self.batch.pipeline!r}); only the streaming pipeline "
+                 "can swap graphs between epochs")
+        _require(not (self.online.active
+                      and not -self.train.n_hidden
+                      <= self.online.tap < self.train.n_hidden),
+                 f"online.tap={self.online.tap} out of range for "
+                 f"n_hidden={self.train.n_hidden} hidden layers")
         _require(not (self.repartition.active
                       and self.batch.pipeline != "metabatch_stream"),
                  f"repartition.every_n_epochs="

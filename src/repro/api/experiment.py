@@ -71,6 +71,7 @@ class Experiment:
         self.hierarchy_cache = hierarchy_cache  # shared HierarchyCache
         self.injector = injector      # repro.resilience.FaultInjector (chaos)
         self.pipeline: Callable | None = None   # epoch-factory callable
+        self.online = None            # repro.online.OnlineManager when active
         self._built = False
 
     # ------------------------------------------------------------------ build
@@ -138,9 +139,44 @@ class Experiment:
             hierarchy_cache=self._hierarchy_cache(),
             supervisor=self._replan_supervisor(),
             fault_injector=self.injector,
+            record_indices=cfg.online.active,
             layout_bt=cfg.batch.layout_bt)
+        if cfg.online.active:
+            self.online = self._make_online_manager()
         self._built = True
         return self
+
+    def _make_online_manager(self):
+        """The ``repro.online.OnlineManager`` bound to this experiment's
+        stream: refreshes the affinity graph from captured embeddings every
+        ``online.refresh_every`` epochs and serves :meth:`insert`/
+        :meth:`evict` for dynamic corpora."""
+        from repro.online import OnlineManager
+        cfg = self.config
+        return OnlineManager(
+            self.pipeline.stream, self.corpus, self.graph, cfg.online,
+            batch_size=cfg.batch.batch_size,
+            n_classes=self.corpus.n_classes,
+            tol=cfg.partition.tol, coarsen_to=cfg.partition.coarsen_to,
+            shuffle_blocks=cfg.batch.shuffle_blocks,
+            partitioner=PARTITIONER.get(cfg.partition.method),
+            embed_fn=self._embed_fn(), seed=cfg.data.seed)
+
+    def _embed_fn(self):
+        """Chunked clean forward to the tapped hidden layer — fills capture
+        gaps and embeds freshly inserted rows."""
+        import jax
+        import jax.numpy as jnp
+        from repro.models.dnn import dnn_hidden
+        tap = self.config.online.tap
+
+        hidden = jax.jit(lambda p, x: dnn_hidden(p, x, layer=tap))
+
+        def embed(params, X, batch: int = 4096):
+            outs = [np.asarray(hidden(params, jnp.asarray(X[s: s + batch])))
+                    for s in range(0, len(X), batch)]
+            return np.concatenate(outs) if outs else np.empty((0, 0))
+        return embed
 
     def _replan_supervisor(self):
         """Supervisor for the stream's replan builder (None when retries
@@ -236,6 +272,20 @@ class Experiment:
             if tiles.bi is None:
                 tiles = dataclasses.replace(tiles, bi=cfg.batch.layout_bt)
         pairwise = resolve_pairwise(cfg.objective.pairwise, tiles=tiles)
+        capture_fn = capture_epochs = on_epoch_end = None
+        if self.online is not None:
+            from repro.models.dnn import dnn_hidden
+            import jax
+            tap = cfg.online.tap
+
+            def capture_fn(params, batch):
+                # batch["x"] is (k_workers, P, d); tap the hidden layer
+                # per worker row — stacked by the scan into (steps, k, P, H).
+                return jax.vmap(
+                    lambda xb: dnn_hidden(params, xb, layer=tap))(batch["x"])
+
+            capture_epochs = self.online.capture_epoch
+            on_epoch_end = self.online.on_epoch_end
         t0 = time.time()
         res = train_dnn_ssl(
             self.pipeline,
@@ -258,7 +308,10 @@ class Experiment:
             checkpoint_dir=ex.checkpoint_dir,
             resume=ex.resume,
             resilience=cfg.resilience,
-            injector=self.injector)
+            injector=self.injector,
+            capture_fn=capture_fn,
+            capture_epochs=capture_epochs,
+            on_epoch_end=on_epoch_end)
         seconds = time.time() - t0
         final = res.history[-1] if res.history else {}
         return ExperimentResult(config=cfg, history=res.history,

@@ -173,6 +173,8 @@ AUDIT.register("graph_reg_blocksparse",
                "repro.analysis.entrypoints:graph_reg_blocksparse")
 AUDIT.register("graph_reg_ref", "repro.analysis.entrypoints:graph_reg_ref")
 AUDIT.register("knn_topk", "repro.analysis.entrypoints:knn_topk")
+AUDIT.register("online_refresh",
+               "repro.analysis.entrypoints:online_refresh")
 AUDIT.register("ssl_objective", "repro.analysis.entrypoints:ssl_objective")
 AUDIT.register("engine_sequential",
                "repro.analysis.entrypoints:engine_sequential")

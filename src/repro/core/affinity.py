@@ -17,6 +17,18 @@ Two backends share the same semantics and are validated against each other:
   * ``"device"`` — the Pallas streaming top-k kernel
     (``repro.kernels.pairwise.knn_topk_pallas``), which keeps the running
     top-k in VMEM scratch next to the MXU distance contraction.
+
+Both backends compute distances in float32: the self-tuning ``sigma``
+heuristic (and hence every edge weight) is a function of the returned
+distances, so the search dtype is pinned rather than inherited from the
+input — host-f64 vs device-f32 used to make the *same corpus* produce
+different graphs depending on backend.
+
+Dynamic corpora: :func:`insert_nodes` / :func:`evict_nodes` (also exposed as
+``AffinityGraph.insert`` / ``.evict``) patch the symmetric CSR incrementally —
+a streaming top-k of the new rows against the corpus plus symmetric row
+patching — so new users join the live graph without an O(N²) rebuild
+(``repro.online`` drives these under traffic).
 """
 from __future__ import annotations
 
@@ -30,6 +42,8 @@ __all__ = [
     "pairwise_sq_dists",
     "knn_edges",
     "build_affinity_graph",
+    "insert_nodes",
+    "evict_nodes",
 ]
 
 
@@ -76,6 +90,15 @@ class AffinityGraph:
         sub = self.W[idx][:, idx]
         return np.asarray(sub.todense(), dtype=np.float32)
 
+    def insert(self, X: np.ndarray, X_new: np.ndarray,
+               **kw) -> "AffinityGraph":
+        """See :func:`insert_nodes`."""
+        return insert_nodes(self, X, X_new, **kw)
+
+    def evict(self, idx: np.ndarray) -> "AffinityGraph":
+        """See :func:`evict_nodes`."""
+        return evict_nodes(self, idx)
+
 
 def pairwise_sq_dists(X: np.ndarray, Y: np.ndarray) -> np.ndarray:
     """Squared euclidean distances, the classic ||x||^2 - 2xy + ||y||^2 form."""
@@ -90,22 +113,45 @@ def _streaming_topk_host(X: np.ndarray, k: int, block: int,
                          col_block: int) -> tuple[np.ndarray, np.ndarray]:
     """Column-streamed exact top-k: running (rows, k) state merged one
     (block × col_block) distance tile at a time; peak memory is one tile
-    plus the running state — independent of n along the candidate axis."""
+    plus the running state — independent of n along the candidate axis.
+
+    Distances are float32 regardless of the input dtype, matching the
+    device backend so the sigma heuristic downstream agrees across the two.
+    """
+    X = np.ascontiguousarray(X, dtype=np.float32)
     n = X.shape[0]
-    nrm = np.einsum("id,id->i", X, X)
-    cols = np.empty((n, k), dtype=np.int64)
-    dsts = np.empty((n, k), dtype=np.float64)
-    for s in range(0, n, block):
-        e = min(s + block, n)
-        run_d = np.full((e - s, k), np.inf)
+    offs = np.arange(n)
+    return _streaming_topk_rows(X, X, k, block, col_block, self_of_row=offs)
+
+
+def _streaming_topk_rows(
+    Q: np.ndarray, Y: np.ndarray, k: int, block: int, col_block: int,
+    *, self_of_row: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Exact top-k of query rows ``Q`` against candidate rows ``Y``, streamed
+    in (block × col_block) f32 tiles.  ``self_of_row[i]`` (optional) names a
+    candidate column excluded for query row i — the self index when Q is a
+    row slice of Y, as in the online insert path."""
+    Q = np.ascontiguousarray(Q, dtype=np.float32)
+    Y = np.ascontiguousarray(Y, dtype=np.float32)
+    m, n = Q.shape[0], Y.shape[0]
+    qn = np.einsum("id,id->i", Q, Q)
+    yn = np.einsum("id,id->i", Y, Y)
+    cols = np.empty((m, k), dtype=np.int64)
+    dsts = np.empty((m, k), dtype=np.float32)
+    for s in range(0, m, block):
+        e = min(s + block, m)
+        run_d = np.full((e - s, k), np.inf, dtype=np.float32)
         run_i = np.full((e - s, k), -1, dtype=np.int64)
         for cs in range(0, n, col_block):
             ce = min(cs + col_block, n)
-            d2 = nrm[s:e, None] - 2.0 * (X[s:e] @ X[cs:ce].T) + nrm[None, cs:ce]
+            d2 = qn[s:e, None] - 2.0 * (Q[s:e] @ Y[cs:ce].T) + yn[None, cs:ce]
             np.maximum(d2, 0.0, out=d2)
-            diag = np.arange(max(s, cs), min(e, ce))     # exclude self
-            if diag.size:
-                d2[diag - s, diag - cs] = np.inf
+            if self_of_row is not None:
+                sc = self_of_row[s:e]
+                hit = (sc >= cs) & (sc < ce)
+                if hit.any():
+                    d2[np.flatnonzero(hit), sc[hit] - cs] = np.inf
             cand_d = np.concatenate([run_d, d2], axis=1)
             cand_i = np.concatenate(
                 [run_i, np.broadcast_to(np.arange(cs, ce), d2.shape)], axis=1)
@@ -132,7 +178,7 @@ def _streaming_topk_device(X: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarra
     x = jnp.asarray(np.asarray(X, dtype=np.float32))
     d2, idx = knn_topk_pallas(x, x, k, exclude_self=True)
     return (np.asarray(idx, dtype=np.int64),
-            np.asarray(d2, dtype=np.float64))
+            np.asarray(d2, dtype=np.float32))
 
 
 def knn_edges(
@@ -180,9 +226,11 @@ def build_affinity_graph(
 
     ``sigma=None`` uses the self-tuning heuristic: sigma = mean distance to
     the k-th neighbour (the paper does not report its sigma; this is the
-    standard choice and is recorded on the returned graph).  ``backend``
-    selects the streaming top-k search: ``"host"`` (numpy) or ``"device"``
-    (Pallas kernel) — see :func:`knn_edges`.
+    standard choice and is recorded on the returned graph).  The heuristic
+    is evaluated on float32 distances on *both* backends, so host and
+    device builds agree to f32 round-off.  ``backend`` selects the
+    streaming top-k search: ``"host"`` (numpy) or ``"device"`` (Pallas
+    kernel) — see :func:`knn_edges`.
     """
     n = X.shape[0]
     src, dst, d2 = knn_edges(X, k, block=block, col_block=col_block,
@@ -199,3 +247,68 @@ def build_affinity_graph(
     W.eliminate_zeros()
     W.sort_indices()
     return AffinityGraph(W=W, k=k, sigma=sigma)
+
+
+def insert_nodes(
+    graph: AffinityGraph,
+    X: np.ndarray,
+    X_new: np.ndarray,
+    *,
+    block: int = 2048,
+    col_block: int = 4096,
+) -> AffinityGraph:
+    """Append ``X_new`` rows to the graph without an O(N²) rebuild.
+
+    Streaming top-k of the new rows against the combined corpus
+    ``[X; X_new]`` (self excluded, new rows see each other), weighted with
+    the graph's *recorded* sigma, then symmetric row patching via
+    ``max(W, Wᵀ)``.  Existing rows keep their edge sets untouched — their
+    k-NN lists are not re-run, they only *gain* reverse edges from new
+    nodes — so :func:`evict_nodes` of the same rows restores the original
+    graph bit-for-bit (the online insert/evict round-trip invariant).
+
+    ``X`` must be the feature (or embedding) matrix the graph was built
+    from, one row per existing node.
+    """
+    n = graph.n_nodes
+    if X.shape[0] != n:
+        raise ValueError(
+            f"X has {X.shape[0]} rows but the graph has {n} nodes")
+    X_new = np.atleast_2d(X_new)
+    m = X_new.shape[0]
+    if m == 0:
+        return graph
+    Y = np.concatenate(
+        [np.asarray(X, np.float32), np.asarray(X_new, np.float32)])
+    k = min(graph.k, n + m - 1)
+    cols, d2 = _streaming_topk_rows(
+        X_new, Y, k, block, col_block, self_of_row=np.arange(n, n + m))
+    w = np.exp(-np.sqrt(d2) / (2.0 * graph.sigma * graph.sigma))
+    rows = np.repeat(np.arange(m), k)
+    new_rows = sp.csr_matrix((w.ravel(), (rows, cols.ravel())),
+                             shape=(m, n + m))
+    top = sp.hstack([graph.W, sp.csr_matrix((n, m))], format="csr")
+    Wd = sp.vstack([top, new_rows], format="csr")
+    W2 = Wd.maximum(Wd.T).tocsr()
+    W2.setdiag(0.0)
+    W2.eliminate_zeros()
+    W2.sort_indices()
+    return AffinityGraph(W=W2, k=graph.k, sigma=graph.sigma)
+
+
+def evict_nodes(graph: AffinityGraph, idx: np.ndarray) -> AffinityGraph:
+    """Drop nodes ``idx``: symmetric row/col deletion + compact reindexing.
+
+    Surviving node j gets new index ``j - |{i in idx : i < j}|``.  Because
+    insertion never rewrites existing rows, evicting exactly the rows a
+    prior :func:`insert_nodes` appended returns the original graph.
+    """
+    idx = np.atleast_1d(np.asarray(idx, dtype=np.int64))
+    n = graph.n_nodes
+    if idx.size and (idx.min() < 0 or idx.max() >= n):
+        raise ValueError(f"evict indices out of range for {n} nodes")
+    keep = np.ones(n, dtype=bool)
+    keep[idx] = False
+    W = graph.W[keep][:, keep].tocsr()
+    W.sort_indices()
+    return AffinityGraph(W=W, k=graph.k, sigma=graph.sigma)

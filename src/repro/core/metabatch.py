@@ -25,13 +25,13 @@ import scipy.sparse as sp
 from repro.introspect import accepts_kwarg
 
 from .affinity import AffinityGraph
-from .partition import PartitionResult, partition_graph
+from .partition import PartitionResult, edge_cut, partition_graph
 
 __all__ = ["MetaBatchPlan", "build_mini_blocks", "synthesize_meta_batches",
            "batch_graph", "NeighborSampler", "concat_batch_indices",
-           "plan_meta_batches", "epoch_plan_seed", "resynthesize_plan",
-           "BlockLayout", "tile_occupancy", "layout_from_occupancy",
-           "block_layout", "plan_layout_budget"]
+           "plan_meta_batches", "plan_from_labels", "epoch_plan_seed",
+           "resynthesize_plan", "BlockLayout", "tile_occupancy",
+           "layout_from_occupancy", "block_layout", "plan_layout_budget"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,6 +183,48 @@ def plan_meta_batches(
     E = batch_graph(graph, meta_of_node, len(metas))
     return MetaBatchPlan(
         mini_block_labels=mini.labels,
+        meta_batches=metas,
+        meta_of_block=meta_of_block,
+        batch_edges=E,
+        batch_size=batch_size,
+        n_classes=n_classes,
+    )
+
+
+def plan_from_labels(
+    graph: AffinityGraph,
+    labels: np.ndarray,
+    batch_size: int,
+    n_classes: int,
+    *,
+    seed: int = 0,
+    shuffle_blocks: bool = True,
+) -> MetaBatchPlan:
+    """Re-group an *existing* mini-block labeling into a fresh plan.
+
+    The online insert/evict and low-churn refresh paths already hold
+    delta-repaired labels (``repair_partition`` / ``extend_partition``) —
+    this skips the partitioner entirely and runs only the §2.2 grouping:
+    shuffled mini-block → meta-batch assignment plus the induced batch
+    graph, deterministic per ``(labels, seed)``.
+    """
+    labels = np.asarray(labels, dtype=np.int64)
+    if labels.shape[0] != graph.n_nodes:
+        raise ValueError(
+            f"labels cover {labels.shape[0]} nodes, graph has "
+            f"{graph.n_nodes}")
+    n_parts = int(labels.max()) + 1 if labels.size else 0
+    mini = PartitionResult(
+        labels=labels, n_parts=n_parts,
+        cut=edge_cut(graph.W, labels),
+        sizes=np.bincount(labels, minlength=n_parts))
+    rng = np.random.default_rng(seed)
+    metas, meta_of_block = synthesize_meta_batches(
+        mini, n_classes, rng=rng, shuffle_blocks=shuffle_blocks)
+    meta_of_node = meta_of_block[labels]
+    E = batch_graph(graph, meta_of_node, len(metas))
+    return MetaBatchPlan(
+        mini_block_labels=labels,
         meta_batches=metas,
         meta_of_block=meta_of_block,
         batch_edges=E,

@@ -49,6 +49,8 @@ __all__ = [
     "partition_hierarchy",
     "edge_cut",
     "partition_permutation",
+    "repair_partition",
+    "extend_partition",
 ]
 
 
@@ -1208,6 +1210,10 @@ class HierarchyCache:
         self.top_levels = top_levels
         self._lock = threading.Lock()
         self._by_k: dict[int, PartitionHierarchy] = {}
+        # Build/hit accounting: the online insert/refresh paths assert
+        # their delta-refines never trigger a hierarchy (re)build.
+        self.builds = 0
+        self.hits = 0
 
     def get(self, k: int) -> PartitionHierarchy:
         with self._lock:
@@ -1217,6 +1223,9 @@ class HierarchyCache:
                     self.W, k, tol=self.tol, coarsen_to=self.coarsen_to,
                     seed=self.seed, top_levels=self.top_levels)
                 self._by_k[k] = h
+                self.builds += 1
+            else:
+                self.hits += 1
             return h
 
 
@@ -1552,6 +1561,89 @@ def _replan_incremental(
                          max_w=float(cap), seed_touched=touched)
     sizes = np.bincount(labels, minlength=k)
     return PartitionResult(labels, k, edge_cut(W, labels), sizes)
+
+
+def repair_partition(
+    W: sp.csr_matrix,
+    labels: np.ndarray,
+    k: int,
+    *,
+    tol: float = 0.1,
+    touched: np.ndarray | None = None,
+    passes: int = 2,
+) -> PartitionResult:
+    """Locally repair an existing labeling of ``W`` — the online delta path.
+
+    The `_replan_incremental` tail as a public entry: strict rebalance to
+    the ``(n, k, tol)`` cap, then delta-seeded refinement around
+    ``touched`` (node indices whose incident structure changed — inserted
+    nodes, endpoints of refreshed edges, neighbours of evicted nodes) plus
+    whatever the rebalance evicted.  Never coarsens, never rebuilds a
+    hierarchy: work tracks the delta, not n.  With ``touched=None`` only
+    rebalance evictions seed the refine.
+    """
+    labels = np.asarray(labels, dtype=np.int64)
+    n = W.shape[0]
+    if labels.shape[0] != n:
+        raise ValueError(f"labels cover {labels.shape[0]} nodes, W has {n}")
+    cap = max(int(n / k * (1.0 + tol)), -(-n // k))
+    node_w = np.ones(n)
+    pre = labels
+    labels = _rebalance_vec(W, labels, k, cap)
+    seed = np.zeros(n, dtype=bool)
+    if touched is not None:
+        seed[np.asarray(touched, dtype=np.int64)] = True
+    seed[labels != pre] = True
+    labels = _refine_vec(W, node_w, labels, k, tol, passes=passes,
+                         max_w=float(cap),
+                         seed_touched=np.flatnonzero(seed))
+    sizes = np.bincount(labels, minlength=k)
+    return PartitionResult(labels, k, edge_cut(W, labels), sizes)
+
+
+def extend_partition(
+    W: sp.csr_matrix,
+    old_labels: np.ndarray,
+    k: int,
+    *,
+    tol: float = 0.1,
+    passes: int = 2,
+) -> PartitionResult:
+    """Partition after node insertion, treating the new rows as a
+    "perturbed chunk": no multilevel rebuild, only local repair.
+
+    ``W`` is the patched graph whose first ``len(old_labels)`` rows keep
+    their labels; the appended rows (``insert_nodes`` puts them at the
+    end) are seeded with their heaviest-neighbour part — the label their
+    affinity row most strongly pulls them toward — then
+    :func:`repair_partition` rebalances and refines around the insertion
+    seam.  New rows with no labeled neighbour fall into the currently
+    smallest parts.
+    """
+    old_labels = np.asarray(old_labels, dtype=np.int64)
+    n = W.shape[0]
+    n_old = old_labels.shape[0]
+    m = n - n_old
+    if m < 0:
+        raise ValueError(
+            f"old_labels cover {n_old} nodes but W has only {n}")
+    if m == 0:
+        return repair_partition(W, old_labels, k, tol=tol, passes=passes)
+    # Heaviest-neighbour seeding against *old* nodes only (new-new edges
+    # carry no label information yet).
+    sub = W.tocsr()[n_old:, :n_old]
+    conn = np.asarray(
+        (sub @ _one_hot(old_labels, k)).todense())        # (m, k) weights
+    init = np.asarray(conn.argmax(axis=1), dtype=np.int64).ravel()
+    orphan = ~(conn.max(axis=1) > 0)
+    if orphan.any():
+        sizes = np.bincount(old_labels, minlength=k)
+        # Round-robin the orphans into the emptiest parts.
+        order = np.argsort(sizes, kind="stable")
+        init[orphan] = order[np.arange(int(orphan.sum())) % k]
+    labels = np.concatenate([old_labels, init])
+    return repair_partition(W, labels, k, tol=tol,
+                            touched=np.arange(n_old, n), passes=passes)
 
 
 def partition_permutation(labels: np.ndarray) -> np.ndarray:

@@ -101,6 +101,25 @@ def _stack_group(parts) -> SSLBatch:
     return SSLBatch(*cols)   # 5 base columns, +7 tile columns with a layout
 
 
+def _epoch_groups(order: np.ndarray, k: int) -> Iterator[np.ndarray]:
+    """Consecutive groups of ``k`` meta-batch ids covering *all* of ``order``.
+
+    A tail of ``len(order) % k`` ids is padded by wrap-around from the head
+    of the permutation (those head ids train twice that epoch) — never
+    silently dropped: the order is permuted per epoch, so dropping the tail
+    would starve a random node subset of gradient every epoch.  With fewer
+    than ``k`` ids no group is yielded (wrap-around there would duplicate a
+    meta-batch *within* one group; the engine already warns on an empty
+    epoch).
+    """
+    n = len(order)
+    for s in range(0, n - k + 1, k):
+        yield order[s : s + k]
+    tail = n % k
+    if tail and n >= k:
+        yield np.concatenate([order[n - tail:], order[: k - tail]])
+
+
 class MetaBatchPipeline:
     """Iterates (meta-batch, sampled-neighbour) pairs for k workers."""
 
@@ -134,10 +153,9 @@ class MetaBatchPipeline:
         return idx, main
 
     def epoch(self) -> Iterator[SSLBatch]:
-        """One pass over all meta-batches, k at a time."""
+        """One pass over all meta-batches, k at a time (tail wrap-padded)."""
         order = self.rng.permutation(self.plan.n_meta)
-        for s in range(0, len(order) - self.k + 1, self.k):
-            group = order[s : s + self.k]
+        for group in _epoch_groups(order, self.k):
             parts = []
             for i in group:
                 idx, _ = self._one(int(i))
@@ -182,12 +200,18 @@ class MetaBatchStream:
     Thread-safety: each epoch's generator body runs on whatever thread
     consumes it (under the engine that is the *prefetch producer* thread,
     a different one every epoch), while the replan builder runs on its own
-    thread.  All mutable stream state — ``plan``, ``_pending``,
-    ``_plan_epoch``, ``swaps``, ``_failed``, ``_epoch_counter``,
-    ``last_epoch_indices`` — is therefore published under ``_lock``; the
-    builder thread itself only reads construction-time immutables (the
-    batch size and class count are snapshotted in ``__init__`` so it never
-    touches the swappable ``plan``).
+    thread.  All mutable stream state — ``plan``, ``graph``, ``corpus``,
+    ``_hierarchy``, ``_pending``, ``_plan_epoch``, ``swaps``, ``_failed``,
+    ``_epoch_counter``, ``last_epoch_indices`` — is therefore published
+    under ``_lock``; the builder thread snapshots the swappable
+    graph/hierarchy under the lock at synthesis start (batch size and class
+    count are construction-time immutables).
+
+    Online refresh / dynamic corpora: :meth:`swap_graph` lock-publishes a
+    whole new ``(graph, plan[, corpus][, hierarchy])`` tuple through the
+    same path replans use — the epoch that starts next reads the new graph
+    and plan together (``repro.online`` drives this from the engine's
+    epoch-end hook).
     """
 
     def __init__(self, corpus: SyntheticCorpus, graph: AffinityGraph,
@@ -282,32 +306,35 @@ class MetaBatchStream:
         self._replan_disabled = False      # tripped at max_replan_failures
 
     # ------------------------------------------------------------ internals
-    def _fits(self, plan: MetaBatchPlan) -> bool:
+    def _fits(self, plan: MetaBatchPlan, graph: AffinityGraph) -> bool:
         mmax = max(len(m) for m in plan.meta_batches)
         if (2 * mmax if self.with_neighbor else mmax) > self.pad:
             return False
         if self.layout_bt is not None:
             need = plan_layout_budget(
-                plan, self.graph, self.layout_bt, self.pad,
+                plan, graph, self.layout_bt, self.pad,
                 with_neighbor=self.with_neighbor, headroom=1.0)
             if need > self.layout_len:
                 return False
         return True
 
     def _synthesize(self, epoch: int) -> MetaBatchPlan:
-        # Runs on the builder thread: reads only construction-time
-        # immutables (the batch-size/class-count snapshots, never the
-        # swappable ``plan``), so it needs no lock.
+        # Runs on the builder thread: snapshots the swappable
+        # graph/hierarchy under the lock, then synthesizes lock-free (it
+        # never reads the swappable ``plan`` — batch size and class count
+        # are construction-time immutables).
         if self.fault_injector is not None:
             self.fault_injector.maybe_fail("replan", epoch=epoch)
+        with self._lock:
+            graph, hierarchy = self.graph, self._hierarchy
         rep = self.repartition
         return resynthesize_plan(
-            self.graph, self._batch_size, self._n_classes,
+            graph, self._batch_size, self._n_classes,
             epoch=epoch, base_seed=getattr(rep, "seed", 0),
             temperature=getattr(rep, "matching_temperature", 0.0),
             tol=self.tol, shuffle_blocks=self.shuffle_blocks,
             partitioner=self.partitioner, coarsen_to=self.coarsen_to,
-            reuse=self._hierarchy)
+            reuse=hierarchy)
 
     def _call_synthesize(self, epoch: int) -> MetaBatchPlan:
         """One supervised synthesis: with a supervisor, transient failures
@@ -365,7 +392,9 @@ class MetaBatchStream:
         return (epoch // self.every + 1) * self.every
 
     def _swap_in(self, plan: MetaBatchPlan, target: int) -> bool:
-        if not self._fits(plan):
+        with self._lock:
+            graph = self.graph
+        if not self._fits(plan, graph):
             warnings.warn(
                 f"re-partitioned plan for epoch {target} exceeds the "
                 f"pinned pad {self.pad} or tile-list budget "
@@ -402,6 +431,50 @@ class MetaBatchStream:
         if not self._swap_in(box["plan"], epoch):
             with self._lock:
                 self._failed.add(epoch)
+
+    # ------------------------------------------------------------- online
+    def snapshot(self) -> tuple:
+        """One-lock read of the swappable state the online manager needs:
+        ``(plan, graph, corpus, hierarchy, last_epoch_indices)``."""
+        with self._lock:
+            return (self.plan, self.graph, self.corpus, self._hierarchy,
+                    self.last_epoch_indices)
+
+    def swap_graph(self, graph: AffinityGraph, plan: MetaBatchPlan, *,
+                   corpus: SyntheticCorpus | None = None,
+                   hierarchy: HierarchyCache | None = None) -> bool:
+        """Lock-publish a new affinity graph (and plan built against it).
+
+        The online-refresh / insert / evict handoff, sharing the replan
+        swap discipline: the epoch that starts next reads the new
+        ``(graph, plan, corpus)`` together, mid-epoch generators keep their
+        snapshots, and a plan that would overflow the pinned pad/tile-list
+        budget is rejected with a warning (``False``; the stream keeps the
+        old graph).  ``corpus`` rides along for dynamic ingestion (insert/
+        evict change the node set).  ``hierarchy`` replaces the replan
+        cache — pass a fresh (lazily built) :class:`HierarchyCache` for the
+        new graph, or ``None`` to drop caching until the next refresh; the
+        old cache's levels describe the old topology and must not survive.
+        Any in-flight background replan is discarded: it was synthesized
+        against the graph this call replaces.
+        """
+        if not self._fits(plan, graph):
+            warnings.warn(
+                f"online graph swap rejected: plan exceeds the pinned pad "
+                f"{self.pad} or tile-list budget {self.layout_len} (raise "
+                f"pad_headroom); keeping the previous graph", stacklevel=2)
+            return False
+        with self._lock:
+            self.graph = graph
+            self.plan = plan
+            if corpus is not None:
+                self.corpus = corpus
+            self._hierarchy = hierarchy
+            self._pending = None
+            self.swaps += 1
+            self._failed.clear()
+            self._consec_failures = 0
+        return True
 
     # ----------------------------------------------------------------- epoch
     def epoch(self, epoch: int | None = None,
@@ -449,14 +522,15 @@ class MetaBatchStream:
             if may_launch:
                 self._launch(nxt)
         with self._lock:
-            plan = self.plan   # snapshot: the whole epoch uses one plan
+            # One snapshot for the whole epoch: plan, graph and corpus swap
+            # together (replans and online refreshes), never mid-epoch.
+            plan, graph, corpus = self.plan, self.graph, self.corpus
         sampler = NeighborSampler(
             plan.batch_edges, seed=epoch_plan_seed(self.seed + 1, e))
         order_rng = np.random.default_rng([self.seed, 2, e])
         order = order_rng.permutation(plan.n_meta)
         recorded: list[list[np.ndarray]] = []
-        for s in range(0, len(order) - self.k + 1, self.k):
-            group = order[s : s + self.k]
+        for group in _epoch_groups(order, self.k):
             parts, idxs = [], []
             for i in group:
                 j = sampler.sample(int(i)) if self.with_neighbor else None
@@ -464,7 +538,7 @@ class MetaBatchStream:
                 idx = (main if j is None else np.concatenate(
                     [main, plan.meta_batches[j]]))
                 idxs.append(idx)
-                parts.append(_assemble(self.corpus, self.graph, idx,
+                parts.append(_assemble(corpus, graph, idx,
                                        self.pad, layout_bt=self.layout_bt,
                                        layout_len=self.layout_len))
             if self.record_indices:

@@ -53,3 +53,24 @@ def dnn_forward(params: dict, x: Array, *, dropout_rng=None,
                 keep = jax.random.bernoulli(sub, 1.0 - dropout, h.shape)
                 h = jnp.where(keep, h / (1.0 - dropout), 0.0)
     return h
+
+
+def dnn_hidden(params: dict, x: Array, *, layer: int = -1) -> Array:
+    """Clean (dropout-free) forward returning hidden layer ``layer``'s
+    post-ReLU activation — the embedding space the online affinity refresh
+    taps (Bai et al. 1511.06104 build the graph from exactly this).
+
+    ``layer`` indexes the hidden layers (negative counts from the last);
+    the output head is never included — logits are not an embedding.
+    """
+    n_hidden = len(params["layers"]) - 1
+    if not -n_hidden <= layer < n_hidden:
+        raise ValueError(
+            f"layer {layer} out of range for {n_hidden} hidden layers")
+    stop = layer % n_hidden
+    h = x
+    for i, lyr in enumerate(params["layers"][:-1]):
+        h = jax.nn.relu(h @ lyr["w"] + lyr["b"])
+        if i == stop:
+            return h
+    return h

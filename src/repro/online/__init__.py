@@ -1,0 +1,21 @@
+"""Online graph construction from the live model + dynamic corpus ingestion.
+
+The static reproduction builds its affinity graph once, from input
+features.  This package closes the ROADMAP "online graph construction"
+item: the graph tracks the *model's* notion of similarity (embedding-space
+refresh from activations captured during the scan epoch — Bai et al.
+1511.06104) and the corpus is mutable under traffic (incremental node
+insert/evict patched through the partitioner's delta-refine path).
+"""
+from repro.online.refresh import (OnlineManager, edge_churn, edge_set,
+                                  embedding_knn_graph, embedding_topk_device,
+                                  scatter_epoch_embeddings)
+
+__all__ = [
+    "OnlineManager",
+    "edge_set",
+    "edge_churn",
+    "embedding_knn_graph",
+    "embedding_topk_device",
+    "scatter_epoch_embeddings",
+]

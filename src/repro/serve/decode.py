@@ -42,19 +42,26 @@ def serve_step(params: dict, cfg: ModelConfig, cache: Any, tokens: Array,
 
 def generate(params: dict, cfg: ModelConfig, prompt: Array, *, steps: int,
              cache_len: int, temperature: float = 0.0, seed: int = 0) -> Array:
-    """Greedy/sampled generation: prefill via repeated decode (simple path)."""
+    """Greedy/sampled generation: prefill via repeated decode (simple path).
+
+    Prefill is pure cache building — the prompt's next tokens are known, so
+    no sampling (and no RNG) happens there.  The decode loop then splits a
+    fresh subkey per step, which makes the sampled continuation's key
+    stream a function of ``seed`` alone, independent of prompt length.
+    """
     B, Tp = prompt.shape
     cache = tf.init_cache(cfg, B, cache_len)
     key = jax.random.PRNGKey(seed)
 
+    prefill = jax.jit(lambda c, t, p: tf.decode_step(params, cfg, c, t, p)[1])
     step = jax.jit(lambda c, t, p, k: serve_step(
         params, cfg, c, t, p, k, temperature=temperature))
 
     toks = prompt
     # Feed the prompt token by token (teacher-forced prefill).
     for t in range(Tp - 1):
-        _, cache = step(cache, toks[:, t : t + 1],
-                        jnp.full((B,), t, jnp.int32), key)
+        cache = prefill(cache, toks[:, t : t + 1],
+                        jnp.full((B,), t, jnp.int32))
     cur = toks[:, -1:]
     outs = [toks]
     for t in range(steps):

@@ -390,6 +390,15 @@ class Engine:
         coordinates (chaos testing only — ``None`` in production).
       supervisor: override the prefetch supervisor (tests inject a
         no-sleep one); by default one is built from ``resilience``.
+      capture_fn: ``(params, batch) -> array`` — optional per-step embedding
+        tap (the online affinity refresh uses the hidden activations).  On
+        epochs selected by ``run(..., capture_epochs=...)`` it is evaluated
+        inside the scan body at the *post-step* params and its outputs ride
+        the stacked scan metrics (ys, not the donated carry — donation-safe)
+        back to the host, where ``on_epoch_end`` receives them concatenated
+        over the epoch's steps.  Off-epochs compile the exact same body as
+        ``capture_fn=None`` (the flag is a jit-static arg), so the hook is
+        zero-cost when idle.
     """
 
     def __init__(
@@ -409,6 +418,7 @@ class Engine:
         resilience=None,
         injector=None,
         supervisor: Supervisor | None = None,
+        capture_fn: Callable | None = None,
     ):
         if scan_chunk < 0:
             raise ValueError(f"scan_chunk must be >= 0, got {scan_chunk}")
@@ -432,6 +442,7 @@ class Engine:
         # reproduce the pre-resilience behaviour exactly.
         self.resilience = resilience
         self.injector = injector
+        self.capture_fn = capture_fn
         self._guard = bool(getattr(resilience, "nonfinite_guard", False))
         self._halt_after = int(
             getattr(resilience, "halt_after_consecutive", 0) or 0)
@@ -458,14 +469,34 @@ class Engine:
         # chunk — except at a guard window's first chunk, whose *undonated*
         # input carry survives the call and serves as the free backup a
         # tainted window's strict replay restarts from.
-        self._chunk_fn = jax.jit(self._run_chunk, donate_argnums=(0,))
-        self._chunk_keep = jax.jit(self._run_chunk)
+        # ``capture`` is static: an off-epoch traces the identical body a
+        # capture-free engine would, a capture epoch gets its own cached
+        # executable with the embedding ys added.
+        self._chunk_fn = jax.jit(self._run_chunk, donate_argnums=(0,),
+                                 static_argnums=(3,))
+        self._chunk_keep = jax.jit(self._run_chunk, static_argnums=(3,))
         # The strict guard body only compiles if a window ever needs the
         # replay (lazily, on first call) — clean runs never pay for it.
-        self._strict_fn = jax.jit(self._run_chunk_strict)
+        self._strict_fn = jax.jit(self._run_chunk_strict, static_argnums=(3,))
 
     # ---------------------------------------------------------------- scan
-    def _run_chunk(self, carry, batches, lr):
+    #: Metrics key the capture tap rides under; popped out of the metric
+    #: chunks (and concatenated for ``on_epoch_end``) before row averaging.
+    _CAPTURE_KEY = "capture/emb"
+
+    def _step_body(self, lr, capture: bool):
+        """The scan body, optionally extended with the embedding tap."""
+        def body(c, b):
+            c2, m = self.strategy.body(c, b, lr)
+            if capture:
+                m = dict(m)
+                m[self._CAPTURE_KEY] = self.capture_fn(
+                    self.strategy.state_of(c2).params, b)
+            return c2, m
+
+        return body
+
+    def _run_chunk(self, carry, batches, lr, capture: bool = False):
         """The hot path.  With the guard on the scan body is *identical* to
         the unguarded one — no per-step check, count, or select.  The only
         additions are a single post-scan finiteness reduction over the
@@ -477,8 +508,7 @@ class Engine:
         :meth:`_run_chunk_strict`, which recomputes the exact skip
         accounting.  Clean windows — the overwhelming case — pay one
         finiteness reduction per chunk and one scalar fetch per window."""
-        def body(c, b):
-            return self.strategy.body(c, b, lr)
+        body = self._step_body(lr, capture)
 
         if not self._guard:
             return jax.lax.scan(body, carry, batches)
@@ -498,12 +528,14 @@ class Engine:
                  jnp.logical_or(tainted, ~ok))
         return (out_sc, guard), metrics
 
-    def _run_chunk_strict(self, carry, batches, lr):
+    def _run_chunk_strict(self, carry, batches, lr, capture: bool = False):
         """The replay path for a window the hot pass tainted: the per-step
         guarded body with exact skip accounting."""
+        body = self._step_body(lr, capture)
+
         def guarded(c, b):
             sc, (skipped, consec, worst) = c
-            new_sc, metrics = self.strategy.body(sc, b, lr)
+            new_sc, metrics = body(sc, b)
             ok = all_finite((new_sc, metrics))
             # Skip the whole update on a non-finite step: params, opt
             # state, rng, step counter — the carry is exactly what it was,
@@ -648,6 +680,8 @@ class Engine:
         lr_schedule: Callable[[int], float],
         eval_fn: Callable[[Any], dict] | None = None,
         resume: bool = False,
+        capture_epochs: Callable[[int], bool] | Any = None,
+        on_epoch_end: Callable[[int, Any, Any], None] | None = None,
     ) -> EngineResult:
         """Train for ``n_epochs`` passes of ``pipeline_epoch()`` batches.
 
@@ -665,6 +699,14 @@ class Engine:
         pipelines the skipped epochs' batch iterators are drained so
         host-side pipeline RNG replays the exact stream an uninterrupted
         run would have seen.
+
+        ``capture_epochs`` (a predicate ``epoch -> bool``, or a container
+        of epoch indices) selects the epochs whose steps evaluate the
+        engine's ``capture_fn``; ``on_epoch_end(epoch, params, captures)``
+        then fires after every epoch row with the epoch's captures stacked
+        ``(steps, ...)`` on the host (``None`` on non-capture epochs) —
+        the online refresh hook.  On a guard-replayed window, skipped
+        steps' captures are zeroed like their metrics.
         """
         strategy = self.strategy
         # Epoch purity is a semantic contract — only an explicitly named
@@ -697,8 +739,16 @@ class Engine:
             for past in range(start):
                 for _ in epoch_batches(past):
                     pass
+        def capture_on(e: int) -> bool:
+            if self.capture_fn is None or capture_epochs is None:
+                return False
+            if callable(capture_epochs):
+                return bool(capture_epochs(e))
+            return e in capture_epochs
+
         for epoch in range(start, n_epochs):
             lr = jnp.float32(lr_schedule(epoch))
+            cap = capture_on(epoch)
             t0 = time.time()
             sc, gs = self._split_carry(carry)
             carry = self._wrap_carry(strategy.begin_epoch(sc), gs)
@@ -732,7 +782,7 @@ class Engine:
                 # The window's first chunk must not donate its input: the
                 # backup has to survive for a possible strict replay.
                 carry, item[2] = (self._chunk_keep if first else
-                                  self._chunk_fn)(carry, item[1], lr)
+                                  self._chunk_fn)(carry, item[1], lr, cap)
                 win.append(item)
                 if len(win) == self._guard_window:
                     done.append((win_backup, win[:], carry))
@@ -754,7 +804,7 @@ class Engine:
                     cur = backup
                     for item in items:
                         cur = self._bump(strategy, cur, bumps.get(item[0]))
-                        cur, item[2] = self._strict_fn(cur, item[1], lr)
+                        cur, item[2] = self._strict_fn(cur, item[1], lr, cap)
                     gs = self._split_carry(cur)[1]
                     skipped, worst = (int(v) for v in
                                       jax.device_get((gs[0], gs[2])))
@@ -785,7 +835,7 @@ class Engine:
                         bumps[chunk_idx] = (ev.worker, ev.arg)
                 if not self._guard:
                     carry = self._bump(strategy, carry, bumps.get(chunk_idx))
-                    carry, metrics = self._chunk_fn(carry, placed, lr)
+                    carry, metrics = self._chunk_fn(carry, placed, lr, cap)
                     metric_chunks.append(metrics)   # fetched after the epoch
                     continue
                 dispatch([chunk_idx, placed, None])
@@ -802,6 +852,13 @@ class Engine:
                     f"epoch {epoch}: pipeline yielded no batches "
                     "(n_meta < n_workers?); skipping epoch row", stacklevel=2)
                 continue
+            captures = None
+            if cap:
+                # Pull the tap out of the metric chunks (it must not enter
+                # the row means) and stack it (total_steps, ...) on host.
+                captures = np.concatenate(
+                    [np.asarray(jax.device_get(mc.pop(self._CAPTURE_KEY)))
+                     for mc in metric_chunks])
             row = {
                 k: float(np.mean(np.concatenate(
                     [np.asarray(mc[k]) for mc in metric_chunks])))
@@ -815,6 +872,11 @@ class Engine:
                 row.update(eval_fn(
                     strategy.state_of(self._split_carry(carry)[0]).params))
             history.append(row)
+            if on_epoch_end is not None:
+                on_epoch_end(
+                    epoch,
+                    strategy.state_of(self._split_carry(carry)[0]).params,
+                    captures)
             if self.checkpoint_every and \
                     (epoch + 1) % self.checkpoint_every == 0:
                 self._save(carry, epoch + 1, history)

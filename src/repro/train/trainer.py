@@ -75,6 +75,9 @@ def train_dnn_ssl(
     params: dict | None = None,
     resilience=None,
     injector=None,
+    capture_fn: Callable | None = None,
+    capture_epochs: Callable[[int], bool] | Any = None,
+    on_epoch_end: Callable[[int, Any, Any], None] | None = None,
 ) -> TrainResult:
     """Run the paper's training loop over ``pipeline_epoch`` batches.
 
@@ -103,6 +106,11 @@ def train_dnn_ssl(
     supervision, async over-stale dropping; ``injector`` (a
     ``repro.resilience.FaultInjector``) arms deterministic fault injection
     for chaos testing.
+
+    ``capture_fn(params, batch) -> array`` taps per-step embeddings inside
+    the scan on epochs selected by ``capture_epochs``;
+    ``on_epoch_end(epoch, params, captures)`` receives them stacked on
+    host — the online graph-refresh hook (see ``repro.online``).
     """
     opt = opt or adagrad()
     key = jax.random.PRNGKey(seed)
@@ -148,7 +156,7 @@ def train_dnn_ssl(
                     max_staleness=max_staleness, scan_chunk=scan_chunk,
                     prefetch=prefetch, checkpoint_every=checkpoint_every,
                     checkpoint_dir=checkpoint_dir, resilience=resilience,
-                    injector=injector)
+                    injector=injector, capture_fn=capture_fn)
     # The lr·k scaling rule compensates k-way gradient *averaging*; the
     # async server applies every pushed gradient individually, so its
     # reference regime keeps the base lr.
@@ -159,6 +167,7 @@ def train_dnn_ssl(
         def eval_fn(p):
             return {"eval/acc": evaluate_dnn(jax.device_get(p), *eval_data)}
     res = engine.run(pipeline_epoch, state=state, n_epochs=n_epochs,
-                     lr_schedule=schedule, eval_fn=eval_fn, resume=resume)
+                     lr_schedule=schedule, eval_fn=eval_fn, resume=resume,
+                     capture_epochs=capture_epochs, on_epoch_end=on_epoch_end)
     return TrainResult(params=res.state.params, history=res.history,
                        state=res.state)

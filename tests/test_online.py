@@ -1,0 +1,322 @@
+"""Online affinity refresh + dynamic corpus ingestion (``repro.online``)."""
+import numpy as np
+import pytest
+
+from repro.core.affinity import (build_affinity_graph, evict_nodes,
+                                 insert_nodes)
+from repro.core.metabatch import plan_meta_batches
+from repro.core.partition import HierarchyCache, extend_partition
+from repro.data import make_corpus
+from repro.data.pipeline import MetaBatchStream, _epoch_groups
+from repro.online import (OnlineManager, edge_churn, edge_set,
+                          embedding_knn_graph, scatter_epoch_embeddings)
+
+
+def _setup(n=600, d=24, C=6, k=8, seed=0, **stream_kw):
+    rng = np.random.default_rng(seed)
+    corpus = make_corpus(n, n_classes=C, input_dim=d, manifold_dim=4,
+                         seed=seed)
+    graph = build_affinity_graph(corpus.X, k=k)
+    plan = plan_meta_batches(graph, batch_size=25, n_classes=C, seed=seed)
+    stream = MetaBatchStream(corpus, graph, plan, n_workers=2,
+                             record_indices=True, seed=seed, **stream_kw)
+    return rng, corpus, graph, plan, stream
+
+
+def _manager(stream, corpus, graph, *, embed_fn=None, partitioner=None,
+             **cfg_kw):
+    from repro.api.config import OnlineConfig
+    cfg = OnlineConfig(**cfg_kw)
+    return OnlineManager(stream, corpus, graph, cfg, batch_size=25,
+                         n_classes=corpus.n_classes, embed_fn=embed_fn,
+                         partitioner=partitioner, seed=0)
+
+
+# ----------------------------------------------------------- graph builder
+def test_embedding_knn_graph_deterministic():
+    rng = np.random.default_rng(0)
+    E = rng.normal(size=(300, 16)).astype(np.float32)
+    a = embedding_knn_graph(E, k=6)
+    b = embedding_knn_graph(E, k=6)
+    assert a.sigma == b.sigma
+    assert (a.W != b.W).nnz == 0          # bit-identical sparse weights
+
+
+def test_embedding_knn_graph_host_matches_device():
+    """Satellite: self-tuning sigma (and hence weights) must agree across
+    construction backends — distances are pinned to f32 on both paths."""
+    rng = np.random.default_rng(1)
+    E = rng.normal(size=(96, 8)).astype(np.float32)
+    host = embedding_knn_graph(E, k=5, backend="host")
+    dev = embedding_knn_graph(E, k=5, backend="device")
+    assert host.sigma == pytest.approx(dev.sigma, rel=1e-6)
+    assert host.W.nnz == dev.W.nnz
+    np.testing.assert_allclose(host.W.toarray(), dev.W.toarray(),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_embedding_knn_graph_per_node_bandwidth():
+    rng = np.random.default_rng(2)
+    # Two clusters with very different density: local scaling keeps the
+    # sparse cluster's weights alive where a global sigma crushes them.
+    tight = rng.normal(size=(100, 8)).astype(np.float32) * 0.05
+    loose = rng.normal(size=(100, 8)).astype(np.float32) * 5.0 + 50.0
+    E = np.concatenate([tight, loose])
+    g_global = embedding_knn_graph(E, k=5, bandwidth="global")
+    g_local = embedding_knn_graph(E, k=5, bandwidth="per_node")
+    assert g_local.W.shape == g_global.W.shape
+    loose_w = g_local.W[100:, 100:].data
+    assert loose_w.size and loose_w.mean() > g_global.W[100:, 100:].data.mean()
+    with pytest.raises(ValueError, match="bandwidth"):
+        embedding_knn_graph(E, k=5, bandwidth="learned")
+
+
+def test_edge_churn_bounds():
+    rng = np.random.default_rng(3)
+    E = rng.normal(size=(200, 8)).astype(np.float32)
+    g = embedding_knn_graph(E, k=5)
+    assert edge_churn(g, g) == 0.0
+    far = embedding_knn_graph(
+        rng.normal(size=(200, 8)).astype(np.float32), k=5)
+    assert 0.0 < edge_churn(g, far) <= 1.0
+
+
+# ----------------------------------------------------------- insert / evict
+def test_insert_then_evict_restores_edge_set():
+    """Satellite: inserting nodes and evicting the same nodes is an exact
+    no-op on the surviving graph."""
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(300, 12)).astype(np.float32)
+    graph = build_affinity_graph(X, k=6)
+    X_new = rng.normal(size=(20, 12)).astype(np.float32)
+    g2 = insert_nodes(graph, X, X_new)
+    assert g2.n_nodes == 320
+    # every inserted node is connected
+    assert (np.diff(g2.W[300:].indptr) > 0).all()
+    g3 = evict_nodes(g2, np.arange(300, 320))
+    assert g3.n_nodes == 300
+    assert edge_set(g3) == edge_set(graph)
+    assert (g3.W != graph.W).nnz == 0
+
+
+def test_graph_insert_evict_methods_delegate():
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(100, 8)).astype(np.float32)
+    graph = build_affinity_graph(X, k=4)
+    X_new = rng.normal(size=(7, 8)).astype(np.float32)
+    g2 = graph.insert(X, X_new)
+    assert (g2.W != insert_nodes(graph, X, X_new).W).nnz == 0
+    g3 = g2.evict(np.arange(100, 107))
+    assert (g3.W != graph.W).nnz == 0
+
+
+def test_extend_partition_respects_cap_and_touches_only_tail():
+    rng = np.random.default_rng(6)
+    X = rng.normal(size=(400, 12)).astype(np.float32)
+    graph = build_affinity_graph(X, k=6)
+    plan = plan_meta_batches(graph, batch_size=25, n_classes=8, seed=0)
+    labels = plan.mini_block_labels
+    k_parts = int(labels.max()) + 1
+    g2 = insert_nodes(graph, X, rng.normal(size=(32, 12)).astype(np.float32))
+    res = extend_partition(g2.W, labels, k_parts, tol=0.15)
+    n = g2.n_nodes
+    cap = max(int(n / k_parts * 1.15), -(-n // k_parts))
+    assert res.labels.shape == (n,)
+    assert res.sizes.max() <= cap
+    # deterministic
+    res2 = extend_partition(g2.W, labels, k_parts, tol=0.15)
+    np.testing.assert_array_equal(res.labels, res2.labels)
+
+
+# -------------------------------------------------------------- scatter
+def test_scatter_epoch_embeddings_last_write_wins():
+    caps = np.stack([np.full((2, 3, 4), 1.0, np.float32),
+                     np.full((2, 3, 4), 2.0, np.float32)])
+    indices = [[np.array([0, 1]), np.array([2])],
+               [np.array([0]), np.array([3, 4])]]
+    E, seen = scatter_epoch_embeddings(caps, indices, 6)
+    assert seen.tolist() == [True, True, True, True, True, False]
+    assert E[0, 0] == 2.0      # step-1 capture overwrites step-0
+    assert E[1, 0] == 1.0
+    assert (E[5] == 0).all()
+    with pytest.raises(ValueError, match="index groups"):
+        scatter_epoch_embeddings(caps, indices[:1], 6)
+
+
+# -------------------------------------------------------------- manager
+def test_manager_refresh_swaps_graph_and_is_deterministic():
+    _, corpus, graph, plan, stream = _setup()
+    mgr = _manager(stream, corpus, graph, refresh_every=2)
+    rng = np.random.default_rng(7)
+    proj = rng.normal(size=(corpus.X.shape[1], 16)).astype(np.float32)
+    E = corpus.X @ proj
+    assert mgr.refresh(1, E)
+    assert stream.snapshot()[1] is mgr.graph
+    assert mgr.stats["refreshes"] == 1
+    assert mgr.embedding_space
+
+    # a second, independent manager over identical inputs produces the
+    # bit-identical graph and plan: refresh is pure in (inputs, seed)
+    _, corpus2, graph2, plan2, stream2 = _setup()
+    mgr2 = _manager(stream2, corpus2, graph2, refresh_every=2)
+    assert mgr2.refresh(1, E)
+    assert (mgr.graph.W != mgr2.graph.W).nnz == 0
+    p1, p2 = stream.snapshot()[0], stream2.snapshot()[0]
+    np.testing.assert_array_equal(p1.mini_block_labels, p2.mini_block_labels)
+    assert all((a == b).all()
+               for a, b in zip(p1.meta_batches, p2.meta_batches))
+
+
+def test_manager_insert_uses_delta_path_only():
+    """Acceptance: a 32-node insert never triggers a full partition
+    rebuild — the full-path partitioner is booby-trapped, the swapped-in
+    hierarchy cache records zero builds, and stats stay delta-only."""
+    _, corpus, graph, plan, stream = _setup()
+    cache = HierarchyCache(graph.W, tol=0.15, coarsen_to=60, seed=0)
+    with stream._lock:
+        stream._hierarchy = cache
+
+    def trap(*a, **k):
+        raise AssertionError("full partition_graph rebuild on insert path")
+
+    mgr = _manager(stream, corpus, graph, refresh_every=2, partitioner=trap)
+    rng = np.random.default_rng(8)
+    idx = mgr.insert(rng.normal(size=(32, corpus.X.shape[1]))
+                     .astype(np.float32))
+    np.testing.assert_array_equal(idx, np.arange(600, 632))
+    assert mgr.stats == {"refreshes": 0, "delta_refines": 0,
+                         "full_rebuilds": 0, "inserts": 1, "evictions": 0,
+                         "rejected": 0}
+    new_hier = stream.snapshot()[3]
+    assert new_hier is not cache
+    assert new_hier.builds == 0          # lazily swapped in, never built
+    assert stream.snapshot()[2].n == 632
+    assert not stream.snapshot()[2].label_mask[600:].any()
+
+    # evict the same nodes: graph back to the original edge set
+    assert mgr.evict(idx)
+    assert edge_set(mgr.graph) == edge_set(graph)
+    assert stream.snapshot()[2].n == 600
+    assert mgr.stats["evictions"] == 1 and mgr.stats["full_rebuilds"] == 0
+
+
+def test_manager_stream_serves_after_swap():
+    _, corpus, graph, plan, stream = _setup()
+    mgr = _manager(stream, corpus, graph, refresh_every=2)
+    steps_before = sum(1 for _ in stream.epoch(epoch=0, n_epochs=4))
+    rng = np.random.default_rng(9)
+    E = corpus.X @ rng.normal(size=(corpus.X.shape[1], 16)).astype(np.float32)
+    assert mgr.refresh(1, E)
+    steps_after = sum(1 for _ in stream.epoch(epoch=2, n_epochs=4))
+    assert steps_after == steps_before
+    assert stream.swaps >= 1
+
+
+def test_manager_requires_recorded_indices():
+    _, corpus, graph, plan, stream = _setup()
+    stream.record_indices = False
+    stream.last_epoch_indices = None
+    mgr = _manager(stream, corpus, graph, refresh_every=1)
+    with pytest.raises(RuntimeError, match="record_indices"):
+        mgr.on_epoch_end(0, {"p": 1}, np.zeros((1, 2, 3, 4), np.float32))
+
+
+# ------------------------------------------------------------ config layer
+def test_online_config_validation():
+    from repro.api.config import (BatchConfig, ExperimentConfig,
+                                  OnlineConfig)
+    assert not OnlineConfig().active
+    assert OnlineConfig(refresh_every=3).active
+    with pytest.raises(ValueError, match="refresh_every"):
+        OnlineConfig(refresh_every=-1)
+    with pytest.raises(ValueError, match="bandwidth"):
+        OnlineConfig(bandwidth="learned")
+    with pytest.raises(ValueError, match="churn_threshold"):
+        OnlineConfig(churn_threshold=1.5)
+    with pytest.raises(ValueError, match="metabatch_stream"):
+        ExperimentConfig(online=OnlineConfig(refresh_every=2))
+    with pytest.raises(ValueError, match="tap"):
+        ExperimentConfig(
+            batch=BatchConfig(pipeline="metabatch_stream"),
+            online=OnlineConfig(refresh_every=2, tap=7))
+    cfg = ExperimentConfig(batch=BatchConfig(pipeline="metabatch_stream"),
+                           online=OnlineConfig(refresh_every=2))
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+
+
+# ---------------------------------------------------------- end-to-end run
+def _tiny_online_config(n_epochs=4):
+    from repro.api import (BatchConfig, DataConfig, ExecutionConfig,
+                           ExperimentConfig, GraphConfig, OnlineConfig,
+                           TrainConfig)
+    return ExperimentConfig(
+        data=DataConfig(n=400, n_classes=5, input_dim=16, manifold_dim=4,
+                        label_ratio=0.2, test_fraction=0.1),
+        graph=GraphConfig(k=6),
+        batch=BatchConfig(pipeline="metabatch_stream", batch_size=20),
+        train=TrainConfig(n_epochs=n_epochs, n_workers=2, hidden_dim=32,
+                          n_hidden=2, dropout=0.0),
+        execution=ExecutionConfig(scan_chunk=4, prefetch=0),
+        online=OnlineConfig(refresh_every=2))
+
+
+@pytest.mark.slow
+def test_experiment_online_refresh_end_to_end():
+    """Acceptance: OnlineConfig(refresh_every=2) trains end to end and the
+    graph the stream serves is provably rebuilt from live embeddings."""
+    from repro.api import Experiment
+    exp = Experiment(_tiny_online_config())
+    exp.build()
+    input_edges = edge_set(exp.graph)
+    res = exp.run()
+    assert exp.online is not None
+    assert exp.online.stats["refreshes"] == 2        # epochs 1 and 3
+    assert exp.online.embedding_space
+    served = exp.pipeline.stream.snapshot()[1]
+    assert edge_set(served) != input_edges           # not the feature graph
+    assert len(res.history) == 4
+
+
+@pytest.mark.slow
+def test_experiment_online_refresh_bit_reproducible():
+    """Acceptance: the refresh at epoch e is a pure function of
+    (params, corpus, OnlineConfig, seed) — two identical runs serve
+    bit-identical graphs."""
+    from repro.api import Experiment
+    graphs = []
+    for _ in range(2):
+        exp = Experiment(_tiny_online_config(n_epochs=2))
+        exp.run()
+        graphs.append(exp.pipeline.stream.snapshot()[1])
+    a, b = graphs
+    assert a.sigma == b.sigma
+    assert (a.W != b.W).nnz == 0
+
+
+# --------------------------------------------------- epoch coverage (sat. 2)
+@pytest.mark.parametrize("n,k", [(7, 2), (10, 3), (5, 5), (9, 4)])
+def test_epoch_groups_cover_every_index(n, k):
+    order = np.random.default_rng(0).permutation(n)
+    groups = list(_epoch_groups(order, k))
+    assert all(len(g) == k for g in groups)
+    seen = np.concatenate(groups) if groups else np.empty(0, int)
+    assert set(seen.tolist()) == set(range(n))
+    # every index exactly once, except wrap-padding on the final group
+    assert len(groups) == -(-n // k)
+
+
+def test_epoch_groups_small_n_yields_nothing():
+    assert list(_epoch_groups(np.arange(3), 4)) == []
+
+
+def test_stream_epoch_visits_all_meta_batches_nondivisible():
+    """Satellite: with n_meta % n_workers != 0 the tail meta-batches must
+    still be served (wrap-padded), not silently dropped."""
+    _, corpus, graph, plan, stream = _setup(n=625)
+    n_meta = len(plan.meta_batches)
+    assert n_meta % 2 == 1, "setup must produce an odd meta-batch count"
+    steps = sum(1 for _ in stream.epoch(epoch=0, n_epochs=1))
+    assert steps == -(-n_meta // 2)
+    visited = np.concatenate(
+        [np.concatenate(g) for g in stream.last_epoch_indices])
+    assert np.unique(visited).size == corpus.n

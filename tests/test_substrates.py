@@ -209,3 +209,31 @@ def test_generate_greedy_deterministic():
     b = generate(params, cfg, prompt, steps=6, cache_len=32)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert a.shape == (1, 10)
+
+
+def test_generate_key_stream_independent_of_prefill_length():
+    """Regression: prefill must consume no RNG — the sampled continuation's
+    key stream is a function of ``seed`` alone, so two prompts of different
+    lengths draw identical samples when the logits don't discriminate.
+
+    Zeroed params make every step's logits constant (uniform sampling), so
+    any continuation difference could only come from the key stream.  The
+    seed implementation reused the unsplit key across prefill steps and
+    re-split it in the decode loop, shifting the stream by prompt length.
+    """
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = jax.tree.map(jnp.zeros_like,
+                          tf.init_params(cfg, jax.random.PRNGKey(0)))
+    short = jnp.asarray([[1, 2]], jnp.int32)
+    long = jnp.asarray([[5, 6, 7, 8, 9]], jnp.int32)
+    a = generate(params, cfg, short, steps=8, cache_len=32,
+                 temperature=1.0, seed=3)
+    b = generate(params, cfg, long, steps=8, cache_len=32,
+                 temperature=1.0, seed=3)
+    np.testing.assert_array_equal(np.asarray(a[:, 2:]), np.asarray(b[:, 5:]))
+    # sanity: a different seed draws a different continuation
+    c = generate(params, cfg, short, steps=8, cache_len=32,
+                 temperature=1.0, seed=4)
+    assert not np.array_equal(np.asarray(a[:, 2:]), np.asarray(c[:, 2:]))
