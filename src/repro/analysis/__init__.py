@@ -1,7 +1,6 @@
-"""Static audit toolkit: jaxpr contracts, Pallas VMEM/tiling, concurrency.
+"""Static audit toolkit: structural and semantic proofs on every commit.
 
-Three pass families prove the paper's efficiency invariants on every
-commit (see the module docstrings for the full rule tables):
+Seven pass families (see the module docstrings for the full rule tables):
 
   * :mod:`repro.analysis.jaxpr_audit` — traced-jaxpr proofs over the AUDIT
     registry's entry points (no dense B×B outside Pallas, no silent dtype
@@ -10,21 +9,45 @@ commit (see the module docstrings for the full rule tables):
   * :mod:`repro.analysis.vmem_audit` — static VMEM/tiling models of every
     kernel launch, validating the whole ``kernels/tuning.py`` table;
   * :mod:`repro.analysis.concurrency_audit` — AST lock-discipline /
-    thread-lifecycle / publication lint over the threaded modules.
+    thread-lifecycle / publication lint over the threaded modules;
+  * :mod:`repro.analysis.rng_audit` — PRNG key lineage through audited
+    jaxprs (reuse, unsplit scan carries, discarded entropy);
+  * :mod:`repro.analysis.race_audit` — Pallas write-race proofs from the
+    launch models' grids/index maps plus the block-sparse tile-list
+    contract (duplicates, strip contiguity, sentinels/coverage);
+  * :mod:`repro.analysis.determinism_audit` — unordered float scatters in
+    bit-reproducible entries + host nondeterminism in seeded modules;
+  * :mod:`repro.analysis.sharding_audit` — collectives vs declared mesh
+    axes, loop-body gathers, donated-carry sharding fixpoints.
 
+Inline waivers (``# audit: safe(RULE): reason`` / scoped
+``safe(RULE@where-glob)``) are shared machinery in
+:mod:`repro.analysis.waivers`; a stale marker is itself a finding (A001).
 Run ``python -m repro.analysis --ci`` for the gated CI entry point.
 """
 from repro.analysis.concurrency_audit import (DEFAULT_TARGETS, audit_file,
                                               audit_paths)
+from repro.analysis.determinism_audit import (SEEDED_MODULES,
+                                              audit_entry_determinism,
+                                              audit_seeded_modules,
+                                              register_seeded_module)
 from repro.analysis.findings import (RULES, AuditReport, Finding,
                                      load_baseline, save_baseline,
                                      unbaselined)
 from repro.analysis.jaxpr_audit import (EntryPoint, audit_entry,
-                                        count_bxb_intermediates, iter_eqns)
+                                        count_bxb_intermediates, iter_eqns,
+                                        trace_entry)
+from repro.analysis.race_audit import (audit_races, check_launch_races,
+                                       check_layout, check_tile_list)
+from repro.analysis.rng_audit import analyze_rng, audit_entry_rng
+from repro.analysis.sharding_audit import (COLLECTIVE_PRIMITIVES,
+                                           audit_entry_sharding)
 from repro.analysis.vmem_audit import (VMEM_BUDGET_BYTES, Block, Launch,
                                        check_launch, check_tiles,
                                        kernel_launches, validate_tuning_table,
                                        vmem_footprint_bytes)
+from repro.analysis.waivers import (Waiver, apply_waivers, scan_waivers,
+                                    stale_waiver_findings)
 
 __all__ = [
     "RULES",
@@ -35,6 +58,7 @@ __all__ = [
     "unbaselined",
     "EntryPoint",
     "audit_entry",
+    "trace_entry",
     "count_bxb_intermediates",
     "iter_eqns",
     "Block",
@@ -48,6 +72,22 @@ __all__ = [
     "DEFAULT_TARGETS",
     "audit_file",
     "audit_paths",
+    "analyze_rng",
+    "audit_entry_rng",
+    "audit_races",
+    "check_launch_races",
+    "check_layout",
+    "check_tile_list",
+    "audit_entry_determinism",
+    "audit_seeded_modules",
+    "register_seeded_module",
+    "SEEDED_MODULES",
+    "audit_entry_sharding",
+    "COLLECTIVE_PRIMITIVES",
+    "Waiver",
+    "scan_waivers",
+    "apply_waivers",
+    "stale_waiver_findings",
     "build_report",
 ]
 

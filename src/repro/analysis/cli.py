@@ -6,14 +6,24 @@ Usage::
     python -m repro.analysis                 # all passes, write report
     python -m repro.analysis --ci            # same + nonzero exit on any
                                              # finding not in the baseline
-    python -m repro.analysis --passes vmem   # one pass family
+    python -m repro.analysis --only vmem,rng # pass subsets
+    python -m repro.analysis --format github # GitHub Actions annotations
     python -m repro.analysis --update-baseline   # accept current findings
+
+Seven pass families: the structural tier (``jaxpr`` shape/donation/
+callback contracts, ``vmem`` Pallas footprint/alignment, ``concurrency``
+thread lint) and the semantic tier (``rng`` key lineage, ``race`` kernel
+write-race/tile-list proofs, ``determinism`` bit-reproducibility,
+``sharding`` collective/mesh contracts).  Entry points are traced ONCE
+per run and the closed jaxpr is shared by every jaxpr-walking pass.
 
 The report (``AUDIT_report.json``) always records every finding plus the
 per-pass metrics; the *gate* only fails on error-severity findings whose
 stable fingerprint is absent from ``AUDIT_baseline.json``.  Accepting a
 finding is therefore an explicit, reviewable commit to the baseline file —
-never a side effect of running the tool.
+never a side effect of running the tool.  Inline ``# audit: safe(...)``
+waivers are honored across all passes, and a waiver that no longer
+suppresses anything is itself flagged (``A001``).
 """
 from __future__ import annotations
 
@@ -21,15 +31,30 @@ import argparse
 import os
 import sys
 
-from repro.analysis.concurrency_audit import audit_paths
-from repro.analysis.findings import (AuditReport, load_baseline,
+from repro.analysis.concurrency_audit import audit_paths, default_targets
+from repro.analysis.determinism_audit import (audit_entry_determinism,
+                                              audit_seeded_modules,
+                                              default_seeded_modules)
+from repro.analysis.findings import (AuditReport, Finding, load_baseline,
                                      save_baseline, unbaselined)
-from repro.analysis.jaxpr_audit import audit_entry
+from repro.analysis.jaxpr_audit import audit_entry, trace_entry
+from repro.analysis.race_audit import audit_races
+from repro.analysis.rng_audit import audit_entry_rng
+from repro.analysis.sharding_audit import audit_entry_sharding
 from repro.analysis.vmem_audit import validate_tuning_table
+from repro.analysis.waivers import (Waiver, apply_waivers, scan_waivers,
+                                    stale_waiver_findings)
 
 __all__ = ["build_report", "main", "PASSES"]
 
-PASSES = ("jaxpr", "vmem", "concurrency")
+PASSES = ("jaxpr", "vmem", "concurrency", "rng", "race", "determinism",
+          "sharding")
+#: Pass families that walk traced entry-point jaxprs (shared traces).
+_JAXPR_PASSES = frozenset({"jaxpr", "rng", "determinism", "sharding"})
+#: Extra waiver-bearing files beyond the threaded/seeded registries
+#: (scoped waivers for entry-level findings live next to the entries).
+_WAIVER_FILES = ("src/repro/analysis/entrypoints.py",
+                 "src/repro/kernels/ops.py")
 
 
 def _repo_root(start: str = ".") -> str:
@@ -45,16 +70,43 @@ def _repo_root(start: str = ".") -> str:
         d = parent
 
 
-def _run_jaxpr(report: AuditReport) -> None:
+def _collect_waivers(root: str) -> list[Waiver]:
+    """Every inline marker in the audit-covered source files."""
+    rels: list[str] = []
+    seen: set[str] = set()
+    for rel in (tuple(default_targets())
+                + tuple(default_seeded_modules().values())
+                + _WAIVER_FILES):
+        if rel not in seen:
+            seen.add(rel)
+            rels.append(rel)
+    waivers: list[Waiver] = []
+    for rel in rels:
+        full = os.path.join(root, rel)
+        if os.path.exists(full):
+            waivers.extend(scan_waivers(full, relpath=rel))
+    return waivers
+
+
+def _traced_entries():
+    """[(entry, closed_jaxpr)] for every registered AUDIT entry — traced
+    once, shared across all jaxpr-walking passes."""
     from repro.api.registry import AUDIT
 
-    metrics: dict = {}
-    findings = []
+    out = []
     for name in AUDIT:
         entry = AUDIT.get(name)
-        entry_findings, entry_metrics = audit_entry(entry)
+        out.append((entry, trace_entry(entry)))
+    return out
+
+
+def _run_jaxpr(report: AuditReport, entries=None) -> None:
+    metrics: dict = {}
+    findings = []
+    for entry, closed in (_traced_entries() if entries is None else entries):
+        entry_findings, entry_metrics = audit_entry(entry, closed)
         findings.extend(entry_findings)
-        metrics[name] = entry_metrics
+        metrics[entry.name] = entry_metrics
     report.extend("jaxpr", findings, {"entries": metrics})
 
 
@@ -63,22 +115,96 @@ def _run_vmem(report: AuditReport) -> None:
     report.extend("vmem", findings, metrics)
 
 
-def _run_concurrency(report: AuditReport, root: str) -> None:
+def _run_concurrency(report: AuditReport, root: str,
+                     used: set | None = None) -> None:
     # None = the live THREADED_MODULES registry (supervisor/faults and any
     # later-registered threaded module included) — not a frozen tuple.
-    findings, metrics = audit_paths(None, root=root)
+    findings, metrics = audit_paths(None, root=root, used=used)
     report.extend("concurrency", findings, metrics)
 
 
+def _run_rng(report: AuditReport, entries=None) -> None:
+    metrics: dict = {}
+    findings = []
+    for entry, closed in (_traced_entries() if entries is None else entries):
+        got, m = audit_entry_rng(entry, closed)
+        findings.extend(got)
+        metrics[entry.name] = m
+    report.extend("rng", findings, {"entries": metrics})
+
+
+def _run_race(report: AuditReport) -> None:
+    findings, metrics = audit_races()
+    report.extend("race", findings, metrics)
+
+
+def _run_determinism(report: AuditReport, root: str, entries=None,
+                     used: set | None = None) -> None:
+    metrics: dict = {}
+    findings = []
+    for entry, closed in (_traced_entries() if entries is None else entries):
+        got, m = audit_entry_determinism(entry, closed)
+        findings.extend(got)
+        metrics[entry.name] = m
+    host_findings, host_metrics = audit_seeded_modules(root=root, used=used)
+    report.extend("determinism", findings + host_findings,
+                  {"entries": metrics, **host_metrics})
+
+
+def _run_sharding(report: AuditReport, entries=None) -> None:
+    metrics: dict = {}
+    findings = []
+    for entry, closed in (_traced_entries() if entries is None else entries):
+        got, m = audit_entry_sharding(entry, closed)
+        findings.extend(got)
+        metrics[entry.name] = m
+    report.extend("sharding", findings, {"entries": metrics})
+
+
 def build_report(passes=PASSES, *, root: str = ".") -> AuditReport:
-    """Run the requested pass families and aggregate one report."""
+    """Run the requested pass families and aggregate one report.
+
+    Each pass runs into its own sub-report; findings then flow through the
+    central waiver filter (scoped and line markers) before landing in the
+    aggregate, and markers that suppressed nothing in any ran pass come
+    back as A001 stale-waiver findings.
+    """
     report = AuditReport()
+    used: set = set()
+    waivers = _collect_waivers(root)
+
+    def run(runner, *runner_args):
+        sub = AuditReport()
+        runner(sub, *runner_args)
+        for pass_name, entry in sub.passes.items():
+            metrics = {k: v for k, v in entry.items() if k != "findings"}
+            pass_findings = [f for f in sub.findings
+                             if f.pass_name == pass_name]
+            kept = apply_waivers(pass_findings, waivers, used=used)
+            report.extend(pass_name, kept, metrics or None)
+
+    entries = _traced_entries() if _JAXPR_PASSES & set(passes) else []
     if "jaxpr" in passes:
-        _run_jaxpr(report)
+        run(_run_jaxpr, entries)
     if "vmem" in passes:
-        _run_vmem(report)
+        run(_run_vmem)
     if "concurrency" in passes:
-        _run_concurrency(report, root)
+        run(_run_concurrency, root, used)
+    if "rng" in passes:
+        run(_run_rng, entries)
+    if "race" in passes:
+        run(_run_race)
+    if "determinism" in passes:
+        run(_run_determinism, root, entries, used)
+    if "sharding" in passes:
+        run(_run_sharding, entries)
+
+    stale = stale_waiver_findings(waivers, used, passes)
+    report.extend("waivers", stale, {
+        "waivers_seen": len(waivers),
+        "waivers_used": len(used),
+        "waivers_stale": len(stale),
+    })
     return report
 
 
@@ -106,22 +232,76 @@ def _summary_lines(report: AuditReport) -> list[str]:
         n_threads = sum(m.get("threads_seen", 0) for m in files.values())
         lines.append(f"  concurrency: {len(files)} files, "
                      f"{n_threads} thread sites audited")
+    rng_entries = report.metrics.get("rng/entries", {})
+    if rng_entries:
+        keys = sum(m.get("keys_traced", 0) for m in rng_entries.values())
+        draws = sum(m.get("draws", 0) for m in rng_entries.values())
+        lines.append(f"  rng: {len(rng_entries)} entries, {keys} keys "
+                     f"traced, {draws} draws")
+    launches = report.metrics.get("race/launches_checked")
+    if launches is not None:
+        lines.append(
+            f"  race: {launches} launches checked, "
+            f"{report.metrics.get('race/output_blocks_proven', 0)} output "
+            f"blocks and {report.metrics.get('race/tiles_proven_race_free', 0)}"
+            " tile entries proven race-free")
+    det_entries = report.metrics.get("determinism/entries", {})
+    if det_entries or report.metrics.get("determinism/seeded_modules_scanned"):
+        scatters = sum(m.get("scatters_checked", 0)
+                       for m in det_entries.values())
+        mods = report.metrics.get("determinism/seeded_modules_scanned", 0)
+        lines.append(f"  determinism: {scatters} scatters checked, "
+                     f"{mods} seeded modules swept")
+    sh_entries = report.metrics.get("sharding/entries", {})
+    if sh_entries:
+        colls = sum(m.get("collectives_audited", 0)
+                    for m in sh_entries.values())
+        lines.append(f"  sharding: {len(sh_entries)} entries, "
+                     f"{colls} collectives audited")
+    seen = report.metrics.get("waivers/waivers_seen")
+    if seen:
+        lines.append(
+            f"  waivers: {seen} seen, "
+            f"{report.metrics.get('waivers/waivers_used', 0)} used, "
+            f"{report.metrics.get('waivers/waivers_stale', 0)} stale")
     return lines
+
+
+def _github_annotation(f: Finding) -> str:
+    """One GitHub Actions workflow command for a (new) finding."""
+    loc = ""
+    if f.path:
+        loc = f"file={f.path}"
+        if f.line:
+            loc += f",line={f.line}"
+    msg = f"[{f.rule}] {f.where}: {f.message}"
+    # Workflow-command escaping for the message payload.
+    msg = (msg.replace("%", "%25").replace("\r", "%0D")
+              .replace("\n", "%0A"))
+    return f"::error {loc}::{msg}" if loc else f"::error::{msg}"
 
 
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="Static audits: jaxpr contracts, Pallas VMEM/tiling, "
-                    "concurrency lint.")
+                    "concurrency lint, RNG lineage, kernel write-races, "
+                    "determinism, sharding/collectives.")
     parser.add_argument("--passes", default=",".join(PASSES),
                         help="comma-separated subset of: "
                              + ", ".join(PASSES))
+    parser.add_argument("--only", dest="passes",
+                        help="alias for --passes (run a pass subset)")
     parser.add_argument("--report", default="AUDIT_report.json",
                         help="report output path (default: %(default)s)")
     parser.add_argument("--baseline", default=None,
                         help="baseline path (default: AUDIT_baseline.json "
                              "at the repo root)")
+    parser.add_argument("--format", choices=("text", "github"),
+                        default="text",
+                        help="finding output format; 'github' emits "
+                             "::error workflow annotations for findings "
+                             "not in the baseline")
     parser.add_argument("--update-baseline", action="store_true",
                         help="accept all current findings into the baseline"
                              " and exit 0")
@@ -155,6 +335,9 @@ def main(argv=None) -> int:
     for line in _summary_lines(report):
         print(line)
     for f in report.findings:
+        if f in new and args.format == "github":
+            print(_github_annotation(f))
+            continue
         tag = "NEW " if f in new else ("info " if f.severity != "error"
                                        else "base ")
         print(f"{tag}{f.format()}")

@@ -42,10 +42,11 @@ should be a one-line diff review question, not a silent gap.
 from __future__ import annotations
 
 import ast
-import re
+import dataclasses
 from typing import Iterable, Iterator
 
 from repro.analysis.findings import Finding
+from repro.analysis.waivers import apply_waivers, scan_waivers
 
 __all__ = ["audit_file", "audit_paths", "default_targets",
            "register_threaded_module", "DEFAULT_TARGETS", "THREADED_MODULES"]
@@ -78,7 +79,6 @@ def default_targets() -> tuple[str, ...]:
 #: :func:`default_targets`, which sees later registrations.
 DEFAULT_TARGETS = default_targets()
 
-_SUPPRESS_RE = re.compile(r"#\s*audit:\s*safe\((C\d{3})\)")
 _HB_CALLS = frozenset({"join", "wait", "get", "acquire", "result"})
 _PUBLISH_CALLS = frozenset({"append", "extend", "put", "add"})
 
@@ -316,17 +316,15 @@ def _first_read(reader_nodes, kind: str, name: str, *,
 
 
 # ---------------------------------------------------------------- entry
-def _suppressions(source: str) -> dict[int, set[str]]:
-    out: dict[int, set[str]] = {}
-    for lineno, line in enumerate(source.splitlines(), start=1):
-        for m in _SUPPRESS_RE.finditer(line):
-            out.setdefault(lineno, set()).add(m.group(1))
-    return out
+def audit_file(path: str, *, where: str | None = None,
+               used: set | None = None) -> tuple[list[Finding], dict]:
+    """Run all concurrency rules over one Python source file.
 
-
-def audit_file(path: str, *, where: str | None = None
-               ) -> tuple[list[Finding], dict]:
-    """Run all concurrency rules over one Python source file."""
+    Inline ``# audit: safe(Cxxx)`` line waivers are applied here (shared
+    machinery in :mod:`repro.analysis.waivers`); the keys of the markers
+    that fired land in ``used`` when given, so the CLI's stale-waiver
+    sweep (A001) can account for them.
+    """
     with open(path) as fh:
         source = fh.read()
     tree = ast.parse(source, filename=path)
@@ -337,27 +335,22 @@ def audit_file(path: str, *, where: str | None = None
         if isinstance(node, ast.ClassDef):
             classes[node.name] = _audit_class(node, where, findings)
     n_threads = _audit_threads(tree, where, findings)
-    suppress = _suppressions(source)
-    kept = []
-    n_suppressed = 0
-    for f in findings:
-        waived = any(f.rule in suppress.get(ln, ())
-                     for ln in ((f.line, f.line - 1) if f.line else ()))
-        if waived:
-            n_suppressed += 1
-        else:
-            kept.append(f)
+    # Line waivers match on the finding's path; these findings are all
+    # rooted in this file.
+    findings = [dataclasses.replace(f, path=where) for f in findings]
+    waivers = scan_waivers(path, relpath=where)
+    kept = apply_waivers(findings, waivers, used=used)
     metrics = {
         "classes": {name: info for name, info in classes.items()
                     if info["lock_attrs"]},
         "threads_seen": n_threads,
-        "suppressed": n_suppressed,
+        "suppressed": len(findings) - len(kept),
     }
     return kept, metrics
 
 
-def audit_paths(paths: Iterable[str] | None = None, *, root: str = "."
-                ) -> tuple[list[Finding], dict]:
+def audit_paths(paths: Iterable[str] | None = None, *, root: str = ".",
+                used: set | None = None) -> tuple[list[Finding], dict]:
     """The concurrency pass entry point: audit every target file.
     ``paths=None`` (default) audits the live :data:`THREADED_MODULES`
     registry, including modules registered after import."""
@@ -367,7 +360,8 @@ def audit_paths(paths: Iterable[str] | None = None, *, root: str = "."
     metrics: dict = {"files": {}}
     for rel in (default_targets() if paths is None else paths):
         path = os.path.join(root, rel)
-        file_findings, file_metrics = audit_file(path, where=rel)
+        file_findings, file_metrics = audit_file(path, where=rel,
+                                                 used=used)
         findings.extend(file_findings)
         metrics["files"][rel] = file_metrics
     return findings, metrics

@@ -1,0 +1,322 @@
+"""Determinism auditor (D-pass): device and host nondeterminism.
+
+The paper's stochastic-partition contract (§2, Eq. 6) is *bit*-
+reproducible: the same seed must reproduce the same partition, the same
+meta-batch schedule, and the same training trajectory.  Two things break
+that silently:
+
+  * **Device**: an unordered floating-point ``scatter-add`` (the lowering
+    of ``segment_sum`` and friends).  When several updates can land on
+    the same output element (``unique_indices=False``) the addition order
+    is backend-scheduled, and float addition does not commute in the last
+    ulp — results drift across runs/backends.  ``D001`` flags any such
+    scatter in an entry point audited under the bit-reproducibility
+    contract (``EntryPoint.deterministic``).  Collision-free scatters —
+    batched one-update-per-row gathers' transposes — are provably safe
+    and stay silent: safety is decided from the dimension numbers (one
+    independent update), not from hope.
+  * **Host**: Python-level nondeterminism inside the *seeded modules* —
+    the partitioner, planner, pipeline, capture/refresh, and fault-plan
+    code whose outputs feed the schedule.  ``D002`` flags set-iteration
+    order feeding a decision (``for x in someset``, ``max(someset,
+    key=...)``, ``someset.pop()``, materializing a set into a list);
+    ``D003`` flags wall-clock or global-state RNG (``np.random.*``
+    module-level samplers, a seedless ``default_rng()`` /
+    ``SeedSequence()`` / ``RandomState()``, the stdlib ``random`` module,
+    ``time.*`` feeding an RNG constructor).
+
+Both host rules honor the standard ``# audit: safe(D00x): reason``
+line waivers (e.g. iteration over an int set that is deterministic in
+CPython is waivable *with the reason on record*).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.analysis.jaxpr_audit import EntryPoint, iter_eqns
+from repro.analysis.waivers import apply_waivers, scan_waivers
+
+__all__ = [
+    "audit_entry_determinism",
+    "audit_seeded_modules",
+    "register_seeded_module",
+    "default_seeded_modules",
+    "SEEDED_MODULES",
+]
+
+#: Modules whose host-side logic feeds the seeded §2/Eq.-6 pipeline.
+#: name -> repo-relative path; extend via :func:`register_seeded_module`.
+SEEDED_MODULES: dict[str, str] = {
+    "partition": "src/repro/core/partition.py",
+    "metabatch": "src/repro/core/metabatch.py",
+    "pipeline": "src/repro/data/pipeline.py",
+    "online": "src/repro/online/refresh.py",
+    "faults": "src/repro/resilience/faults.py",
+}
+
+
+def register_seeded_module(name: str, path: str) -> None:
+    """Add a module to the D-pass host sweep (repo-relative path)."""
+    SEEDED_MODULES[name] = path
+
+
+def default_seeded_modules() -> dict[str, str]:
+    return dict(SEEDED_MODULES)
+
+
+# ---------------------------------------------------------------------------
+# D001 — unordered float scatter-add in a jaxpr
+# ---------------------------------------------------------------------------
+_SCATTER_ADD = frozenset({"scatter-add", "scatter-mul"})
+
+
+def _scatter_independent_updates(eqn) -> int:
+    """Number of independent update slices that may collide.
+
+    ``updates`` axes split into window dims (within one update slice) and
+    scatter dims (enumerate the slices).  Batching dims pair 1:1 with an
+    operand dim — collision-free by construction — so only the remaining
+    scatter dims can produce colliding updates.
+    """
+    dnums = eqn.params["dimension_numbers"]
+    updates = eqn.invars[2]
+    window = set(dnums.update_window_dims)
+    scatter_dims = [d for d in range(updates.aval.ndim) if d not in window]
+    batching = len(getattr(dnums, "operand_batching_dims", ()) or ())
+    n = 1
+    for d in scatter_dims[batching:]:
+        n *= updates.aval.shape[d]
+    return n
+
+
+def audit_entry_determinism(entry: EntryPoint, closed: Any | None = None
+                            ) -> tuple[list[Finding], dict]:
+    """D001 over one audited entry point's jaxpr."""
+    if closed is None:
+        fn, args = entry.build()
+        closed = jax.make_jaxpr(fn)(*args)
+    findings: list[Finding] = []
+    checked = 0
+    for eqn, _ in iter_eqns(closed.jaxpr):
+        if eqn.primitive.name not in _SCATTER_ADD:
+            continue
+        checked += 1
+        if not getattr(entry, "deterministic", True):
+            continue
+        dtype = eqn.outvars[0].aval.dtype
+        if not np.issubdtype(dtype, np.floating):
+            continue
+        if eqn.params.get("unique_indices"):
+            continue
+        n_indep = _scatter_independent_updates(eqn)
+        if n_indep <= 1:
+            continue
+        findings.append(Finding(
+            "determinism", "D001", entry.name,
+            f"{eqn.primitive.name} with {n_indep} independent float "
+            f"updates and unique_indices=False — addition order is "
+            "backend-scheduled, breaking bit reproducibility; use a "
+            "sorted/segmented reduction or declare the entry "
+            "deterministic=False",
+            detail=f"{eqn.primitive.name}:{n_indep}"))
+    return findings, {"scatters_checked": checked}
+
+
+# ---------------------------------------------------------------------------
+# D002 / D003 — host-side AST sweep over the seeded modules
+# ---------------------------------------------------------------------------
+_SET_METHODS = frozenset({
+    "union", "intersection", "difference", "symmetric_difference", "copy",
+})
+_GLOBAL_SAMPLERS = frozenset({
+    "seed", "rand", "randn", "randint", "random", "random_sample",
+    "choice", "shuffle", "permutation", "uniform", "normal", "bytes",
+})
+_RNG_CTORS = frozenset({"default_rng", "SeedSequence", "RandomState",
+                        "PRNGKey", "key"})
+
+
+def _dotted(node) -> str | None:
+    """'np.random.seed' for nested Attribute/Name chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _FnAudit(ast.NodeVisitor):
+    """One function (or module top level): track set-typed names, flag
+    order-dependent uses (D002) and unseeded entropy sources (D003)."""
+
+    def __init__(self, fn_name: str, emit) -> None:
+        self.fn = fn_name
+        self.emit = emit
+        self.setish: set[str] = set()
+
+    # -- set-ish expression classification --------------------------------
+    def _is_setish(self, node) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.setish
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in ("set", "frozenset"):
+                return True
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _SET_METHODS:
+                return self._is_setish(node.func.value)
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+            return self._is_setish(node.left) or self._is_setish(node.right)
+        return False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self._is_setish(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.setish.add(t.id)
+        else:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.setish.discard(t.id)
+        self.generic_visit(node)
+
+    # -- D002: order-dependent consumption --------------------------------
+    def visit_For(self, node: ast.For) -> None:
+        if self._is_setish(node.iter):
+            self.emit("D002", node.lineno, self.fn,
+                      "for-loop iterates an unordered set — iteration "
+                      "order feeds the loop body's decisions",
+                      f"{self.fn}:for")
+        self.generic_visit(node)
+
+    def visit_ListComp(self, node: ast.ListComp) -> None:
+        for gen in node.generators:
+            if self._is_setish(gen.iter):
+                self.emit("D002", node.lineno, self.fn,
+                          "list comprehension materializes an unordered "
+                          "set's iteration order", f"{self.fn}:listcomp")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        # max/min with a tie-breaking key over a set; list()/tuple() of a
+        # set; someset.pop().
+        if isinstance(node.func, ast.Name):
+            fid = node.func.id
+            if fid in ("max", "min") and node.args \
+                    and self._is_setish(node.args[0]) \
+                    and any(k.arg == "key" for k in node.keywords):
+                self.emit("D002", node.lineno, self.fn,
+                          f"{fid}() with a key over an unordered set — "
+                          "ties resolve by iteration order",
+                          f"{self.fn}:{fid}")
+            if fid in ("list", "tuple") and node.args \
+                    and self._is_setish(node.args[0]):
+                self.emit("D002", node.lineno, self.fn,
+                          f"{fid}() materializes an unordered set's "
+                          "iteration order", f"{self.fn}:{fid}")
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "pop" and not node.args \
+                and self._is_setish(node.func.value):
+            self.emit("D002", node.lineno, self.fn,
+                      "set.pop() removes an arbitrary element",
+                      f"{self.fn}:pop")
+        self._check_entropy(node)
+        self.generic_visit(node)
+
+    # -- D003: wall-clock / global-state entropy --------------------------
+    def _check_entropy(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func) or ""
+        parts = dotted.split(".")
+        if len(parts) >= 3 and parts[0] in ("np", "numpy") \
+                and parts[1] == "random" and parts[-1] in _GLOBAL_SAMPLERS:
+            self.emit("D003", node.lineno, self.fn,
+                      f"{dotted}() draws from the process-global NumPy "
+                      "RNG — thread/import order dependent; use a seeded "
+                      "Generator", f"{self.fn}:{parts[-1]}")
+        elif parts[0] == "random" and len(parts) == 2:
+            self.emit("D003", node.lineno, self.fn,
+                      f"stdlib {dotted}() uses the global Mersenne "
+                      "Twister — not tied to the experiment seed",
+                      f"{self.fn}:{parts[-1]}")
+        if parts[-1] in _RNG_CTORS:
+            if not node.args and not node.keywords \
+                    and parts[-1] in ("default_rng", "SeedSequence",
+                                      "RandomState"):
+                self.emit("D003", node.lineno, self.fn,
+                          f"{dotted}() without a seed draws OS entropy",
+                          f"{self.fn}:unseeded-{parts[-1]}")
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Call):
+                        d = _dotted(sub.func) or ""
+                        if d.startswith("time."):
+                            self.emit("D003", node.lineno, self.fn,
+                                      f"{d}() seeds an RNG with "
+                                      "wall-clock time",
+                                      f"{self.fn}:time-seed")
+
+
+def _audit_source(source: str, *, where_prefix: str, relpath: str
+                  ) -> tuple[list[Finding], int]:
+    tree = ast.parse(source)
+    findings: list[Finding] = []
+    n_fns = 0
+
+    def make_emit(fn_name: str):
+        def emit(rule, lineno, fn, msg, disc):
+            findings.append(Finding(
+                "determinism", rule, f"{where_prefix}::{fn}",
+                msg, detail=disc, line=lineno, path=relpath))
+        return emit
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            n_fns += 1
+            auditor = _FnAudit(node.name, make_emit(node.name))
+            for stmt in node.body:
+                auditor.visit(stmt)
+    return findings, n_fns
+
+
+def audit_seeded_modules(paths: dict[str, str] | None = None, *,
+                         root: str = ".", used: set | None = None
+                         ) -> tuple[list[Finding], dict]:
+    """The host sub-pass entry point: D002/D003 over the seeded modules.
+
+    Line waivers in the scanned files are applied here (their keys land in
+    ``used`` when given, so the CLI can account for stale markers).
+    """
+    paths = default_seeded_modules() if paths is None else paths
+    findings: list[Finding] = []
+    suppressed = 0
+    scanned = 0
+    fns = 0
+    for name, rel in sorted(paths.items()):
+        full = os.path.join(root, rel)
+        if not os.path.exists(full):
+            continue
+        with open(full) as fh:
+            source = fh.read()
+        scanned += 1
+        got, n_fns = _audit_source(source, where_prefix=rel, relpath=rel)
+        fns += n_fns
+        waivers = scan_waivers(full, relpath=rel)
+        kept = apply_waivers(got, waivers, used=used)
+        suppressed += len(got) - len(kept)
+        findings.extend(kept)
+    metrics = {"seeded_modules_scanned": scanned,
+               "functions_scanned": fns,
+               "suppressed": suppressed}
+    return findings, metrics

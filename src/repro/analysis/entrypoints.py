@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.jaxpr_audit import EntryPoint
+from repro.train.engine import MESH_AXIS
 
 __all__ = [
     "ENTRY_POINTS",
@@ -32,6 +33,8 @@ __all__ = [
     "engine_sequential",
     "engine_sync_mesh",
     "engine_async_ps",
+    "engine_capture",
+    "serve_decode_generate",
 ]
 
 _B, _C = 256, 39                      # regularizer block: paper's 39 phones
@@ -165,9 +168,10 @@ def _tiny_batches(s: int = 2, k: int = 1, p: int = 64, d: int = 16):
     }
 
 
-def _build_engine(strategy: str):
+def _build_engine(strategy: str, *, capture: bool = False):
     import dataclasses
 
+    from repro.models.dnn import dnn_hidden
     from repro.train.engine import Engine, TrainState, data_mesh
     from repro.train.train_step import dnn_ssl_grads
 
@@ -177,7 +181,9 @@ def _build_engine(strategy: str):
         return dnn_ssl_grads(p, batch, cfg=cfg, hyper=hyper)
 
     def step_fn(state, batch, lr):
-        rng, _ = jax.random.split(state.rng)
+        # fold_in, not split: the carried key advances per step without a
+        # split whose sibling nobody draws from (the R003 shape).
+        rng = jax.random.fold_in(state.rng, state.step)
         grads, metrics = grad_fn(state.params, batch)
         new_params, new_opt = opt.update(grads, state.opt_state,
                                          state.params, lr)
@@ -188,10 +194,13 @@ def _build_engine(strategy: str):
     kwargs = dict(strategy=strategy)
     if strategy == "sync_mesh":
         kwargs["mesh"] = data_mesh(1)
+    if capture:
+        kwargs["capture_fn"] = lambda p, b: dnn_hidden(
+            p, b["x"].reshape(-1, cfg.input_dim))
     if strategy == "async_ps":
-        kwargs = dict(strategy=strategy, grad_fn=grad_fn, opt=opt,
-                      n_workers=2)
-        engine = Engine(**kwargs)
+        kwargs.update(grad_fn=grad_fn, opt=opt, n_workers=2)
+        kwargs.pop("strategy")
+        engine = Engine(strategy=strategy, **kwargs)
     else:
         engine = Engine(step_fn, **kwargs)
 
@@ -202,9 +211,36 @@ def _build_engine(strategy: str):
     lr = jnp.float32(0.1)
 
     def chunk(carry, batches, lr):
-        return engine._chunk_fn(carry, batches, lr)
+        return engine._chunk_fn(carry, batches, lr, capture)
 
     return chunk, (carry, batches, lr)
+
+
+# ------------------------------------------------------------------- serve
+def _build_serve_decode():
+    """``serve/decode.generate`` under sampling (temperature > 0).
+
+    This is the surface the pre-PR-9 RNG bug lived on — prefill reusing
+    the unsplit sampling key — and it sat *outside* the audited set.  The
+    R-pass now proves the fixed contract on every run: prefill draws
+    nothing, the decode loop consumes exactly one fresh subkey per step.
+    Sampling must be on (temperature > 0): at temperature 0 the argmax
+    path never consumes the key and the whole stream discipline would be
+    vacuously untested.
+    """
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    from repro.serve.decode import generate
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.zeros((1, 3), jnp.int32)
+
+    def run(params, prompt):
+        return generate(params, cfg, prompt, steps=3, cache_len=16,
+                        temperature=0.7)
+
+    return run, (params, prompt)
 
 
 # ----------------------------------------------------------------- entries
@@ -240,12 +276,22 @@ engine_sequential = EntryPoint(
 engine_sync_mesh = EntryPoint(
     name="engine_sync_mesh",
     build=lambda: _build_engine("sync_mesh"),
-    donate=("_run_chunk", None))
+    donate=("_run_chunk", None),
+    mesh_axes=(MESH_AXIS,))
 
 engine_async_ps = EntryPoint(
     name="engine_async_ps",
     build=lambda: _build_engine("async_ps"),
     donate=("_run_chunk", None))
+
+engine_capture = EntryPoint(
+    name="engine_capture",
+    build=lambda: _build_engine("sequential", capture=True),
+    donate=("_run_chunk", None))
+
+serve_decode_generate = EntryPoint(
+    name="serve_decode_generate",
+    build=_build_serve_decode)
 
 #: Audit order (fast kernel traces first, engine traces last).
 ENTRY_POINTS = (
@@ -258,4 +304,6 @@ ENTRY_POINTS = (
     engine_sequential,
     engine_sync_mesh,
     engine_async_ps,
+    engine_capture,
+    serve_decode_generate,
 )

@@ -51,6 +51,36 @@ RULES = {
     "C002": "non-daemon thread started but never joined",
     "C003": "value published by a thread body read without a "
             "happens-before edge (join/wait/get/lock)",
+    # RNG key-lineage auditor
+    "R001": "PRNG key consumed by two or more random draws (key reuse)",
+    "R002": "PRNG key consumed inside a scan body and returned in the "
+            "carry unsplit",
+    "R003": "PRNG entropy discarded: split results dropped without any "
+            "draw, or random draws into dead values",
+    # Pallas write-race / aliasing auditor
+    "W001": "two grid steps write the same output block along a "
+            "non-accumulating grid axis",
+    "W002": "duplicate active tile entry in a block-sparse tile list "
+            "(double accumulation)",
+    "W003": "tile list breaks the contiguous accumulation-strip / "
+            "tail-padding convention",
+    "W004": "tile-list sentinel/coverage violation (output strip never "
+            "visited, out-of-range tile, or occupancy mismatch)",
+    # determinism auditor
+    "D001": "unordered floating-point scatter-add/segment-sum in a "
+            "bit-reproducible entry point",
+    "D002": "iteration order of an unordered set feeds a decision in a "
+            "seeded module",
+    "D003": "wall-clock or global-state RNG used in a seeded module",
+    # sharding / collective auditor
+    "S001": "collective references an axis name outside the entry's "
+            "declared mesh axes",
+    "S002": "gathering collective inside a scan/while body (implicit "
+            "per-step resharding)",
+    "S003": "donated carry leaf with mismatched input/output shardings",
+    # waiver hygiene
+    "A001": "stale waiver: an '# audit: safe(...)' marker that no longer "
+            "suppresses any finding",
 }
 
 
@@ -61,17 +91,19 @@ class Finding:
     ``where`` names the audited unit (an AUDIT entry-point name, a
     ``kernel[row]`` tuning-table coordinate, or ``file::Class.attr``);
     ``detail`` is a short stable discriminator so two findings of the same
-    rule at the same site fingerprint apart.  ``line`` is display-only and
-    never part of the fingerprint.
+    rule at the same site fingerprint apart.  ``line`` and ``path`` (the
+    repo-relative source file, when the finding has one) are display/waiver
+    metadata and never part of the fingerprint.
     """
 
-    pass_name: str           # "jaxpr" | "vmem" | "concurrency"
+    pass_name: str           # "jaxpr" | "vmem" | "concurrency" | "rng" | ...
     rule: str                # e.g. "J001"
     where: str
     message: str
     detail: str = ""
     severity: str = "error"  # "error" gates; "info" is report-only
     line: int | None = None
+    path: str | None = None
 
     @property
     def fingerprint(self) -> str:

@@ -43,6 +43,7 @@ __all__ = [
     "EntryPoint",
     "count_bxb_intermediates",
     "audit_entry",
+    "trace_entry",
     "iter_eqns",
 ]
 
@@ -87,6 +88,15 @@ class EntryPoint:
     donate: tuple[str, int | None] | None = None
     #: J006 threshold for captured constants.
     const_bytes: int = 1 << 20
+    #: Mesh axis names this entry is contracted to run under; collectives
+    #: binding any other axis flag S001.  None = single-host contract.
+    mesh_axes: tuple[str, ...] | None = None
+    #: Under the bit-reproducibility contract (D001 applies)?  Entries
+    #: that legitimately tolerate last-ulp drift opt out explicitly.
+    deterministic: bool = True
+    #: Collectives tolerated inside scan/while bodies (S002); reductions
+    #: keep their operand shape, gathers do not — hence the default.
+    allow_loop_collectives: tuple[str, ...] = ("psum",)
 
 
 def iter_eqns(jaxpr, *, in_loop: bool = False
@@ -157,10 +167,20 @@ def _aval_bytes(aval) -> int:
     return int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
 
 
-def audit_entry(entry: EntryPoint) -> tuple[list[Finding], dict]:
-    """Trace ``entry`` and return ``(findings, metrics)``."""
+def trace_entry(entry: EntryPoint):
+    """The entry's closed jaxpr (shared across the jaxpr-walking passes
+    so each entry is traced once per CLI run)."""
     fn, args = entry.build()
-    closed = jax.make_jaxpr(fn)(*args)
+    return jax.make_jaxpr(fn)(*args)
+
+
+def audit_entry(entry: EntryPoint, closed: Any | None = None
+                ) -> tuple[list[Finding], dict]:
+    """Trace ``entry`` (or reuse a shared trace) and return
+    ``(findings, metrics)``."""
+    fn, args = entry.build()
+    if closed is None:
+        closed = jax.make_jaxpr(fn)(*args)
     findings: list[Finding] = []
     metrics: dict = {}
 

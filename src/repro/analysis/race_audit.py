@@ -1,0 +1,275 @@
+"""Pallas write-race / aliasing auditor (W-pass).
+
+Pallas serializes grid steps on TPU, but the *program* contract the
+kernels in ``repro.kernels`` are written against is stricter: a grid step
+may revisit an output block only to **accumulate** into it, and the
+revisit must happen along grid axes the kernel was written to accumulate
+over (the innermost reduction axes, where the kernel zero-initializes on
+first visit and finalizes on last visit).  Two grid steps mapping to the
+same output block along any *other* axis silently overwrite each other's
+partial result — the class of bug that reads as "gradients off by one
+block" and never crashes.
+
+This pass proves the absence of that bug from the same static launch
+models the V-pass uses (:mod:`repro.analysis.vmem_audit`), extended with
+a declared :attr:`Block.accum_axes` contract:
+
+  * ``W001`` — for every output block, every pair of grid steps mapping
+    to the same block coordinates must differ **only** on the block's
+    declared accumulation axes.  Grids are enumerated exhaustively up to
+    ~4k steps and corner/edge-sampled per axis beyond that (the index
+    maps in use are affine, so a violation shows up at a sampled point
+    if it shows up anywhere).
+
+For the block-sparse kernels the grid is *data-dependent* — a compacted
+tile-id list drives the index maps via scalar prefetch — so the proof
+obligation moves to the tile lists themselves.  ``check_tile_list``
+verifies the full ``BlockLayout`` contract (``repro.core.metabatch``):
+
+  * ``W002`` — no duplicate active ``(row, col)`` entry: a duplicate
+    makes the kernel accumulate the same tile twice (double-counted
+    Eq.-3/4 terms, bit-diverging from the dense path).
+  * ``W003`` — entries sorted by major line with each line one
+    contiguous run; sentinels ``(major, 0, valid=0)`` only on empty
+    lines; length padding only at the tail, repeating the last entry
+    with ``valid=0``.  Together these guarantee each output accumulation
+    strip is visited as one contiguous grid range, so the
+    first-visit-zero / last-visit-flush predicates fire exactly once.
+  * ``W004`` — coverage: every major line in ``[0, nt)`` appears (Pallas
+    only flushes an output block the grid visits — a missing sentinel
+    leaves stale memory in that strip), all coordinates in range, and
+    the valid entries reproduce the occupancy mask exactly.
+
+``audit_races`` is the pass entry point: W001 over every tuning-table
+launch model plus the tile-list contract over representative layouts
+(dense, block-diagonal, seeded-random, empty).
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.analysis.vmem_audit import Launch, kernel_launches, _DEFAULT_SHAPES
+from repro.core.metabatch import BlockLayout, layout_from_occupancy
+
+__all__ = [
+    "check_launch_races",
+    "check_tile_list",
+    "check_layout",
+    "audit_races",
+]
+
+#: Full-enumeration cap; larger grids are corner/edge-sampled per axis.
+_FULL_ENUM_CAP = 4096
+
+
+def _grid_points(grid: tuple[int, ...]):
+    total = 1
+    for g in grid:
+        total *= g
+    if total <= _FULL_ENUM_CAP:
+        return itertools.product(*[range(g) for g in grid]), True
+    axes = [sorted({0, 1, g // 2, g - 2, g - 1} & set(range(g)))
+            for g in grid]
+    return itertools.product(*axes), False
+
+
+def check_launch_races(launch: Launch, *, where: str) -> list[Finding]:
+    """W001 for one launch: no output block written by two grid steps
+    that differ outside the block's declared accumulation axes."""
+    findings: list[Finding] = []
+    for b in launch.blocks:
+        if b.kind != "out" or b.index_map is None:
+            continue
+        accum = set(b.accum_axes)
+        non_accum = [ax for ax in range(len(launch.grid))
+                     if ax not in accum]
+        points, _ = _grid_points(launch.grid)
+        writers: dict[tuple, tuple] = {}   # block coords -> projection seen
+        flagged = False
+        for pt in points:
+            coords = tuple(b.index_map(*pt))
+            proj = tuple(pt[ax] for ax in non_accum)
+            prev = writers.get(coords)
+            if prev is None:
+                writers[coords] = proj
+            elif prev != proj and not flagged:
+                findings.append(Finding(
+                    "race", "W001", where,
+                    f"{launch.kernel}/{launch.variant}: output block "
+                    f"{b.name!r} at coords {coords} is written by grid "
+                    f"steps {prev} and {proj} (projected onto "
+                    f"non-accumulating axes {non_accum}) — overwrite "
+                    "race; declare the axis in accum_axes or fix the "
+                    "index map",
+                    detail=f"{launch.variant}:{b.name}"))
+                flagged = True
+    return findings
+
+
+def check_tile_list(rows, cols, valid, nt: int, *, major: str = "row",
+                    occ=None, where: str = "", name: str = ""
+                    ) -> list[Finding]:
+    """W002/W003/W004 over one padded tile-id list.
+
+    ``major`` is "row" for the CSR-style list (forward / dL/dlogp sweeps)
+    and "col" for the CSC-style list (the Wᵀ·P sweep); the sentinel and
+    contiguity conventions apply to the major coordinate.
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    valid = np.asarray(valid, dtype=np.int64)
+    findings: list[Finding] = []
+
+    def flag(rule: str, msg: str, disc: str) -> None:
+        findings.append(Finding("race", rule, where,
+                                f"{name}: {msg}", detail=f"{name}:{disc}"))
+
+    T = len(rows)
+    if T == 0:
+        flag("W004", "empty tile list: no output strip is ever visited",
+             "empty")
+        return findings
+    maj = rows if major == "row" else cols
+    mino = cols if major == "row" else rows
+
+    if ((rows < 0) | (rows >= nt) | (cols < 0) | (cols >= nt)).any():
+        bad = int(np.argmax((rows < 0) | (rows >= nt)
+                            | (cols < 0) | (cols >= nt)))
+        flag("W004", f"entry {bad} = ({rows[bad]}, {cols[bad]}) is outside "
+             f"the {nt}x{nt} tile grid", "out-of-range")
+        return findings
+
+    # Tail padding: trailing valid=0 repeats of the preceding entry.
+    core = T
+    while (core > 1 and valid[core - 1] == 0
+           and rows[core - 1] == rows[core - 2]
+           and cols[core - 1] == cols[core - 2]):
+        core -= 1
+
+    # W002 — duplicate active tiles double-accumulate.
+    pairs = list(zip(rows[:core][valid[:core] == 1],
+                     cols[:core][valid[:core] == 1]))
+    if len(set(pairs)) < len(pairs):
+        seen: set = set()
+        dup = next(p for p in pairs if p in seen or seen.add(p))
+        flag("W002", f"active tile ({dup[0]}, {dup[1]}) appears twice — "
+             "its Eq.-3/4 contribution would be accumulated twice",
+             f"dup@{dup[0]},{dup[1]}")
+
+    # W003 — ordering / contiguity / sentinel discipline.
+    if (np.diff(maj[:core]) < 0).any():
+        flag("W003", "entries are not sorted by major line — an "
+             "accumulation strip would be entered twice, re-firing its "
+             "first-visit zero-init", "unsorted")
+    else:
+        for line in np.unique(maj[:core]):
+            sel = maj[:core] == line
+            minors = mino[:core][sel & (valid[:core] == 1)]
+            if (np.diff(minors) <= 0).any():
+                flag("W003", f"major line {int(line)} entries are not "
+                     "strictly increasing in the minor coordinate",
+                     f"minor@{int(line)}")
+                break
+    line_has_valid = np.zeros(nt, dtype=bool)
+    line_has_valid[maj[:core][valid[:core] == 1]] = True
+    for i in range(core):
+        if valid[i] == 0:
+            if mino[i] != 0 or line_has_valid[maj[i]]:
+                flag("W003", f"entry {i} = ({rows[i]}, {cols[i]}, valid=0) "
+                     "is neither a (major, 0) sentinel on an empty line "
+                     "nor tail padding", f"sentinel@{i}")
+                break
+
+    # W004 — coverage: every output strip visited, occupancy reproduced.
+    visited = np.zeros(nt, dtype=bool)
+    visited[maj[:core]] = True
+    if not visited.all():
+        missing = int(np.argmin(visited))
+        flag("W004", f"major line {missing} never visited — its output "
+             "block is never flushed (missing sentinel)",
+             f"unvisited@{missing}")
+    if occ is not None:
+        occ = np.asarray(occ).astype(bool)
+        want = (set(zip(*np.nonzero(occ))) if major == "row"
+                else {(r, c) for c, r in zip(*np.nonzero(occ.T))})
+        got = {(int(r), int(c)) for r, c in pairs}
+        want = {(int(r), int(c)) for r, c in want}
+        if got != want or len(pairs) != int(occ.sum()):
+            flag("W004", f"valid entries ({len(pairs)}) do not reproduce "
+                 f"the occupancy mask ({int(occ.sum())} occupied tiles)",
+             "occ-mismatch")
+    return findings
+
+
+def check_layout(layout: BlockLayout, *, where: str,
+                 name: str = "layout") -> list[Finding]:
+    """Both padded lists of one :class:`BlockLayout` against the contract."""
+    findings = check_tile_list(
+        layout.rows, layout.cols, layout.valid, layout.nt,
+        major="row", occ=layout.occ, where=where, name=f"{name}.csr")
+    findings += check_tile_list(
+        layout.crows, layout.ccols, layout.cvalid, layout.nt,
+        major="col", occ=layout.occ, where=where, name=f"{name}.csc")
+    return findings
+
+
+def _representative_layouts() -> list[tuple[str, BlockLayout]]:
+    nt = 6
+    dense = np.ones((nt, nt), dtype=bool)
+    block_diag = np.kron(np.eye(nt // 2, dtype=bool),
+                         np.ones((2, 2), dtype=bool))
+    rng = np.random.default_rng(0)
+    random = rng.random((nt, nt)) < 0.35
+    empty = np.zeros((nt, nt), dtype=bool)
+    return [
+        ("dense", layout_from_occupancy(dense, 128)),
+        ("block_diag", layout_from_occupancy(block_diag, 128)),
+        ("seeded_random", layout_from_occupancy(random, 128,
+                                                list_len=48)),
+        ("empty", layout_from_occupancy(empty, 128)),
+    ]
+
+
+def audit_races(table=None) -> tuple[list[Finding], dict]:
+    """The W-pass entry point: W001 over every tuning-table launch model,
+    then the tile-list contract over representative BlockLayouts."""
+    if table is None:
+        from repro.kernels.tuning import DEFAULT_TILE_TABLE
+        table = DEFAULT_TILE_TABLE
+    findings: list[Finding] = []
+    launches_checked = 0
+    blocks_proven = 0
+    for idx, (kernel, backend, max_rows, tiles) in enumerate(table):
+        shape = {}
+        if max_rows is not None:
+            shape["rows"] = max_rows
+            if kernel in ("rbf", "topk"):
+                shape["cols"] = max_rows
+        try:
+            launches = kernel_launches(kernel, tiles, **shape)
+        except KeyError:
+            continue               # V005 (no model) is the vmem pass's call
+        for launch in launches:
+            where = f"tuning[{idx}]:{kernel}/{launch.variant}"
+            got = check_launch_races(launch, where=where)
+            findings.extend(got)
+            launches_checked += 1
+            n_out = sum(1 for b in launch.blocks if b.kind == "out")
+            blocks_proven += n_out - len({f.detail for f in got})
+    tiles_proven = 0
+    layouts = _representative_layouts()
+    for lname, layout in layouts:
+        got = check_layout(layout, where=f"layout:{lname}", name=lname)
+        findings.extend(got)
+        if not got:
+            tiles_proven += 2 * layout.n_active
+    metrics = {
+        "launches_checked": launches_checked,
+        "output_blocks_proven": blocks_proven,
+        "layouts_checked": len(layouts),
+        "tiles_proven_race_free": tiles_proven,
+    }
+    return findings, metrics

@@ -60,6 +60,11 @@ class Block:
     index_map: Callable[..., tuple[int, ...]] | None = None
     #: padded logical array dims the index map windows over.
     array_shape: tuple[int, ...] | None = None
+    #: grid axes along which the kernel REVISITS this (out) block and
+    #: accumulates in place — the declared contract the W-pass
+    #: (``race_audit``) verifies: any two grid steps mapping to the same
+    #: block coordinates must differ only on these axes.
+    accum_axes: tuple[int, ...] = ()
 
     @property
     def nbytes(self) -> int:
@@ -128,7 +133,7 @@ def _graph_reg_launches(tiles: TileSpec, *, rows: int, classes: int
         Block("scalars", (1, 4), "in", index_map=lambda i, j, c: (0, 0),
               array_shape=(1, 4)),
         Block("out", (1, 1), "out", index_map=lambda i, j, c: (0, 0),
-              array_shape=(1, 1)),
+              array_shape=(1, 1), accum_axes=(0, 1, 2)),
         Block("acc", (bi, bj), "scratch"),
         Block("deg", (bi, 1), "scratch"),
         Block("ent", (bi, 1), "scratch"),
@@ -150,7 +155,7 @@ def _graph_reg_launches(tiles: TileSpec, *, rows: int, classes: int
         Block("scalars", (1, 4), "in", index_map=lambda i, c, j: (0, 0),
               array_shape=(1, 4)),
         Block("dlogp", (bi, bc), "out", index_map=lambda i, c, j: (i, c),
-              array_shape=(Bi, Cc)),
+              array_shape=(Bi, Cc), accum_axes=(2,)),
         Block("a", (bi, bc), "scratch"),
         Block("b", (bi, bc), "scratch"),
         Block("deg", (bi, 1), "scratch"),
@@ -165,7 +170,7 @@ def _graph_reg_launches(tiles: TileSpec, *, rows: int, classes: int
         Block("scalars", (1, 4), "in", index_map=lambda i, j, c: (0, 0),
               array_shape=(1, 4)),
         Block("dW", (bi, bj), "out", index_map=lambda i, j, c: (i, j),
-              array_shape=(Bi, Bj)),
+              array_shape=(Bi, Bj), accum_axes=(2,)),
         Block("acc", (bi, bj), "scratch"),
         Block("ent", (bi, 1), "scratch"),
     ))
@@ -209,7 +214,7 @@ def _blocksparse_launches(tiles: TileSpec, *, rows: int, classes: int
         Block("scalars", (1, 4), "in", index_map=lambda t, c: (0, 0),
               array_shape=(1, 4)),
         Block("out", (1, 1), "out", index_map=lambda t, c: (0, 0),
-              array_shape=(1, 1)),
+              array_shape=(1, 1), accum_axes=(0, 1)),
         Block("acc", (bt, bt), "scratch"),
         Block("deg", (bt, 1), "scratch"),
         Block("ent", (bt, 1), "scratch"),
@@ -220,7 +225,8 @@ def _blocksparse_launches(tiles: TileSpec, *, rows: int, classes: int
         Block("p_j", (bt, bc), "in", index_map=lambda c, t: (tid(t), c),
               array_shape=(P, Cc)),
         Block("bterm", (bt, bc), "out",
-              index_map=lambda c, t: (tid(t), c), array_shape=(P, Cc)),
+              index_map=lambda c, t: (tid(t), c), array_shape=(P, Cc),
+              accum_axes=(1,)),
         Block("b", (bt, bc), "scratch"),
     ))
     bwd_dlogp = Launch("graph_reg_blocksparse", "bwd_dlogp", (n_c, T), (
@@ -237,7 +243,8 @@ def _blocksparse_launches(tiles: TileSpec, *, rows: int, classes: int
         Block("scalars", (1, 4), "in", index_map=lambda c, t: (0, 0),
               array_shape=(1, 4)),
         Block("dlogp", (bt, bc), "out",
-              index_map=lambda c, t: (tid(t), c), array_shape=(P, Cc)),
+              index_map=lambda c, t: (tid(t), c), array_shape=(P, Cc),
+              accum_axes=(1,)),
         Block("a", (bt, bc), "scratch"),
         Block("deg", (bt, 1), "scratch"),
     ))
@@ -251,7 +258,7 @@ def _blocksparse_launches(tiles: TileSpec, *, rows: int, classes: int
         Block("scalars", (1, 4), "in", index_map=lambda i, j, c: (0, 0),
               array_shape=(1, 4)),
         Block("dW", (bt, bt), "out", index_map=lambda i, j, c: (i, j),
-              array_shape=(P, P)),
+              array_shape=(P, P), accum_axes=(2,)),
         Block("acc", (bt, bt), "scratch"),
         Block("ent", (bt, 1), "scratch"),
     ))
@@ -276,7 +283,7 @@ def _rbf_launches(tiles: TileSpec, *, rows: int, cols: int, feat: int
         Block("sigma", (1, 1), "in", index_map=lambda i, j, d: (0, 0),
               array_shape=(1, 1)),
         Block("out", (bi, bj), "out", index_map=lambda i, j, d: (i, j),
-              array_shape=(Ni, Mj)),
+              array_shape=(Ni, Mj), accum_axes=(2,)),
         Block("acc", (bi, bj), "scratch"),
     ))]
 
@@ -297,9 +304,9 @@ def _topk_launches(tiles: TileSpec, *, rows: int, cols: int, feat: int,
         Block("ny", (bj, 1), "in", index_map=lambda i, j, d: (j, 0),
               array_shape=(Mj, 1)),
         Block("out_d2", (bi, k), "out", index_map=lambda i, j, d: (i, 0),
-              array_shape=(Ni, k)),
+              array_shape=(Ni, k), accum_axes=(1, 2)),
         Block("out_idx", (bi, k), "out", index_map=lambda i, j, d: (i, 0),
-              array_shape=(Ni, k)),
+              array_shape=(Ni, k), accum_axes=(1, 2)),
         Block("acc", (bi, bj), "scratch"),
         # The running top-k state and the (bi, k+bj) merge candidate set
         # the kernel concatenates per chunk live in VMEM too.

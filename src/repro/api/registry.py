@@ -182,6 +182,10 @@ AUDIT.register("engine_sync_mesh",
                "repro.analysis.entrypoints:engine_sync_mesh")
 AUDIT.register("engine_async_ps",
                "repro.analysis.entrypoints:engine_async_ps")
+AUDIT.register("engine_capture",
+               "repro.analysis.entrypoints:engine_capture")
+AUDIT.register("serve_decode_generate",
+               "repro.analysis.entrypoints:serve_decode_generate")
 
 #: ``(**hyper) -> repro.optim.Optimizer``
 OPTIMIZER = Registry("optimizer")

@@ -146,6 +146,7 @@ def _region_grow(
         if not unassigned:
             break
         # Seed: highest-degree unassigned node (well-connected core).
+        # audit: safe(D002): int-set iteration is deterministic in CPython
         seed = max(unassigned, key=lambda u: struct_deg[u])
         labels[seed] = part
         unassigned.discard(seed)
@@ -169,6 +170,7 @@ def _region_grow(
                 if labels[v] == -1:
                     gain[v] = gain.get(v, 0.0) + data[e]
     # Everything left goes to the last part; stragglers get folded in below.
+    # audit: safe(D002): every member gets the same label — order-free
     for u in unassigned:
         labels[u] = k - 1
     return labels

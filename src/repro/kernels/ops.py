@@ -187,10 +187,34 @@ def _bsp_vjp_bwd(gamma, kappa, ent_weight, tiles, res, g):
 _bsp_primal.defvjp(_bsp_vjp_fwd, _bsp_vjp_bwd)
 
 
+def _validate_layout(layout) -> None:
+    """Run the W-pass tile-list checks on a concrete layout; raise on any
+    violation.  Traced layouts (inside jit) are skipped — they have no
+    values to check."""
+    import numpy as np
+
+    from repro.analysis.race_audit import check_layout, check_tile_list
+
+    arrays = layout.arrays() if hasattr(layout, "arrays") else tuple(layout)
+    if any(isinstance(a, jax.core.Tracer) for a in arrays):
+        return
+    if hasattr(layout, "arrays"):
+        findings = check_layout(layout, where="blocksparse.layout")
+    else:
+        rows, cols, valid, _, _, _, occ = (np.asarray(a) for a in arrays)
+        findings = check_tile_list(rows, cols, valid, occ.shape[0],
+                                   occ=occ, where="blocksparse.layout",
+                                   name="tile_list")
+    if findings:
+        lines = "; ".join(f"[{f.rule}] {f.message}" for f in findings)
+        raise ValueError(f"blocksparse layout failed W-pass audit: {lines}")
+
+
 def graph_regularizer_blocksparse(
         logp: jax.Array, W: jax.Array,
         gamma: float | None = None, kappa: float | None = None, *,
-        layout=None, tiles: TileSpec | None = None) -> jax.Array:
+        layout=None, tiles: TileSpec | None = None,
+        validate: bool = False) -> jax.Array:
     """The ``"blocksparse"`` registry entry: tile-skipping fused Eq.-3/4
     regularizer driven by a ``repro.core.metabatch.BlockLayout``.
 
@@ -199,9 +223,19 @@ def graph_regularizer_blocksparse(
     arrays both work; they ride through the custom_vjp as nondifferentiated
     operands.  Without a layout the call degrades to the dense fused path,
     so the entry is safe to select unconditionally.
+
+    ``validate=True`` runs the W-pass tile-list checker
+    (:func:`repro.analysis.race_audit.check_layout`) on the layout before
+    launching and raises ``ValueError`` on any W-rule violation —
+    duplicate tiles double-count their contribution, out-of-order strips
+    break the CSR prefetch walk.  Only concrete (host) layouts can be
+    checked; traced layouts under jit are skipped silently, so validate
+    at layout-construction time, outside the compiled path.
     """
     if layout is None:
         return graph_regularizer_fused(logp, W, gamma, kappa, tiles=tiles)
+    if validate:
+        _validate_layout(layout)
     if hasattr(layout, "arrays"):   # a BlockLayout instance
         layout = layout.arrays()
     rows, cols, valid, crows, ccols, cvalid, occ = layout

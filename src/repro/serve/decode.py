@@ -48,6 +48,12 @@ def generate(params: dict, cfg: ModelConfig, prompt: Array, *, steps: int,
     no sampling (and no RNG) happens there.  The decode loop then splits a
     fresh subkey per step, which makes the sampled continuation's key
     stream a function of ``seed`` alone, independent of prompt length.
+
+    This key discipline is an audited contract: the ``serve_decode_generate``
+    entry in the AUDIT registry traces this function and the R-pass
+    (``repro.analysis.rng_audit``) proves no key is consumed twice and no
+    split's entropy is drawn and discarded — the exact bug class of the old
+    prefill loop, which reused the unsplit key across prefill steps.
     """
     B, Tp = prompt.shape
     cache = tf.init_cache(cfg, B, cache_len)

@@ -58,6 +58,7 @@ __all__ = [
     "TrainState",
     "EngineResult",
     "Engine",
+    "MESH_AXIS",
     "data_mesh",
     "lift_step",
     "prefetch_to_device",
@@ -119,14 +120,22 @@ def lift_step(update_fn: Callable) -> Callable:
     return step_fn
 
 
+#: The one mesh axis the training engine shards over.  Every collective
+#: a strategy introduces must bind this name — it is the axis the S-pass
+#: (``repro.analysis.sharding_audit``) checks the engine entry points'
+#: declared ``EntryPoint.mesh_axes`` against.
+MESH_AXIS = "data"
+
+
 def data_mesh(n_workers: int):
-    """``("data",)`` mesh whose size is the largest divisor of ``n_workers``
-    realizable on the available devices (1 on a single-device host — the
-    sharded arrays then simply live on that device)."""
+    """``(MESH_AXIS,)`` mesh whose size is the largest divisor of
+    ``n_workers`` realizable on the available devices (1 on a
+    single-device host — the sharded arrays then simply live on that
+    device)."""
     n_dev = len(jax.devices())
     size = max(d for d in range(1, min(n_workers, n_dev) + 1)
                if n_workers % d == 0)
-    return jax.make_mesh((size,), ("data",))
+    return jax.make_mesh((size,), (MESH_AXIS,))
 
 
 # ------------------------------------------------------------------ prefetch
@@ -255,7 +264,7 @@ class SyncMeshStrategy(SequentialStrategy):
         P = jax.sharding.PartitionSpec
         self._replicated = jax.sharding.NamedSharding(engine.mesh, P())
         self._sharded = jax.sharding.NamedSharding(engine.mesh,
-                                                   P(None, "data"))
+                                                   P(None, MESH_AXIS))
 
     def place_state(self, state: TrainState) -> TrainState:
         return jax.device_put(state, self._replicated)
